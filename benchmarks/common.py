@@ -1,0 +1,27 @@
+"""Shared benchmark helpers: timing + CSV emission.
+
+Every table prints ``name,us_per_call,derived`` rows (assignment contract).
+``derived`` carries the table's own metric (quality ratio, fill rate, ...).
+"""
+from __future__ import annotations
+
+import time
+
+SETTINGS = ["0.005", "0.01", "0.1", "N0.05", "U0.1"]
+SETTING_KEYS = {"0.005": "w005", "0.01": "w01", "0.1": "w1",
+                "N0.05": "n005", "U0.1": "u01"}
+
+
+def timed(fn, *args, warmup: int = 0, iters: int = 1, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt * 1e6  # microseconds
+
+
+def emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}")

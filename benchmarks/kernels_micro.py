@@ -1,0 +1,41 @@
+"""Kernel microbenchmarks: per-sweep timings of the five DiFuseR kernels
+(ref implementations under XLA:CPU — on TPU the same harness times the
+Pallas kernels with interpret=False).
+
+derived: throughput in (edge, register) pairs per second for the sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.core.sampling import make_x_vector, weight_to_threshold
+from repro.graphs import rmat_graph
+from repro.kernels import ops
+
+
+def main(scale: int = 12, registers: int = 512) -> None:
+    g = rmat_graph(scale, edge_factor=8, seed=71, setting="w1").sorted_by_dst()
+    x = jnp.asarray(make_x_vector(registers, seed=3))
+    src, dst = jnp.asarray(g.src), jnp.asarray(g.dst)
+    thr = jnp.asarray(weight_to_threshold(g.weight))
+    m = ops.sketch_fill(jnp.zeros((g.n_pad, registers), jnp.int8))
+    pairs = g.m * registers
+
+    block = jax.block_until_ready
+    _, us = timed(lambda: block(ops.sketch_fill(m)), warmup=2, iters=5)
+    emit("kernel.sketch_fill", us, f"{g.n_pad * registers / (us/1e6):.3g} regs/s")
+    _, us = timed(lambda: block(ops.fused_sample(src, dst, thr, x)), warmup=2, iters=5)
+    emit("kernel.fused_sample", us, f"{pairs / (us/1e6):.3g} pair/s")
+    _, us = timed(lambda: block(ops.propagate_sweep(m, src, dst, thr, x)), warmup=2, iters=5)
+    emit("kernel.propagate_sweep", us, f"{pairs / (us/1e6):.3g} pair/s")
+    mv = m.at[0].set(-1)
+    _, us = timed(lambda: block(ops.cascade_sweep(mv, src, dst, thr, x)), warmup=2, iters=5)
+    emit("kernel.cascade_sweep", us, f"{pairs / (us/1e6):.3g} pair/s")
+    _, us = timed(lambda: block(ops.cardinality_stats(m)), warmup=2, iters=5)
+    emit("kernel.cardinality_stats", us, f"{g.n_pad * registers / (us/1e6):.3g} regs/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Aggregate the dry-run artifacts into the §Roofline table
+(EXPERIMENTS.md). Reads artifacts/dryrun/*.json written by launch/dryrun.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def load_records(art_dir: str = None):
+    if art_dir is None:
+        art_dir = ("artifacts/dryrun_v2"
+                   if glob.glob("artifacts/dryrun_v2/*.json") else "artifacts/dryrun")
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs, mesh: str = "pod16x16") -> str:
+    rows = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound | useful | roofline-frac | temp GB/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if not r.get("ok") or r.get("mesh") != mesh or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['t_compute_s']:.3g} | {rf['t_memory_s']:.3g} "
+            f"| {rf['t_collective_s']:.3g} | {rf['bottleneck']} | {rf['useful_flops_ratio']:.2f} "
+            f"| {rf['roofline_fraction']:.4f} | {r['memory']['temp_bytes']/1e9:.1f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    recs = load_records()
+    ok = [r for r in recs if r.get("ok")]
+    fail = [r for r in recs if not r.get("ok")]
+    emit("roofline.cells_ok", 0.0, len(ok))
+    emit("roofline.cells_failed", 0.0, len(fail))
+    for r in ok:
+        if "roofline" not in r:
+            emit(f"dryrun.{r['arch']}.{r['shape']}.{r['mesh']}", 0.0, "compiled")
+            continue
+        rf = r["roofline"]
+        emit(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}", 0.0,
+             f"bound={rf['bottleneck']} t={rf['t_compute_s']:.3g}/{rf['t_memory_s']:.3g}/"
+             f"{rf['t_collective_s']:.3g}s useful={rf['useful_flops_ratio']:.2f}")
+    for r in fail:
+        emit(f"roofline.FAILED.{r['arch']}.{r['shape']}.{r['mesh']}", 0.0,
+             r.get("error", "?")[:80])
+
+
+if __name__ == "__main__":
+    main()

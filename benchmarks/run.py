@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table + kernel micro + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only tableX] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows (assignment contract).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true", help="smaller graphs (CI)")
+    args = ap.parse_args()
+
+    from benchmarks import (kernels_micro, roofline_report, table8_scaling,
+                            table9_comm, table34_quality_speed, table567_fasst)
+
+    jobs = {
+        "table34": lambda: table34_quality_speed.main(scale=9 if args.fast else 10),
+        "table567": lambda: table567_fasst.main(scale=10 if args.fast else 11),
+        "table8": lambda: table8_scaling.main(scale=10 if args.fast else 11),
+        "table9": lambda: table9_comm.main(scale=10 if args.fast else 11),
+        "kernels": lambda: kernels_micro.main(scale=10 if args.fast else 12),
+        "roofline": roofline_report.main,
+    }
+    print("name,us_per_call,derived")
+    for name, job in jobs.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            job()
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"{name}.ERROR,0,{type(e).__name__}: {e}", file=sys.stdout)
+        print(f"{name}.total_s,{(time.time()-t0)*1e6:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Tables 5/6/7: FASST vs naive sample-space tasking.
+
+  Table 5 — edge-duplication histogram across device-local graphs,
+  Table 6 — SIMD lane fill rate (warp=32 and VPU tile=128 variants),
+  Table 7 — largest device-local edge fraction for 2/4/8 shards.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SETTING_KEYS, SETTINGS, emit, timed
+from repro.core.fasst import (build_partition, duplication_histogram,
+                              lane_fill_rate, max_shard_fraction)
+from repro.core.sampling import make_x_vector
+from repro.graphs import rmat_graph
+
+
+def main(scale: int = 11, registers: int = 1024) -> None:
+    x = make_x_vector(registers, seed=7)
+    for setting in SETTINGS:
+        g = rmat_graph(scale, edge_factor=8, seed=41, setting=SETTING_KEYS[setting])
+
+        # Table 5 (8 devices, like the paper)
+        for method in ("naive", "fasst"):
+            part, us = timed(build_partition, g, x, 8, method=method)
+            hist = duplication_histogram(g, part)
+            tops = " ".join(f"{i}:{hist[i]*100:.0f}%" for i in range(min(9, len(hist)))
+                            if hist[i] >= 0.005)
+            emit(f"table5.{method}.{setting}", us, tops)
+
+        # Table 6 — fill rates
+        for width, tag in ((32, "warp32"), (128, "lane128")):
+            naive = lane_fill_rate(g, x, lane_width=width)
+            fasst = lane_fill_rate(g, np.sort(x), lane_width=width)
+            emit(f"table6.{tag}.{setting}", 0.0,
+                 f"naive={naive*100:.1f}% fasst={fasst*100:.1f}%")
+
+        # Table 7 — max shard fraction for 2/4/8 devices
+        for mu in (2, 4, 8):
+            row = []
+            for method in ("naive", "fasst"):
+                part = build_partition(g, x, mu, method=method)
+                row.append(f"{method}={max_shard_fraction(g, part)*100:.0f}%")
+            emit(f"table7.mu{mu}.{setting}", 0.0, " ".join(row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Table 9: communication overhead as a fraction of total step time.
+
+Derived from the roofline model over the *measured structure*: per seed
+round the distributed runtime moves
+
+  ring:       sweeps x (mu_v - 1) x (n/mu_v) x J_loc bytes   (ppermute)
+  selection:  psum of (2, n/mu_v) float32 over the sim axis + mu_v scalars
+
+and computes  edges_local x J_loc x ~3 ops. Times use the assignment's
+v5e constants (197 TFLOP/s, 819 GB/s, 50 GB/s link). The paper reports
+1.4 - 5.4%; our 2-D partition should sit in the same band because FASST
+bounds the busiest shard.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SETTING_KEYS, SETTINGS, emit
+from repro.core.fasst import build_partition
+from repro.core.sampling import make_x_vector
+from repro.graphs import rmat_graph
+from repro.utils.roofline import HBM_BW, ICI_BW
+
+SWEEPS_PER_ROUND = 6  # measured propagate+cascade fixpoint sweeps (rmat graphs)
+
+
+def main(scale: int = 11, registers: int = 1024, mu_v: int = 4, mu_s: int = 2) -> None:
+    x = make_x_vector(registers, seed=9)
+    for setting in SETTINGS:
+        g = rmat_graph(scale, edge_factor=8, seed=61, setting=SETTING_KEYS[setting])
+        # --- paper-faithful sim-only partition (the paper's Table 9) ---
+        # per seed round: selection psum of (2, n) f32 over mu devices; the
+        # sweeps are comm-free (device-local graphs).
+        part_sim = build_partition(g, x, mu_v * mu_s, method="fasst")
+        j_sim = registers // (mu_v * mu_s)
+        sweep_bytes = (g.n_pad * j_sim                      # register matrix
+                       + float(part_sim.edge_counts.max()) * j_sim * 3.0)
+        t_comp = SWEEPS_PER_ROUND * sweep_bytes / HBM_BW
+        sel = 2 * g.n_pad * 4 * 2 * (mu_v * mu_s - 1) / (mu_v * mu_s) / ICI_BW
+        frac = sel / (t_comp + sel)
+        emit(f"table9.sim_only.{setting}", 0.0,
+             f"comm={frac*100:.1f}% sel_B={sel*ICI_BW:.3g} (paper mode: 1.4-5.4%)")
+
+        # --- beyond-paper 2-D partition: ring traffic per sweep ---
+        part = build_partition(g, x, mu_s, method="fasst")
+        j_loc = registers // mu_s
+        n_loc = g.n_pad / mu_v
+        edges_loc = float(part.edge_counts.max()) / mu_v
+        sweep_bytes2 = n_loc * j_loc + edges_loc * j_loc * 3.0
+        t_comp2 = SWEEPS_PER_ROUND * sweep_bytes2 / HBM_BW
+        ring = SWEEPS_PER_ROUND * (mu_v - 1) * n_loc * j_loc / ICI_BW
+        sel2 = 2 * n_loc * 4 * 2 * (mu_s - 1) / mu_s / ICI_BW
+        frac2 = (ring + sel2) / (t_comp2 + ring + sel2)
+        emit(f"table9.ring2d.{setting}", 0.0,
+             f"comm={frac2*100:.1f}% ring_B={ring*ICI_BW:.3g} "
+             f"(2-D mode trades ring traffic for n beyond HBM; "
+             f"local_sweeps and small mu_v amortize it)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: find influential seeds in a small social graph with DiFuseR.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.baselines import influence_score
+from repro.core.difuser import DiFuserConfig, find_seeds
+from repro.graphs import rmat_graph
+
+# a power-law graph standing in for a social network (n=1024, ~8k edges)
+graph = rmat_graph(10, edge_factor=8, seed=0, setting="w1")
+print(f"graph: n={graph.n:,} vertices, m={graph.m_real:,} edges")
+
+# DiFuseR with J=512 registers (one FM register per Monte-Carlo simulation)
+config = DiFuserConfig(num_registers=512, seed=0)
+result = find_seeds(graph, k=10, config=config)
+
+print(f"seed set:          {result.seeds.tolist()}")
+print(f"estimated spread:  {result.scores[-1]:.1f} vertices")
+print(f"sketch rebuilds:   {int(result.rebuilds.sum())}/10 rounds (lazy rebuild, e=0.01)")
+
+# validate against the independent Monte-Carlo oracle (paper §5.1)
+oracle = influence_score(graph, result.seeds, num_sims=200)
+print(f"oracle spread:     {oracle:.1f} vertices "
+      f"(relative error {abs(oracle - result.scores[-1]) / oracle * 100:.1f}%)")
+
+# FASST in action: the sorted random vector clusters correlated samples
+from repro.core.fasst import lane_fill_rate
+from repro.core.sampling import make_x_vector
+
+x_unsorted = make_x_vector(512, seed=0)  # what a naive run would use
+fill_naive = lane_fill_rate(graph, x_unsorted)
+fill_fasst = lane_fill_rate(graph, np.sort(x_unsorted))
+print(f"VPU lane fill:     naive {fill_naive*100:.0f}% -> FASST {fill_fasst*100:.0f}%")

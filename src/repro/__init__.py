@@ -1,0 +1,3 @@
+"""repro: DiFuseR (distributed sketch-based influence maximization) on TPU/JAX,
+plus the assigned LM-architecture zoo sharing the same launch/mesh substrate."""
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Baselines the paper compares against, plus the independent scoring oracle."""
+from repro.baselines.mc_oracle import influence_score, exact_greedy
+from repro.baselines.ris import ris_find_seeds
+
+__all__ = ["influence_score", "exact_greedy", "ris_find_seeds"]

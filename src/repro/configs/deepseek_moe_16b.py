@@ -1,0 +1,23 @@
+"""deepseek-moe-16b [arXiv:2401.06066; hf] — fine-grained MoE:
+28L d_model=2048 16H (GQA kv=16) vocab=102400, 2 shared + 64 routed top-6
+experts with per-expert d_ff=1408 (the paper-reported fine-grained layout).
+EP: 64 experts shard 4-per-device over the 16-way model axis."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="decoder",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    moe_d_ff=1408,
+    vocab_size=102400,
+    moe_num_experts=64,
+    moe_top_k=6,
+    moe_num_shared=2,
+    moe_shard_mode="expert",
+    sub_quadratic=False,
+)

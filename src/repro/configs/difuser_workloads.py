@@ -1,0 +1,28 @@
+"""DiFuseR's own workload configs (the paper's §5 experiments), exposed the
+same way the LM archs are: selectable presets for launch/im.py and the
+production-scale dry-run cells in launch/dryrun.py (IM_CELLS).
+
+The container-scale presets mirror the paper's graph/degree regimes at
+sizes the CPU oracle can referee; the dry-run cells carry the full
+SNAP-scale shapes (n up to 2^26, m up to 2^31) through lower()+compile().
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class IMWorkload:
+    name: str
+    graph: str          # launch/im.py --graph spec
+    setting: str        # paper influence setting
+    k: int = 50
+    registers: int = 1024
+
+
+PRESETS = {
+    # paper Table 3/4 regimes, container-scale
+    "livejournal-like": IMWorkload("livejournal-like", "rmat:13", "0.1"),
+    "orkut-like": IMWorkload("orkut-like", "ba:4096", "0.01"),
+    "youtube-like": IMWorkload("youtube-like", "er:8192", "0.005"),
+    "mixed-n005": IMWorkload("mixed-n005", "rmat:12", "N0.05"),
+    "mixed-u01": IMWorkload("mixed-u01", "rmat:12", "U0.1"),
+}

@@ -1,0 +1,25 @@
+"""grok-1-314b [hf:xai-org/grok-1; unverified] — 64L d_model=6144 48H
+(GQA kv=8) d_ff=32768 vocab=131072, 8 experts top-2. The 314B total /
+~86B active parameter budget forces Adafactor (factored second moment):
+AdamW fp32 m+v alone would be 2.5 TB (see EXPERIMENTS.md memory table).
+moe_shard_mode="ffn": 8 experts don't divide the 16-way model axis, so TP
+shards each expert's 32768-wide FFN instead (EP×TP hybrid)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="decoder",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    moe_d_ff=32768,
+    vocab_size=131072,
+    moe_num_experts=8,
+    moe_top_k=2,
+    moe_shard_mode="ffn",
+    optimizer="adafactor",
+    sub_quadratic=False,
+)

@@ -1,0 +1,19 @@
+"""h2o-danube-3-4b [arXiv:2401.16818; unverified] — llama+mistral mix with
+sliding-window attention (window 4096): 24L d_model=3840 32H (GQA kv=8)
+d_ff=10240 vocab=32000. SWA makes it sub-quadratic => runs long_500k
+(decode attends to a 4k window of the 512k cache)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b",
+    family="decoder",
+    num_layers=24,
+    d_model=3840,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=120,
+    d_ff=10240,
+    vocab_size=32000,
+    sliding_window=4096,
+    sub_quadratic=True,
+)

@@ -1,0 +1,19 @@
+"""internvl2-26b [arXiv:2404.16821; hf] — VLM: InternViT frontend (STUB:
+precomputed patch embeddings) + InternLM2 backbone 48L d_model=6144 48H
+(GQA kv=8) d_ff=16384 vocab=92553 (padded to 92672 for sharding)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92553,
+    frontend="vision_patches",
+    num_patches=256,
+    sub_quadratic=False,
+)

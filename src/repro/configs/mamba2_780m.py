@@ -1,0 +1,18 @@
+"""mamba2-780m [arXiv:2405.21060; unverified] — attention-free SSD:
+48L d_model=1536 d_ff=0 (no MLP block) vocab=50280 ssm_state=128.
+Constant-size state cache => runs long_500k."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    sub_quadratic=True,
+)

@@ -1,0 +1,21 @@
+"""qwen1.5-4b [hf:Qwen/Qwen1.5-0.5B; hf] — 40L d_model=2560 20H (GQA kv=20)
+d_ff=6912 vocab=151936, QKV bias. 20 heads (MHA: kv=20 too)
+don't divide the model axis: attention projections replicate over ``model``
+(FSDP over ``data`` still shards them); head_dim sharding is banned because
+it all-reduces the S x S scores (see yi-34b / EXPERIMENTS §Perf). Padding
+an MHA model would need paired q+kv padding — left as future work."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    family="decoder",
+    num_layers=40,
+    d_model=2560,
+    num_heads=20,
+    num_kv_heads=20,
+    head_dim=128,
+    d_ff=6912,
+    vocab_size=151936,
+    qkv_bias=True,
+    sub_quadratic=False,
+)

@@ -1,0 +1,17 @@
+"""tinyllama-1.1b [arXiv:2401.02385; hf] — llama2-arch small:
+22L d_model=2048 32H (GQA kv=4) d_ff=5632 vocab=32000.
+Also the reference arch for the train-loop example."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="tinyllama-1.1b",
+    family="decoder",
+    num_layers=22,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=5632,
+    vocab_size=32000,
+    sub_quadratic=False,
+)

@@ -1,0 +1,23 @@
+"""whisper-medium [arXiv:2212.04356; unverified] — enc-dec, 24L(+24 enc)
+d_model=1024 16H (kv=16) d_ff=4096 vocab=51865. The conv audio frontend is
+a STUB per the assignment: input_specs() feeds precomputed frame
+embeddings (batch, frames, d_model). Decode = self-KV + cross-KV cache.
+Vocab pads 51865 -> 51968 so embeddings shard 16-way. NOTE: the
+framework uses SwiGLU MLPs uniformly, so the as-built param count is
+~1.0B vs the original GELU model's 769M (documented in DESIGN.md)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    num_layers=24,
+    enc_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    frontend="audio_frames",
+    sub_quadratic=False,
+)

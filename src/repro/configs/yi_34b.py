@@ -1,0 +1,21 @@
+"""yi-34b [arXiv:2403.04652; hf] — dense llama-arch GQA:
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+56 heads don't divide the 16-way model axis -> q heads are zero-padded to
+64 per KV group (exact math, +14% attention FLOPs) so they shard 16-way;
+head_dim sharding was measured to all-reduce 60 GB of scores per layer
+(EXPERIMENTS.md §Perf yi-34b iterations)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b",
+    family="decoder",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    padded_q_heads=64,
+    sub_quadratic=False,
+)

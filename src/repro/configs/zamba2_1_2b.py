@@ -1,0 +1,21 @@
+"""zamba2-1.2b [arXiv:2411.15242; hf] — hybrid: Mamba2 backbone with ONE
+weight-shared attention block applied every 6 layers: 38L d_model=2048
+32H (kv=32) d_ff=8192 vocab=32000 ssm_state=64. SSM state is O(1) in
+sequence => runs long_500k."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    attn_every=6,
+    sub_quadratic=True,
+)

@@ -1,0 +1,3 @@
+"""DiFuseR core: the paper's contribution as composable JAX modules."""
+from repro.core.difuser import DiFuserConfig, InfluenceResult, find_seeds
+from repro.core.distributed import DistributedConfig, find_seeds_distributed

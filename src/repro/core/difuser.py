@@ -1,0 +1,123 @@
+"""DiFuseR driver (paper Alg. 4), single-device path.
+
+The whole seed-selection loop — fill, propagate-to-fixpoint, then K rounds
+of {select, cascade, score, lazy-rebuild} — is one jitted JAX program:
+``lax.scan`` over seed rounds, ``lax.while_loop`` fixpoints inside,
+``lax.cond`` for the rebuild decision. The distributed runtime
+(core/distributed.py) wraps the same building blocks in shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import select as _select
+from repro.core.cascade import cascade_from_seed
+from repro.core.sampling import make_x_vector, weight_to_threshold
+from repro.core.simulate import propagate_to_fixpoint
+from repro.core.sketch import VISITED, count_visited
+from repro.graphs.structs import Graph
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class DiFuserConfig:
+    """Knobs of Alg. 4. Defaults follow the paper's experimental setup."""
+
+    num_registers: int = 1024          # J == R (one register per simulation)
+    seed: int = 0                      # global hash seed
+    estimator: str = "hll"             # "hll" (eq. 7) | "fm_mean" (eq. 6)
+    rebuild_threshold: float = 0.01    # e in Alg. 4 line 22
+    max_propagate_iters: int = 64
+    max_cascade_iters: int = 64
+    edge_chunk: int = 2048
+    impl: str = "ref"                  # "ref" | "pallas"
+    sort_x: bool = True                # FASST ordering (§4.1)
+
+
+@dataclasses.dataclass
+class InfluenceResult:
+    seeds: np.ndarray          # int32[K]
+    est_gains: np.ndarray      # float32[K] sketch-estimated marginal gains
+    scores: np.ndarray         # float32[K] influence after committing seed i
+    rebuilds: np.ndarray       # bool[K]   whether round i rebuilt sketches
+    propagate_iters: int       # initial build fixpoint sweeps
+    x: np.ndarray              # the random vector actually used (uint32[J])
+
+
+def _init_registers(n_pad: int, n_real: int, num_regs: int) -> jnp.ndarray:
+    m = jnp.zeros((n_pad, num_regs), jnp.int8)
+    pad_rows = jnp.arange(n_pad)[:, None] >= n_real
+    return jnp.where(pad_rows, jnp.int8(VISITED), m)
+
+
+def _find_seeds(src, dst, thr, x, n_pad, *, k, n_real, num_regs, seed, estimator,
+                impl, edge_chunk, max_prop, max_casc, rebuild_threshold):
+    m = _init_registers(n_pad, n_real, num_regs)
+    m = ops.sketch_fill(m, reg_offset=0, seed=seed, impl=impl)
+    m, build_iters = propagate_to_fixpoint(
+        m, src, dst, thr, x, seed=seed, impl=impl, edge_chunk=edge_chunk,
+        max_iters=max_prop)
+
+    def round_fn(carry, _):
+        m, score, oldscore = carry
+        sums = _select.local_sums(m, impl=impl)
+        s, gain = _select.finish_select(sums, num_regs, n_real, estimator=estimator)
+        m, _ = cascade_from_seed(m, s, src, dst, thr, x, seed=seed, impl=impl,
+                                 edge_chunk=edge_chunk, max_iters=max_casc)
+        visited = count_visited(m, n_real).astype(jnp.float32)
+        new_score = visited / jnp.float32(num_regs)
+        rel = (new_score - oldscore) / jnp.maximum(new_score, 1e-9)
+        do_rebuild = rel > rebuild_threshold
+
+        def rebuild(m):
+            m2 = ops.sketch_fill(m, reg_offset=0, seed=seed, impl=impl)
+            m2, _ = propagate_to_fixpoint(m2, src, dst, thr, x, seed=seed,
+                                          impl=impl, edge_chunk=edge_chunk,
+                                          max_iters=max_prop)
+            return m2, new_score
+
+        def keep(m):
+            return m, oldscore
+
+        m, oldscore = jax.lax.cond(do_rebuild, rebuild, keep, m)
+        return (m, new_score, oldscore), (s, gain, new_score, do_rebuild)
+
+    (_, _, _), outs = jax.lax.scan(round_fn, (m, jnp.float32(0.0), jnp.float32(0.0)),
+                                   None, length=k)
+    seeds, gains, scores, rebuilds = outs
+    return seeds, gains, scores, rebuilds, build_iters
+
+
+_find_seeds_jit = partial(jax.jit, static_argnames=(
+    "k", "n_real", "n_pad", "num_regs", "seed", "estimator", "impl", "edge_chunk",
+    "max_prop", "max_casc", "rebuild_threshold"))(
+    lambda src, dst, thr, x, *, n_pad, **kw: _find_seeds(src, dst, thr, x, n_pad, **kw))
+
+
+def find_seeds(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
+               x: Optional[np.ndarray] = None) -> InfluenceResult:
+    """Run DiFuseR on a single device. ``x`` overrides the random vector
+    (the distributed tests use this to pin identical sample spaces)."""
+    cfg = config or DiFuserConfig()
+    if x is None:
+        x = make_x_vector(cfg.num_registers, seed=cfg.seed)
+    if cfg.sort_x:
+        x = np.sort(x)
+    g = g.sorted_by_dst()
+    thr = weight_to_threshold(g.weight)
+    seeds, gains, scores, rebuilds, build_iters = _find_seeds_jit(
+        jnp.asarray(g.src), jnp.asarray(g.dst), jnp.asarray(thr), jnp.asarray(x),
+        n_pad=g.n_pad, k=k, n_real=g.n, num_regs=cfg.num_registers, seed=cfg.seed,
+        estimator=cfg.estimator, impl=cfg.impl, edge_chunk=cfg.edge_chunk,
+        max_prop=cfg.max_propagate_iters, max_casc=cfg.max_cascade_iters,
+        rebuild_threshold=cfg.rebuild_threshold)
+    return InfluenceResult(
+        seeds=np.asarray(seeds), est_gains=np.asarray(gains),
+        scores=np.asarray(scores), rebuilds=np.asarray(rebuilds),
+        propagate_iters=int(build_iters), x=np.asarray(x))

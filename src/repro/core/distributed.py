@@ -1,0 +1,378 @@
+"""Distributed DiFuseR (paper §4) on a JAX mesh, scaled past the paper.
+
+Two partition modes, both SPMD under one ``shard_map``:
+
+* ``sim`` — the paper's scheme. The sample space (registers) is sharded
+  over the ``model`` axis; every shard holds all vertices plus its FASST
+  device-local edge list. Zero communication in fill/propagate/cascade; one
+  psum of the (2, n_pad) estimator statistics + one scalar psum per seed
+  round (the paper's Fig. 3 reduction; its MPI BROADCAST disappears because
+  every shard computes the identical argmax).
+
+* ``2d`` — beyond the paper (its §6 names the O(n) reduction as the
+  thousand-node blocker). Registers are sharded over ``model`` AND vertices
+  over ``data``. Propagation needs remote registers, so each shard's edges
+  are bucketed by the *read*-owner shard and a ring schedule walks the
+  ``data`` axis: at step k the shard processes the bucket whose reads live
+  in the register block that just arrived, then ``ppermute``s the block on.
+  Compute overlaps communication; peak memory is two (n/P, J/S) blocks; the
+  selection reduce shrinks from O(n) to O(n/P) + P scalars.
+
+The pod axis (multi-pod mesh) extends the sample space: ``pod × model``
+shards form one flat sim axis (more simulations, same algorithm).
+
+Bucket edges carry precomputed hashes (hash once per edge instead of once
+per sweep — legal because h(u,v) is sample-independent; the fused decision
+``(X ^ h) < thr`` still happens per (edge, register) on device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch
+from repro.core.difuser import DiFuserConfig, InfluenceResult
+from repro.core.fasst import partition_samples
+from repro.core.sampling import edge_hash, make_x_vector, weight_to_threshold
+from repro.core.sketch import VISITED
+from repro.graphs.structs import Graph
+
+# ---------------------------------------------------------------------------
+# Host-side partition build
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition2D:
+    """Everything the shard_map body consumes, already bucketed + padded.
+
+    Bucket arrays have shape (mu_v, mu_s, mu_v, B): [write-owner shard,
+    sim shard, ring step k, slot]. At ring step k, vertex-shard v reads the
+    register block of shard (v + k) % mu_v.
+    """
+
+    n: int
+    n_pad: int                 # padded so mu_v | n_pad
+    n_loc: int
+    j_loc: int
+    mu_v: int
+    mu_s: int
+    x_shards: np.ndarray       # uint32[mu_s, j_loc] (FASST-sorted chunks)
+    # propagate buckets: write row = src (local id), read row = dst (block id)
+    p_h: np.ndarray            # uint32[mu_v, mu_s, mu_v, Bp] edge hash
+    p_w: np.ndarray            # int32 — local write row
+    p_r: np.ndarray            # int32 — row within the read block
+    p_t: np.ndarray            # uint32 — sampling threshold
+    # cascade buckets: write row = dst (local id), read row = src (block id)
+    c_h: np.ndarray
+    c_w: np.ndarray
+    c_r: np.ndarray
+    c_t: np.ndarray
+    edge_counts: np.ndarray    # int64[mu_v, mu_s] real (unpadded) edges per shard
+    comm_bytes_per_sweep: int  # ring traffic per device per sweep (both phases equal)
+
+
+def _bucketize(ids: np.ndarray, w_own: np.ndarray, k: np.ndarray,
+               eh: np.ndarray, wrow: np.ndarray, rrow: np.ndarray, thr: np.ndarray,
+               mu_v: int, b_max: int):
+    """Scatter per-edge data into (mu_v, mu_v, B) padded buckets."""
+    h_out = np.zeros((mu_v, mu_v, b_max), dtype=np.uint32)
+    w_out = np.zeros((mu_v, mu_v, b_max), dtype=np.int32)
+    r_out = np.zeros((mu_v, mu_v, b_max), dtype=np.int32)
+    t_out = np.zeros((mu_v, mu_v, b_max), dtype=np.uint32)  # thr=0 padding is inert
+    order = np.lexsort((ids, k, w_own))
+    w_s, k_s = w_own[order], k[order]
+    eh_s, wr_s, rr_s, th_s = eh[order], wrow[order], rrow[order], thr[order]
+    keys = w_s.astype(np.int64) * mu_v + k_s
+    boundaries = np.searchsorted(keys, np.arange(mu_v * mu_v + 1))
+    for b in range(mu_v * mu_v):
+        lo, hi = boundaries[b], boundaries[b + 1]
+        if hi == lo:
+            continue
+        v, kk = divmod(b, mu_v)
+        cnt = hi - lo
+        h_out[v, kk, :cnt] = eh_s[lo:hi]
+        w_out[v, kk, :cnt] = wr_s[lo:hi]
+        r_out[v, kk, :cnt] = rr_s[lo:hi]
+        t_out[v, kk, :cnt] = th_s[lo:hi]
+    return h_out, w_out, r_out, t_out
+
+
+def build_partition_2d(g: Graph, x: np.ndarray, mu_v: int, mu_s: int, *,
+                       seed: int = 0, method: str = "fasst",
+                       edge_block: int = 256) -> Partition2D:
+    """FASST sample-space split × contiguous vertex split, fully bucketed."""
+    r = x.shape[0]
+    assert r % mu_s == 0
+    x_shards, _ = partition_samples(x, mu_s, method=method)
+    j_loc = r // mu_s
+
+    n_pad = g.n_pad + ((-g.n_pad) % mu_v)
+    n_loc = n_pad // mu_v
+    eh_all = edge_hash(g.src, g.dst, seed=seed)
+    thr_all = weight_to_threshold(g.weight)
+    src = g.src.astype(np.int64)
+    dst = g.dst.astype(np.int64)
+    own_src = (src // n_loc).astype(np.int32)
+    own_dst = (dst // n_loc).astype(np.int32)
+
+    # per sim-shard sampled-by-any masks (FASST device-local edge sets)
+    from repro.core.fasst import _sampled_by_any
+
+    p_parts, c_parts, counts = [], [], np.zeros((mu_v, mu_s), dtype=np.int64)
+    bp_sizes, bc_sizes = [], []
+    masks = [np.nonzero(_sampled_by_any(eh_all, thr_all, x_shards[s]))[0] for s in range(mu_s)]
+    # compute global max bucket sizes first so every shard pads identically
+    for s in range(mu_s):
+        ids = masks[s]
+        kp = (own_dst[ids] - own_src[ids]) % mu_v
+        kc = (own_src[ids] - own_dst[ids]) % mu_v
+        bp = np.bincount(own_src[ids].astype(np.int64) * mu_v + kp, minlength=mu_v * mu_v)
+        bc = np.bincount(own_dst[ids].astype(np.int64) * mu_v + kc, minlength=mu_v * mu_v)
+        bp_sizes.append(bp.max() if bp.size else 0)
+        bc_sizes.append(bc.max() if bc.size else 0)
+    b_max = int(max(max(bp_sizes), max(bc_sizes), 1))
+    b_max += (-b_max) % edge_block
+
+    for s in range(mu_s):
+        ids = masks[s]
+        e_h, e_t = eh_all[ids], thr_all[ids]
+        wsrc, wdst = own_src[ids], own_dst[ids]
+        kp = (wdst - wsrc) % mu_v
+        kc = (wsrc - wdst) % mu_v
+        src_loc = (src[ids] % n_loc).astype(np.int32)
+        dst_loc = (dst[ids] % n_loc).astype(np.int32)
+        p_parts.append(_bucketize(ids, wsrc, kp, e_h, src_loc, dst_loc, e_t, mu_v, b_max))
+        c_parts.append(_bucketize(ids, wdst, kc, e_h, dst_loc, src_loc, e_t, mu_v, b_max))
+        for v in range(mu_v):
+            counts[v, s] = int((wsrc == v).sum())
+
+    def stack(parts, i):
+        return np.stack([p[i] for p in parts], axis=1)  # -> (mu_v, mu_s, mu_v, B)
+
+    comm = (mu_v - 1) * n_loc * j_loc  # int8 register block ring traffic / sweep
+    return Partition2D(
+        n=g.n, n_pad=n_pad, n_loc=n_loc, j_loc=j_loc, mu_v=mu_v, mu_s=mu_s,
+        x_shards=x_shards,
+        p_h=stack(p_parts, 0), p_w=stack(p_parts, 1), p_r=stack(p_parts, 2), p_t=stack(p_parts, 3),
+        c_h=stack(c_parts, 0), c_w=stack(c_parts, 1), c_r=stack(c_parts, 2), c_t=stack(c_parts, 3),
+        edge_counts=counts, comm_bytes_per_sweep=comm)
+
+
+# ---------------------------------------------------------------------------
+# Device-side shard_map body
+# ---------------------------------------------------------------------------
+
+
+def _bucket_sweep_propagate(acc, block, h, w, r, t, x_loc):
+    """Jacobi max-merge for one bucket: acc[w] <- max(acc[w], masked block[r])."""
+    mask = (h[:, None] ^ x_loc[None, :].astype(jnp.uint32)) < t[:, None]
+    vals = block[r]
+    contrib = jnp.where(mask, vals, jnp.int8(VISITED))
+    return acc.at[w].max(contrib)
+
+
+def _bucket_sweep_cascade(acc_vis, block, h, w, r, t, x_loc):
+    mask = (h[:, None] ^ x_loc[None, :].astype(jnp.uint32)) < t[:, None]
+    newly = jnp.logical_and(mask, block[r] == VISITED).astype(jnp.uint8)
+    return acc_vis.at[w].max(newly)
+
+
+def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
+                         sim_axes: Sequence[str], estimator: str,
+                         rebuild_threshold: float, max_prop: int, max_casc: int,
+                         seed: int, schedule: str = "ring", local_sweeps: int = 0):
+    """Returns the shard_map body running the full Alg. 4 loop."""
+    mu_v, mu_s = part.mu_v, part.mu_s
+    n_loc, j_loc, n_real = part.n_loc, part.j_loc, part.n
+    total_regs = mu_s * j_loc
+    all_axes = (vertex_axis, *sim_axes)
+
+    def local_sweep(m_loc, bh, bw, br, bt, x_loc, merge):
+        """Sweep only the k=0 bucket (reads own register block; no comm)."""
+        init = m_loc if merge is _bucket_sweep_propagate else (m_loc == VISITED).astype(jnp.uint8)
+        acc = merge(init, m_loc, bh[0], bw[0], br[0], bt[0], x_loc)
+        if merge is _bucket_sweep_propagate:
+            return jnp.where(m_loc == VISITED, m_loc, acc)
+        return jnp.where(acc.astype(bool), jnp.int8(VISITED), m_loc)
+
+    def ring_sweep(m_loc, bh, bw, br, bt, x_loc, merge):
+        """One full sweep: mu_v ring steps over the data axis."""
+        init = m_loc if merge is _bucket_sweep_propagate else (m_loc == VISITED).astype(jnp.uint8)
+        acc = init
+        if schedule == "allgather" and mu_v > 1:
+            # baseline schedule: materialize all blocks, no overlap
+            blocks = jax.lax.all_gather(m_loc, vertex_axis)  # (mu_v, n_loc, j_loc)
+            me = jax.lax.axis_index(vertex_axis)
+            for kk in range(mu_v):
+                owner = jax.lax.rem(me + kk, mu_v)
+                acc = merge(acc, blocks[owner], bh[kk], bw[kk], br[kk], bt[kk], x_loc)
+        else:
+            block = m_loc
+            for kk in range(mu_v):
+                acc = merge(acc, block, bh[kk], bw[kk], br[kk], bt[kk], x_loc)
+                if kk + 1 < mu_v:
+                    perm = [(i, (i - 1) % mu_v) for i in range(mu_v)]
+                    block = jax.lax.ppermute(block, vertex_axis, perm)
+        if merge is _bucket_sweep_propagate:
+            return jnp.where(m_loc == VISITED, m_loc, acc)
+        return jnp.where(acc.astype(bool), jnp.int8(VISITED), m_loc)
+
+    def fixpoint(m_loc, bh, bw, br, bt, x_loc, merge, max_iters):
+        def cond(c):
+            return jnp.logical_and(c[1], c[2] < max_iters)
+
+        def body(c):
+            m_cur, _, it = c
+            # block-Jacobi: drain intra-shard propagation before paying for
+            # a ring exchange (edges FASST-placed mostly intra-shard, so a
+            # few local sweeps kill most of the frontier; §Perf difuser)
+            for _ in range(local_sweeps):
+                m_cur = local_sweep(m_cur, bh, bw, br, bt, x_loc, merge)
+            m_new = ring_sweep(m_cur, bh, bw, br, bt, x_loc, merge)
+            changed = jax.lax.psum(jnp.any(m_new != m_cur).astype(jnp.int32), all_axes) > 0
+            return m_new, changed, it + 1
+
+        m_out, _, iters = jax.lax.while_loop(cond, body, (m_loc, jnp.bool_(True), jnp.int32(0)))
+        return m_out, iters
+
+    def body(x_loc, ph, pw, pr, pt, ch, cw, cr, ct):
+        # local shard coordinates; sim axes flatten row-major (pod major)
+        vi = jax.lax.axis_index(vertex_axis)
+        si = jnp.int32(0)
+        mult = 1
+        for ax in reversed(sim_axes):
+            si = si + jax.lax.axis_index(ax) * mult
+            mult *= _axis_size(ax)
+        reg_offset = si * j_loc
+        row0 = vi * n_loc
+        rows = row0 + jnp.arange(n_loc, dtype=jnp.int32)
+        valid_row = rows < n_real
+
+        ph, pw, pr, pt = ph[0, 0], pw[0, 0], pr[0, 0], pt[0, 0]
+        ch, cw, cr, ct = ch[0, 0], cw[0, 0], cr[0, 0], ct[0, 0]
+        x_loc = x_loc[0]
+
+        # ---- fill + initial propagate (Alg. 4 lines 3-6) ----
+        j_ids = (jnp.arange(j_loc, dtype=jnp.uint32)[None, :] + reg_offset.astype(jnp.uint32))
+        from repro.core.sampling import register_hash
+
+        fresh = jax.lax.clz(register_hash(rows.astype(jnp.uint32)[:, None], j_ids, seed=seed))
+        m_loc = jnp.where(valid_row[:, None], fresh.astype(jnp.int8), jnp.int8(VISITED))
+
+        def refill(m_cur):
+            return jnp.where(m_cur == VISITED, m_cur, fresh.astype(jnp.int8))
+
+        m_loc, build_iters = fixpoint(m_loc, ph, pw, pr, pt, x_loc,
+                                      _bucket_sweep_propagate, max_prop)
+
+        # ---- K seed rounds ----
+        def round_fn(carry, _):
+            m_cur, score, oldscore = carry
+            # selection: psum stats over sim axes -> exact for owned rows
+            stats = jnp.stack([
+                jnp.sum(jnp.where(m_cur != VISITED, jnp.exp2(-m_cur.astype(jnp.float32)), 0.0), axis=-1),
+                jnp.sum(m_cur != VISITED, axis=-1).astype(jnp.float32)])
+            stats = jax.lax.psum(stats, tuple(sim_axes)) if sim_axes else stats
+            est = sketch.estimate_from_sums(stats, total_regs, estimator=estimator)
+            est = jnp.where(valid_row, est, -1.0)
+            loc_arg = jnp.argmax(est)
+            loc_best = est[loc_arg]
+            loc_seed = rows[loc_arg]
+            # cross-shard argmax: P scalars instead of the paper's O(n) vector
+            bests = jax.lax.all_gather(loc_best, vertex_axis)        # (mu_v,)
+            seeds_g = jax.lax.all_gather(loc_seed, vertex_axis)      # (mu_v,)
+            win = jnp.argmax(bests)
+            s_global = seeds_g[win]
+            gain = bests[win]
+            # commit + cascade
+            m_cur = jnp.where((rows == s_global)[:, None], jnp.int8(VISITED), m_cur)
+            m_cur, _ = fixpoint(m_cur, ch, cw, cr, ct, x_loc, _bucket_sweep_cascade, max_casc)
+            visited = jnp.sum(jnp.logical_and(m_cur == VISITED, valid_row[:, None]).astype(jnp.int32))
+            visited = jax.lax.psum(visited, all_axes).astype(jnp.float32)
+            new_score = visited / jnp.float32(total_regs)
+            rel = (new_score - oldscore) / jnp.maximum(new_score, 1e-9)
+
+            def rebuild(mm):
+                mm = refill(mm)
+                mm, _ = fixpoint(mm, ph, pw, pr, pt, x_loc, _bucket_sweep_propagate, max_prop)
+                return mm, new_score
+
+            def keep(mm):
+                return mm, oldscore
+
+            m_cur, oldscore = jax.lax.cond(rel > rebuild_threshold, rebuild, keep, m_cur)
+            return (m_cur, new_score, oldscore), (s_global, gain, new_score, rel > rebuild_threshold)
+
+        (_, _, _), outs = jax.lax.scan(round_fn, (m_loc, jnp.float32(0.0), jnp.float32(0.0)),
+                                       None, length=k)
+        seeds_out, gains, scores, rebuilds = outs
+        return seeds_out, gains, scores, rebuilds, build_iters
+
+    # helper resolved at trace time inside shard_map
+    _axis_sizes: dict[str, int] = {}
+
+    def _axis_size(ax: str) -> int:
+        return _axis_sizes[ax]
+
+    def with_sizes(mesh):
+        for ax in (vertex_axis, *sim_axes):
+            _axis_sizes[ax] = mesh.shape[ax]
+        return body
+
+    return with_sizes
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedConfig(DiFuserConfig):
+    vertex_axis: str = "data"
+    sim_axes: tuple = ("model",)
+    schedule: str = "ring"          # "ring" | "allgather"
+    fasst: bool = True              # False -> naive sample partition
+    local_sweeps: int = 0           # extra comm-free sweeps per exchange
+
+
+def find_seeds_distributed(g: Graph, k: int, mesh, config: Optional[DistributedConfig] = None,
+                           x: Optional[np.ndarray] = None):
+    """Run distributed DiFuseR on ``mesh``. Returns (InfluenceResult, Partition2D)."""
+    from jax.sharding import PartitionSpec as P
+
+    cfg = config or DistributedConfig()
+    mu_v = mesh.shape[cfg.vertex_axis]
+    mu_s = math.prod(mesh.shape[ax] for ax in cfg.sim_axes)
+    if x is None:
+        x = make_x_vector(cfg.num_registers, seed=cfg.seed)
+    g = g.sorted_by_dst()
+    part = build_partition_2d(g, x, mu_v, mu_s, seed=cfg.seed,
+                              method="fasst" if cfg.fasst else "naive")
+
+    maker = _make_distributed_fn(
+        part, k=k, vertex_axis=cfg.vertex_axis, sim_axes=tuple(cfg.sim_axes),
+        estimator=cfg.estimator, rebuild_threshold=cfg.rebuild_threshold,
+        max_prop=cfg.max_propagate_iters, max_casc=cfg.max_cascade_iters,
+        seed=cfg.seed, schedule=cfg.schedule, local_sweeps=cfg.local_sweeps)
+    body = maker(mesh)
+
+    sim_spec = cfg.sim_axes if len(cfg.sim_axes) > 1 else cfg.sim_axes[0]
+    bucket_spec = P(cfg.vertex_axis, sim_spec, None, None)
+    in_specs = (P(sim_spec, None),) + (bucket_spec,) * 8
+    out_specs = (P(), P(), P(), P(), P())
+
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False))
+    # reshape x_shards so sim axes shard dim 0: (mu_s, j_loc)
+    args = [jnp.asarray(part.x_shards)]
+    for a in (part.p_h, part.p_w, part.p_r, part.p_t, part.c_h, part.c_w, part.c_r, part.c_t):
+        args.append(jnp.asarray(a))
+    seeds, gains, scores, rebuilds, build_iters = fn(*args)
+    res = InfluenceResult(
+        seeds=np.asarray(seeds), est_gains=np.asarray(gains), scores=np.asarray(scores),
+        rebuilds=np.asarray(rebuilds), propagate_iters=int(build_iters),
+        x=np.sort(x) if cfg.fasst else x)
+    return res, part

@@ -1,0 +1,57 @@
+"""Seed selection (paper Alg. 4 lines 8-14 and Fig. 3/4).
+
+Selection reduces per-vertex *additive* estimator statistics (shard-local
+``partial_sums``), finishes the nonlinear harmonic-mean estimate after the
+reduction, masks padding rows, and takes the argmax. In SPMD every shard
+computes the identical argmax, so the paper's explicit BROADCAST disappears.
+
+Beyond-paper (paper §6's own suggestion): ``topk_candidates`` communicates
+only the top-C per-shard candidates instead of the full O(n) vector — the
+compressed-selection path used by the distributed runtime when
+``select_top_c > 0``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch
+from repro.kernels import ops
+
+
+def local_sums(m: jnp.ndarray, *, impl: str = "ref") -> jnp.ndarray:
+    """float32[2, n_pad] shard-local additive statistics (kernel-backed)."""
+    return ops.cardinality_stats(m, impl=impl)
+
+
+@partial(jax.jit, static_argnames=("total_regs", "n_real", "estimator"))
+def finish_select(sums: jnp.ndarray, total_regs: int, n_real: int,
+                  *, estimator: str = "hll") -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(reduced sums) -> (seed vertex, its estimated marginal gain)."""
+    est = sketch.estimate_from_sums(sums, total_regs, estimator=estimator)
+    n_pad = est.shape[0]
+    valid_row = jnp.arange(n_pad) < n_real
+    est = jnp.where(valid_row, est, -1.0)
+    s = jnp.argmax(est)
+    return s.astype(jnp.int32), est[s]
+
+
+def topk_candidates(sums: jnp.ndarray, total_regs: int, n_real: int, c: int,
+                    *, estimator: str = "hll") -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-shard top-C pre-filter (compressed selection, paper §6).
+
+    Returns (vertex ids int32[c], estimates float32[c]) of the shard's best
+    local candidates; the runtime all-gathers these O(C·mu) values instead
+    of psumming O(n). Exactness caveat (documented in DESIGN.md): with
+    per-shard statistics the local estimate is computed from the shard's
+    registers only, so the pre-filter is approximate; the runtime re-scores
+    the gathered candidate union exactly before the argmax.
+    """
+    est = sketch.estimate_from_sums(sums, total_regs, estimator=estimator)
+    n_pad = est.shape[0]
+    valid_row = jnp.arange(n_pad) < n_real
+    est = jnp.where(valid_row, est, -1.0)
+    vals, idx = jax.lax.top_k(est, c)
+    return idx.astype(jnp.int32), vals

@@ -1,0 +1,150 @@
+"""Flajolet–Martin sketch state and estimators (paper §2.3, §3.1).
+
+State layout: a single ``int8[n_pad, J]`` matrix ``M``. ``M[u, j]`` is the FM
+register of vertex ``u`` for simulation slot ``j``:
+
+  * ``M[u, j] in [0, 32]`` — max clz over the (sampled-)reachable set of u in
+    simulation j;
+  * ``M[u, j] == VISITED (-1)`` — u is already activated by the committed seed
+    set in simulation j (paper's visited-in-register encoding, §3.1).
+
+The visited sentinel is the *bottom* element of the max-merge lattice, which
+is what keeps pull-merges idempotent and atomics-free; a ``where`` guard keeps
+it sticky (a visited register never becomes unvisited).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampling import register_hash
+
+VISITED = np.int8(-1)
+REG_DTYPE = jnp.int8
+
+# Flajolet–Martin correction factor (paper eq. (6)), J >= 16.
+PHI_FM = 0.77351
+
+# Harmonic-mean correction for *full-stream* FM registers (every register
+# sees every item through its own hash h_j — unlike HyperLogLog's stochastic
+# averaging, so HLL's alpha_m does NOT apply). For M = max clz over n items,
+# E[n * 2^-M] -> 1/ln 2 (verified numerically at n = 50..5e4, std err < 2%),
+# giving  n_hat = C_HARMONIC * J / sum_j 2^-M_j.
+C_HARMONIC = 1.4426950408889634  # = 1 / ln 2
+
+
+def hll_alpha(j: int) -> float:
+    """Kept for reference/tests of classic HLL behavior (unused by the
+    estimator below — see C_HARMONIC)."""
+    if j >= 128:
+        return 0.7213 / (1.0 + 1.079 / j)
+    if j >= 64:
+        return 0.709
+    if j >= 32:
+        return 0.697
+    return 0.673
+
+
+def fill_registers(n_pad: int, num_regs: int, *, reg_offset: int = 0, seed: int = 0,
+                   visited: jnp.ndarray | None = None) -> jnp.ndarray:
+    """FILL-SKETCHES (paper Alg. 1): M[u, j] = clz(h_{reg_offset + j}(u)).
+
+    ``reg_offset`` is the distributed register-slot offset (tau * J / mu).
+    ``visited`` — optional (n_pad, J) bool; visited entries stay VISITED
+    (the Alg. 1 line-5 early exit).
+    """
+    u = jnp.arange(n_pad, dtype=jnp.uint32)[:, None]
+    j = jnp.arange(num_regs, dtype=jnp.uint32)[None, :] + jnp.uint32(reg_offset)
+    h = register_hash(u, j, seed=seed)
+    m = jax.lax.clz(h).astype(REG_DTYPE)
+    if visited is not None:
+        m = jnp.where(visited, jnp.int8(VISITED), m)
+    return m
+
+
+def merge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Sketch union (paper eq. (5)) with sticky visited."""
+    return jnp.where(a == VISITED, a, jnp.maximum(a, b))
+
+
+def estimate_cardinality(m: jnp.ndarray, *, estimator: str = "hll") -> jnp.ndarray:
+    """Per-vertex expected *marginal* influence from registers (paper eqs. 6/7).
+
+    Registers with VISITED contribute zero marginal gain (their simulation is
+    already covered). Returns float32[n_pad].
+
+    estimator:
+      * "hll": harmonic-mean aggregation (paper eq. (7) / HyperLogLog [18]) —
+        robust to outlier registers.
+      * "fm_mean": 2^mean / phi (paper eq. (6), classic FM).
+    """
+    num_regs = m.shape[-1]
+    valid = m != VISITED
+    j_valid = jnp.sum(valid, axis=-1).astype(jnp.float32)
+    frac_valid = j_valid / jnp.float32(num_regs)
+    mf = m.astype(jnp.float32)
+    if estimator == "hll":
+        denom = jnp.sum(jnp.where(valid, jnp.exp2(-mf), 0.0), axis=-1)
+        est = jnp.float32(C_HARMONIC) * j_valid / jnp.maximum(denom, 1e-30)
+    elif estimator == "fm_mean":
+        mean = jnp.sum(jnp.where(valid, mf, 0.0), axis=-1) / jnp.maximum(j_valid, 1.0)
+        est = jnp.exp2(mean) / jnp.float32(PHI_FM)
+    else:
+        raise ValueError(f"unknown estimator: {estimator}")
+    # scale by the fraction of simulations where the vertex is still free —
+    # visited sims contribute zero marginal gain.
+    return jnp.where(j_valid > 0, est * frac_valid, 0.0)
+
+
+def partial_sums(m: jnp.ndarray, *, estimator: str = "hll") -> jnp.ndarray:
+    """Shard-local additive statistics for distributed seed selection.
+
+    The estimators are nonlinear, but their sufficient statistics are sums
+    over registers, so shards psum these and every shard finishes the
+    estimate locally (paper's Fig. 3 reduction, SPMD form).
+
+    Returns float32[2, n_pad]: [sum-statistic, valid-count].
+    """
+    valid = m != VISITED
+    j_valid = jnp.sum(valid, axis=-1).astype(jnp.float32)
+    mf = m.astype(jnp.float32)
+    if estimator == "hll":
+        stat = jnp.sum(jnp.where(valid, jnp.exp2(-mf), 0.0), axis=-1)
+    elif estimator == "fm_mean":
+        stat = jnp.sum(jnp.where(valid, mf, 0.0), axis=-1)
+    else:
+        raise ValueError(f"unknown estimator: {estimator}")
+    return jnp.stack([stat, j_valid])
+
+
+def estimate_from_sums(sums: jnp.ndarray, total_regs: int, *, estimator: str = "hll") -> jnp.ndarray:
+    """Finish the cardinality estimate from psum'd ``partial_sums``."""
+    stat, j_valid = sums[0], sums[1]
+    frac_valid = j_valid / jnp.float32(total_regs)
+    if estimator == "hll":
+        est = jnp.float32(C_HARMONIC) * j_valid / jnp.maximum(stat, 1e-30)
+    elif estimator == "fm_mean":
+        mean = stat / jnp.maximum(j_valid, 1.0)
+        est = jnp.exp2(mean) / jnp.float32(PHI_FM)
+    else:
+        raise ValueError(f"unknown estimator: {estimator}")
+    return jnp.where(j_valid > 0, est * frac_valid, 0.0)
+
+
+def count_visited(m: jnp.ndarray, n_real: int) -> jnp.ndarray:
+    """Number of (vertex, sim) pairs activated by the seed set (real rows only)."""
+    return jnp.sum((m[:n_real] == VISITED).astype(jnp.int32))
+
+
+def exact_distinct_reference(items: np.ndarray, num_regs: int, seed: int = 0) -> float:
+    """Host-side FM estimate of |set(items)| — used by estimator-accuracy tests."""
+    u = np.asarray(items, dtype=np.uint32)[:, None]
+    j = np.arange(num_regs, dtype=np.uint32)[None, :]
+    h = register_hash(u, j, seed=seed)
+    # numpy clz via bit twiddling (see sampling.clz32)
+    from repro.core.sampling import clz32
+
+    regs = clz32(h).max(axis=0)  # (J,)
+    denom = np.sum(np.exp2(-regs.astype(np.float64)))
+    return float(C_HARMONIC * num_regs / denom)

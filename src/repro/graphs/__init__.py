@@ -1,0 +1,12 @@
+"""Graph substrate: containers, generators, IO, partitioning."""
+from repro.graphs.structs import Graph, CSR, pad_to_multiple
+from repro.graphs.generators import rmat_graph, erdos_renyi_graph, barabasi_albert_graph
+
+__all__ = [
+    "Graph",
+    "CSR",
+    "pad_to_multiple",
+    "rmat_graph",
+    "erdos_renyi_graph",
+    "barabasi_albert_graph",
+]

@@ -1,0 +1,156 @@
+"""Graph containers used by the DiFuseR core.
+
+Everything downstream (kernels, shard_map bodies) consumes fixed-shape int32
+arrays, so the containers here do the padding/sorting once on host:
+
+- ``Graph``: immutable COO edge list + per-edge weights, with vertices in
+  ``[0, n)``. Edges are directed; undirected inputs are symmetrized by the
+  loaders/generators before they get here.
+- ``CSR``: row-pointer form derived from a Graph, used by reference BFS code.
+
+Padding convention: edge arrays are padded to a multiple of the kernel edge
+block with sentinel edges ``(src=n_pad-1, dst=n_pad-1, w=0)``.  Weight zero
+means the edge can never be sampled (P < w is strict), so sentinel edges are
+inert by construction — no masks needed downstream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+INT = np.int32
+
+
+def pad_to_multiple(x: np.ndarray, multiple: int, fill) -> np.ndarray:
+    """Pad 1-D array ``x`` up to a multiple of ``multiple`` with ``fill``."""
+    n = x.shape[0]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    return np.concatenate([x, np.full((rem,), fill, dtype=x.dtype)])
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Directed graph in COO form with per-edge diffusion probabilities.
+
+    Attributes:
+      n: number of real vertices.
+      src, dst: int32[m] edge endpoints (may include padding sentinels).
+      weight: float32[m] diffusion probability w_uv in [0, 1]; 0 for padding.
+      n_pad: padded vertex count (>= n + 1; the sentinel vertex is n_pad - 1).
+      m_real: number of real (non-padding) edges.
+    """
+
+    n: int
+    src: np.ndarray
+    dst: np.ndarray
+    weight: np.ndarray
+    n_pad: int
+    m_real: int
+
+    @property
+    def m(self) -> int:
+        return int(self.src.shape[0])
+
+    @staticmethod
+    def from_edges(
+        n: int,
+        src: np.ndarray,
+        dst: np.ndarray,
+        weight: Optional[np.ndarray] = None,
+        *,
+        edge_block: int = 256,
+        vertex_multiple: int = 8,
+        dedup: bool = True,
+    ) -> "Graph":
+        """Build a padded Graph from raw COO arrays.
+
+        Parallel (u, v) duplicates are merged with compound probability
+        ``1 - prod(1 - w_i)`` (paper §2.1). Self loops are dropped.
+        """
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        if weight is None:
+            weight = np.full(src.shape, 0.1, dtype=np.float32)
+        weight = np.asarray(weight, dtype=np.float32)
+        keep = src != dst
+        src, dst, weight = src[keep], dst[keep], weight[keep]
+
+        if dedup and src.size:
+            key = src * np.int64(n) + dst
+            order = np.argsort(key, kind="stable")
+            key, src, dst, weight = key[order], src[order], dst[order], weight[order]
+            uniq, start = np.unique(key, return_index=True)
+            if uniq.size != key.size:
+                # compound probability across duplicate runs: 1 - prod(1 - w)
+                log1m = np.log1p(-np.clip(weight, 0.0, 0.999999))
+                csum = np.concatenate([[0.0], np.cumsum(log1m)])
+                ends = np.concatenate([start[1:], [key.size]])
+                merged_w = 1.0 - np.exp(csum[ends] - csum[start])
+                src, dst = src[start], dst[start]
+                weight = merged_w.astype(np.float32)
+
+        m_real = int(src.size)
+        # sentinel vertex: one extra padded row so sentinel edges are harmless
+        n_pad = n + 1
+        rem = (-n_pad) % vertex_multiple
+        n_pad += rem
+        sentinel = n_pad - 1
+
+        src = pad_to_multiple(src.astype(INT), edge_block, INT(sentinel))
+        dst = pad_to_multiple(dst.astype(INT), edge_block, INT(sentinel))
+        weight = pad_to_multiple(weight, edge_block, np.float32(0.0))
+        return Graph(n=n, src=src, dst=dst, weight=weight, n_pad=n_pad, m_real=m_real)
+
+    def with_weights(self, weight: np.ndarray) -> "Graph":
+        """Replace real-edge weights (padding stays 0)."""
+        w = np.zeros_like(self.weight)
+        w[: self.m_real] = np.asarray(weight, dtype=np.float32)[: self.m_real]
+        return dataclasses.replace(self, weight=w)
+
+    def sorted_by_dst(self) -> "Graph":
+        """Edges sorted by (dst, src) — the layout the pull-based propagate
+        kernel wants (destination runs are contiguous)."""
+        order = np.lexsort((self.src[: self.m_real], self.dst[: self.m_real]))
+        src = np.concatenate([self.src[: self.m_real][order], self.src[self.m_real :]])
+        dst = np.concatenate([self.dst[: self.m_real][order], self.dst[self.m_real :]])
+        w = np.concatenate([self.weight[: self.m_real][order], self.weight[self.m_real :]])
+        return dataclasses.replace(self, src=src, dst=dst, weight=w)
+
+    def reverse(self) -> "Graph":
+        """Transpose graph (for cascade: activation flows src->dst along
+        forward edges; the pull form of cascade pulls along incoming edges)."""
+        return dataclasses.replace(self, src=self.dst.copy(), dst=self.src.copy())
+
+    def csr(self) -> "CSR":
+        return CSR.from_graph(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Row-pointer adjacency over *real* edges only (host-side reference use)."""
+
+    n: int
+    indptr: np.ndarray  # int64[n + 1]
+    indices: np.ndarray  # int32[m_real]
+    weight: np.ndarray  # float32[m_real]
+
+    @staticmethod
+    def from_graph(g: Graph) -> "CSR":
+        src = g.src[: g.m_real]
+        dst = g.dst[: g.m_real]
+        w = g.weight[: g.m_real]
+        order = np.argsort(src, kind="stable")
+        src_s, dst_s, w_s = src[order], dst[order], w[order]
+        counts = np.bincount(src_s, minlength=g.n)
+        indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        return CSR(n=g.n, indptr=indptr, indices=dst_s.astype(INT), weight=w_s)
+
+    def neighbors(self, u: int) -> np.ndarray:
+        return self.indices[self.indptr[u] : self.indptr[u + 1]]
+
+    def neighbor_weights(self, u: int) -> np.ndarray:
+        return self.weight[self.indptr[u] : self.indptr[u + 1]]

@@ -1,0 +1,80 @@
+"""Pallas kernel: bucketed SIMULATE sweep for the distributed 2-D runtime.
+
+The distributed partition (core/distributed.py) pre-buckets edges by
+(write-owner, ring step) and precomputes the per-edge hash (hash once
+instead of once per sweep). At each ring step the device merges its local
+accumulator rows with rows of the *remote* register block that just
+arrived. This kernel is that merge:
+
+    acc[w[i], j] <- max(acc[w[i], j], block[r[i], j])   if (h[i]^X_j) < t[i]
+
+Same Jacobi/TPU-lane layout as sketch_propagate (registers ride the 128
+lanes; gathers/stores are dynamic row slices; no atomics because max-merge
+is idempotent). ops-level dispatch: the jnp oracle is
+``core.distributed._bucket_sweep_propagate``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import EDGE_BLOCK, REG_TILE, pick_block
+
+VISITED = -1
+
+
+def _bucket_kernel(h_ref, w_ref, r_ref, t_ref, x_ref, block_ref, acc_ref, out_ref,
+                   *, edge_block: int):
+    eb = pl.program_id(1)
+
+    @pl.when(eb == 0)
+    def _init():
+        out_ref[...] = acc_ref[...]
+
+    h = h_ref[...].astype(jnp.uint32)
+    w = w_ref[...]
+    r = r_ref[...]
+    t = t_ref[...].astype(jnp.uint32)
+    x = x_ref[...].astype(jnp.uint32)
+
+    def body(i, _):
+        mask = (h[i] ^ x) < t[i]
+        pulled = pl.load(block_ref, (r[i], slice(None)))
+        contrib = jnp.where(mask, pulled, jnp.full_like(pulled, VISITED))
+        cur = pl.load(out_ref, (w[i], slice(None)))
+        new = jnp.where(cur == VISITED, cur, jnp.maximum(cur, contrib))
+        pl.store(out_ref, (w[i], slice(None)), new)
+        return 0
+
+    jax.lax.fori_loop(0, edge_block, body, 0)
+
+
+@partial(jax.jit, static_argnames=("edge_block", "reg_tile", "interpret"))
+def bucket_propagate_pallas(acc, block, h, w, r, t, x, *,
+                            edge_block: int = EDGE_BLOCK, reg_tile: int = REG_TILE,
+                            interpret: bool = True):
+    """acc/block: int8[n_loc, J_loc]; h/w/r/t: (B,) bucket arrays; x: (J_loc,)."""
+    n_loc, j_loc = acc.shape
+    n_edges = h.shape[0]
+    reg_tile = pick_block(j_loc, reg_tile)
+    edge_block = pick_block(n_edges, edge_block)
+    grid = (j_loc // reg_tile, n_edges // edge_block)
+    return pl.pallas_call(
+        partial(_bucket_kernel, edge_block=edge_block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((edge_block,), lambda j, e: (e,)),
+            pl.BlockSpec((edge_block,), lambda j, e: (e,)),
+            pl.BlockSpec((edge_block,), lambda j, e: (e,)),
+            pl.BlockSpec((edge_block,), lambda j, e: (e,)),
+            pl.BlockSpec((reg_tile,), lambda j, e: (j,)),
+            pl.BlockSpec((n_loc, reg_tile), lambda j, e: (0, j)),
+            pl.BlockSpec((n_loc, reg_tile), lambda j, e: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n_loc, reg_tile), lambda j, e: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n_loc, j_loc), jnp.int8),
+        interpret=interpret,
+    )(h, w, r, t, x, block, acc)

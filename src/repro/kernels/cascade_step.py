@@ -1,0 +1,78 @@
+"""Pallas kernel: one CASCADE sweep (paper Alg. 3).
+
+Propagates visitedness forward: for every edge (u, v) sampled in sim j with
+``M[u, j] == VISITED``, mark ``M[v, j] <- VISITED``.
+
+The paper's unified frontier queue + warp-ballot dedup is a GPU-occupancy
+device with no TPU analogue (DESIGN.md §2); here the frontier is implicit —
+a dense sweep over the (dst-sorted) edge list whose per-lane work is a
+compare + select. The fixpoint driver (core/cascade.py) supplies the early
+exit the queue provided: it stops as soon as a sweep changes nothing.
+
+Same schedule as sketch_propagate (register tile major, edge blocks minor,
+register panes VMEM-resident); Jacobi semantics, bit-exact vs ref.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import EDGE_BLOCK, REG_TILE, kedge_hash, pick_block
+
+VISITED = -1  # python literal: weak-typed inside kernels (no captured consts)
+
+
+def _cascade_kernel(src_ref, dst_ref, thr_ref, x_ref, m_ref, out_ref, *,
+                    edge_block: int, seed: int):
+    eb = pl.program_id(1)
+
+    @pl.when(eb == 0)
+    def _init():
+        out_ref[...] = m_ref[...]
+
+    src = src_ref[...]
+    dst = dst_ref[...]
+    thr = thr_ref[...].astype(jnp.uint32)
+    x = x_ref[...].astype(jnp.uint32)
+    h = kedge_hash(src, dst, seed)
+
+    def body(i, _):
+        u = src[i]
+        v = dst[i]
+        mask = (h[i] ^ x) < thr[i]
+        vis_u = pl.load(m_ref, (u, slice(None))) == VISITED  # Jacobi read
+        newly = jnp.logical_and(mask, vis_u)
+        cur = pl.load(out_ref, (v, slice(None)))
+        pl.store(out_ref, (v, slice(None)), jnp.where(newly, jnp.full_like(cur, VISITED), cur))
+        return 0
+
+    jax.lax.fori_loop(0, edge_block, body, 0)
+
+
+@partial(jax.jit, static_argnames=("seed", "edge_block", "reg_tile", "interpret"))
+def cascade_sweep_pallas(m, src, dst, thr, x, *, seed: int = 0,
+                         edge_block: int = EDGE_BLOCK, reg_tile: int = REG_TILE,
+                         interpret: bool = True):
+    n_pad, num_regs = m.shape
+    num_edges = src.shape[0]
+    reg_tile = pick_block(num_regs, reg_tile)
+    edge_block = pick_block(num_edges, edge_block)
+    assert num_edges % edge_block == 0 and num_regs % reg_tile == 0
+    grid = (num_regs // reg_tile, num_edges // edge_block)
+    return pl.pallas_call(
+        partial(_cascade_kernel, edge_block=edge_block, seed=seed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((edge_block,), lambda r, e: (e,)),
+            pl.BlockSpec((edge_block,), lambda r, e: (e,)),
+            pl.BlockSpec((edge_block,), lambda r, e: (e,)),
+            pl.BlockSpec((reg_tile,), lambda r, e: (r,)),
+            pl.BlockSpec((n_pad, reg_tile), lambda r, e: (0, r)),
+        ],
+        out_specs=pl.BlockSpec((n_pad, reg_tile), lambda r, e: (0, r)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, num_regs), jnp.int8),
+        interpret=interpret,
+    )(src, dst, thr, x, m)

@@ -1,0 +1,64 @@
+"""Shared helpers for the Pallas kernel bodies.
+
+Everything here must be expressible inside a Pallas TPU kernel: uint32
+vector arithmetic, shift-based clz (TPU Mosaic has no clz primitive we rely
+on), and the murmur-style mixers duplicated from repro.core.sampling so the
+kernel bodies have no external dependencies.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_M1 = 0x85EBCA6B
+_M2 = 0xC2B2AE35
+_GOLD = 0x9E3779B9
+
+# Default TPU tiling. Registers ride the lane dimension (128 lanes per
+# vreg); edge blocks are sized so (edge_block x reg_tile) uint32 scratch
+# stays well under VMEM.
+REG_TILE = 128
+EDGE_BLOCK = 512
+VERTEX_BLOCK = 256
+
+
+def pick_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (block-shape helper)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def kmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 fmix32 (kernel-local copy of sampling.mix32)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(_M1)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(_M2)
+    x = x ^ (x >> 16)
+    return x
+
+
+def kedge_hash(src: jnp.ndarray, dst: jnp.ndarray, seed: int) -> jnp.ndarray:
+    u = src.astype(jnp.uint32)
+    v = dst.astype(jnp.uint32)
+    h = kmix32(u * jnp.uint32(_GOLD) + jnp.uint32(seed))
+    return kmix32(h ^ (v * jnp.uint32(_M1) + jnp.uint32(0x27D4EB2F)))
+
+
+def kregister_hash(vertex: jnp.ndarray, reg: jnp.ndarray, seed: int) -> jnp.ndarray:
+    u = vertex.astype(jnp.uint32)
+    j = reg.astype(jnp.uint32)
+    return kmix32(kmix32(u * jnp.uint32(_GOLD) + jnp.uint32(seed ^ 0x5BD1E995)) ^ (j * jnp.uint32(_M2)))
+
+
+def kclz32(x: jnp.ndarray) -> jnp.ndarray:
+    """clz via 5-step binary search — pure shifts/compares (VPU friendly)."""
+    x = x.astype(jnp.uint32)
+    n = jnp.full(x.shape, 32, dtype=jnp.int32)
+    for shift in (16, 8, 4, 2, 1):
+        big = x >= (jnp.uint32(1) << jnp.uint32(shift))
+        n = jnp.where(big, n - shift, n)
+        x = jnp.where(big, x >> jnp.uint32(shift), x)
+    return n - x.astype(jnp.int32)

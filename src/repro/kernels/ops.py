@@ -1,0 +1,58 @@
+"""jit'd dispatch wrappers over the Pallas kernels and their jnp oracles.
+
+``impl`` selects the backend:
+  * "ref"     — pure-jnp oracle (kernels/ref.py). Fast under XLA:CPU; the
+                default everywhere in this container.
+  * "pallas"  — Pallas body in interpret mode (CPU) — used by the kernel
+                equivalence tests; on a real TPU the same call sites flip
+                ``interpret=False``.
+
+All wrappers take the padded fixed-shape arrays produced by repro.graphs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.common import pick_block
+from repro.kernels.cascade_step import cascade_sweep_pallas
+from repro.kernels.fused_sample import fused_sample_pallas
+from repro.kernels.sketch_cardinality import cardinality_stats_pallas
+from repro.kernels.sketch_fill import sketch_fill_pallas
+from repro.kernels.sketch_propagate import propagate_sweep_pallas
+
+_INTERPRET = True  # flipped to False on real TPU deployments
+
+
+def fused_sample(src, dst, thr, x, *, seed: int = 0, impl: str = "ref"):
+    if impl == "ref":
+        return _ref.fused_sample_ref(src, dst, thr, x, seed=seed)
+    return fused_sample_pallas(src, dst, thr, x, seed=seed, interpret=_INTERPRET)
+
+
+def sketch_fill(m, *, reg_offset: int = 0, seed: int = 0, impl: str = "ref"):
+    if impl == "ref":
+        return _ref.sketch_fill_ref(m, reg_offset=reg_offset, seed=seed)
+    return sketch_fill_pallas(m, reg_offset=reg_offset, seed=seed, interpret=_INTERPRET)
+
+
+def propagate_sweep(m, src, dst, thr, x, *, seed: int = 0, impl: str = "ref",
+                    edge_chunk: int = 2048):
+    if impl == "ref":
+        return _ref.propagate_sweep_ref(m, src, dst, thr, x, seed=seed, edge_chunk=pick_block(src.shape[0], edge_chunk))
+    return propagate_sweep_pallas(m, src, dst, thr, x, seed=seed, interpret=_INTERPRET)
+
+
+def cascade_sweep(m, src, dst, thr, x, *, seed: int = 0, impl: str = "ref",
+                  edge_chunk: int = 2048):
+    if impl == "ref":
+        return _ref.cascade_sweep_ref(m, src, dst, thr, x, seed=seed, edge_chunk=pick_block(src.shape[0], edge_chunk))
+    return cascade_sweep_pallas(m, src, dst, thr, x, seed=seed, interpret=_INTERPRET)
+
+
+def cardinality_stats(m, *, impl: str = "ref"):
+    if impl == "ref":
+        stat, count = _ref.cardinality_stats_ref(m)
+    else:
+        stat, count = cardinality_stats_pallas(m, interpret=_INTERPRET)
+    return jnp.stack([stat, count])

@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: the Pallas bodies (interpret=True on
+CPU, TPU BlockSpecs for the target) must match them exactly — all kernels
+here are integer/bit-exact except the cardinality statistics (float32,
+compared with allclose).
+
+Sweep semantics are Jacobi: every sweep gathers from the *input* register
+matrix and scatter-reduces into a fresh accumulator. This makes the result
+independent of edge order, so ref, Pallas, and all distributed schedules
+agree bit-for-bit at every sweep (not only at the fixpoint).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sampling import edge_hash
+from repro.core.sketch import C_HARMONIC, VISITED
+
+
+def fused_sample_ref(src: jnp.ndarray, dst: jnp.ndarray, thr: jnp.ndarray,
+                     x: jnp.ndarray, *, seed: int = 0) -> jnp.ndarray:
+    """(E,) edges × (R,) X -> (E, R) uint8 membership mask (paper eq. (2))."""
+    h = edge_hash(src, dst, seed=seed)
+    mask = (h[:, None] ^ x[None, :].astype(jnp.uint32)) < thr[:, None].astype(jnp.uint32)
+    return mask.astype(jnp.uint8)
+
+
+def sketch_fill_ref(m: jnp.ndarray, *, reg_offset: int = 0, seed: int = 0) -> jnp.ndarray:
+    """FILL-SKETCHES (paper Alg. 1) with the visited early-exit.
+
+    m: int8[n_pad, J] current registers; VISITED entries are preserved,
+    everything else is re-initialized to clz(h_j(u)).
+    """
+    from repro.core.sampling import register_hash
+
+    n_pad, num_regs = m.shape
+    u = jnp.arange(n_pad, dtype=jnp.uint32)[:, None]
+    j = jnp.arange(num_regs, dtype=jnp.uint32)[None, :] + jnp.uint32(reg_offset)
+    fresh = jax.lax.clz(register_hash(u, j, seed=seed)).astype(jnp.int8)
+    return jnp.where(m == VISITED, m, fresh)
+
+
+@partial(jax.jit, static_argnames=("edge_chunk", "seed"))
+def propagate_sweep_ref(m: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+                        thr: jnp.ndarray, x: jnp.ndarray, *,
+                        edge_chunk: int = 2048, seed: int = 0) -> jnp.ndarray:
+    """One SIMULATE sweep (paper Alg. 2): pull-based sketch max-merge.
+
+    For every edge (u, v) sampled in sim j, M[u, j] <- max(M[u, j], M[v, j]).
+    Visited registers are sticky. Jacobi: gathers read the input ``m``.
+    """
+    num_edges = src.shape[0]
+    assert num_edges % edge_chunk == 0, (num_edges, edge_chunk)
+    n_chunks = num_edges // edge_chunk
+    xs = (
+        src.reshape(n_chunks, edge_chunk),
+        dst.reshape(n_chunks, edge_chunk),
+        thr.reshape(n_chunks, edge_chunk),
+    )
+
+    def body(acc, chunk):
+        s, d, t = chunk
+        h = edge_hash(s, d, seed=seed)
+        mask = (h[:, None] ^ x[None, :].astype(jnp.uint32)) < t[:, None].astype(jnp.uint32)
+        vals = m[d]  # (chunk, J) — pull from out-neighbors (Jacobi: reads input m)
+        contrib = jnp.where(mask, vals, jnp.int8(VISITED))
+        acc = acc.at[s].max(contrib)
+        return acc, None
+
+    acc, _ = jax.lax.scan(body, m, xs)
+    return jnp.where(m == VISITED, m, acc)
+
+
+@partial(jax.jit, static_argnames=("edge_chunk", "seed"))
+def cascade_sweep_ref(m: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+                      thr: jnp.ndarray, x: jnp.ndarray, *,
+                      edge_chunk: int = 2048, seed: int = 0) -> jnp.ndarray:
+    """One CASCADE sweep (paper Alg. 3): propagate visitedness forward.
+
+    For every edge (u, v) sampled in sim j with M[u, j] == VISITED,
+    mark M[v, j] <- VISITED. Jacobi semantics as above.
+    """
+    num_edges = src.shape[0]
+    assert num_edges % edge_chunk == 0
+    n_chunks = num_edges // edge_chunk
+    xs = (
+        src.reshape(n_chunks, edge_chunk),
+        dst.reshape(n_chunks, edge_chunk),
+        thr.reshape(n_chunks, edge_chunk),
+    )
+    vis = m == VISITED
+
+    def body(acc, chunk):
+        s, d, t = chunk
+        h = edge_hash(s, d, seed=seed)
+        mask = (h[:, None] ^ x[None, :].astype(jnp.uint32)) < t[:, None].astype(jnp.uint32)
+        newly = jnp.logical_and(mask, vis[s]).astype(jnp.uint8)
+        acc = acc.at[d].max(newly)
+        return acc, None
+
+    acc, _ = jax.lax.scan(body, vis.astype(jnp.uint8), xs)
+    return jnp.where(acc.astype(bool), jnp.int8(VISITED), m)
+
+
+def cardinality_stats_ref(m: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-vertex sufficient statistics for the HLL estimator.
+
+    Returns (sum_{valid} 2^-M[u, j], count_valid) as float32[n_pad] each.
+    """
+    valid = m != VISITED
+    stat = jnp.sum(jnp.where(valid, jnp.exp2(-m.astype(jnp.float32)), 0.0), axis=-1)
+    count = jnp.sum(valid, axis=-1).astype(jnp.float32)
+    return stat, count
+
+
+def estimate_ref(m: jnp.ndarray) -> jnp.ndarray:
+    """End-to-end HLL estimate (stats + finish) — matches sketch.estimate_cardinality."""
+    num_regs = m.shape[-1]
+    stat, count = cardinality_stats_ref(m)
+    est = jnp.float32(C_HARMONIC) * count / jnp.maximum(stat, 1e-30)
+    return jnp.where(count > 0, est * (count / num_regs), 0.0)

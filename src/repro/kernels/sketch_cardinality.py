@@ -1,0 +1,53 @@
+"""Pallas kernel: per-vertex cardinality sufficient statistics.
+
+For seed selection every vertex needs its estimator statistics
+(sum_j 2^-M[u,j] over valid registers, and the valid count). These are the
+shard-local *additive* halves of the harmonic-mean estimator (paper eq. (7)
+/ Fig. 3): shards psum them and finish the estimate replicated.
+
+TPU tiling: grid over vertex blocks; each step reads a (VERTEX_BLOCK, J)
+int8 pane (J <= 1024 -> <=256 KiB VMEM) and reduces along lanes into two
+(VERTEX_BLOCK,) float32 vectors. Register-dim reduction = lane reduction,
+the cheap direction on the VPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import VERTEX_BLOCK, pick_block
+
+VISITED = -1  # python literal: weak-typed inside kernels (no captured consts)
+
+
+def _cardinality_kernel(m_ref, stat_ref, count_ref):
+    m = m_ref[...]
+    valid = m != VISITED
+    mf = m.astype(jnp.float32)
+    stat_ref[...] = jnp.sum(jnp.where(valid, jnp.exp2(-mf), 0.0), axis=-1)
+    count_ref[...] = jnp.sum(valid, axis=-1).astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("vertex_block", "interpret"))
+def cardinality_stats_pallas(m, *, vertex_block: int = VERTEX_BLOCK, interpret: bool = True):
+    n_pad, num_regs = m.shape
+    vertex_block = pick_block(n_pad, vertex_block)
+    assert n_pad % vertex_block == 0
+    grid = (n_pad // vertex_block,)
+    return pl.pallas_call(
+        _cardinality_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((vertex_block, num_regs), lambda v: (v, 0))],
+        out_specs=[
+            pl.BlockSpec((vertex_block,), lambda v: (v,)),
+            pl.BlockSpec((vertex_block,), lambda v: (v,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(m)

@@ -1,0 +1,55 @@
+"""Pallas kernel: FILL-SKETCHES (paper Alg. 1).
+
+M[u, j] <- clz(h_j(u)) for non-visited registers; VISITED (-1) entries are
+preserved (the Alg. 1 line-5 early exit, which on TPU is a lane select
+rather than a thread `continue`).
+
+TPU tiling: grid = (n_pad / VERTEX_BLOCK, J / REG_TILE); each step writes a
+(256, 128) int8 tile (32 KiB). The vertex/register ids are derived from the
+grid position with iota — the only input is the previous register tile (for
+the visited mask), so the kernel is write-bandwidth-bound as in the paper.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import REG_TILE, VERTEX_BLOCK, kclz32, kregister_hash, pick_block
+
+VISITED = -1  # python literal: weak-typed inside kernels (no captured consts)
+
+
+def _sketch_fill_kernel(m_ref, out_ref, *, vertex_block: int, reg_tile: int,
+                        reg_offset: int, seed: int):
+    vb = pl.program_id(0)
+    rb = pl.program_id(1)
+    u0 = vb * vertex_block
+    j0 = rb * reg_tile + reg_offset
+    u = (jax.lax.broadcasted_iota(jnp.int32, (vertex_block, reg_tile), 0) + u0).astype(jnp.uint32)
+    j = (jax.lax.broadcasted_iota(jnp.int32, (vertex_block, reg_tile), 1) + j0).astype(jnp.uint32)
+    fresh = kclz32(kregister_hash(u, j, seed)).astype(jnp.int8)
+    prev = m_ref[...]
+    out_ref[...] = jnp.where(prev == VISITED, prev, fresh)
+
+
+@partial(jax.jit, static_argnames=("reg_offset", "seed", "vertex_block", "reg_tile", "interpret"))
+def sketch_fill_pallas(m, *, reg_offset: int = 0, seed: int = 0,
+                       vertex_block: int = VERTEX_BLOCK, reg_tile: int = REG_TILE,
+                       interpret: bool = True):
+    n_pad, num_regs = m.shape
+    vertex_block = pick_block(n_pad, vertex_block)
+    reg_tile = pick_block(num_regs, reg_tile)
+    assert n_pad % vertex_block == 0 and num_regs % reg_tile == 0
+    grid = (n_pad // vertex_block, num_regs // reg_tile)
+    return pl.pallas_call(
+        partial(_sketch_fill_kernel, vertex_block=vertex_block, reg_tile=reg_tile,
+                reg_offset=reg_offset, seed=seed),
+        grid=grid,
+        in_specs=[pl.BlockSpec((vertex_block, reg_tile), lambda v, r: (v, r))],
+        out_specs=pl.BlockSpec((vertex_block, reg_tile), lambda v, r: (v, r)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, num_regs), jnp.int8),
+        interpret=interpret,
+    )(m)

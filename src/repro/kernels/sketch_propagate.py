@@ -1,0 +1,92 @@
+"""Pallas kernel: one SIMULATE sweep (paper Alg. 2) — the core hot loop.
+
+Pull-based sketch max-merge with sampling fused into the traversal:
+for every edge (u, v) and register j with (X_j ^ h(u,v)) < thr_uv,
+``M[u, j] <- max(M[u, j], M[v, j])``, with VISITED (-1) sticky.
+
+TPU adaptation of the CUDA kernel (see DESIGN.md §2):
+  * registers ride the 128-lane dimension — one vector op covers 128
+    simulations of one edge (the paper's warp = 32 threads becomes a lane
+    tile = 128);
+  * the warp-divergence problem becomes masked lanes; FASST raises lane
+    occupancy exactly as it raises warp fill;
+  * atomics are unnecessary because max-merge is idempotent (the paper's
+    argument); duplicate-destination writes within an edge block are
+    serialized by the in-kernel edge loop instead.
+
+Grid = (J / REG_TILE, E / EDGE_BLOCK): the register tile is the outer
+(major) axis so the (n_pad x REG_TILE) register panes for input and
+accumulator stay VMEM-resident across all edge blocks (the classic
+reduction-innermost schedule). VMEM at (n_pad=64Ki, 128): two 8 MiB panes —
+the vertex dimension beyond that is tiled by the *distributed* vertex
+partition (core/distributed.py), not by this kernel.
+
+Jacobi semantics: gathers read the input pane, maxes accumulate into the
+output pane — bit-identical to kernels/ref.py for any edge order.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import EDGE_BLOCK, REG_TILE, kedge_hash, pick_block
+
+VISITED = -1  # python literal: weak-typed inside kernels (no captured consts)
+
+
+def _propagate_kernel(src_ref, dst_ref, thr_ref, x_ref, m_ref, out_ref, *,
+                      edge_block: int, seed: int):
+    eb = pl.program_id(1)
+
+    @pl.when(eb == 0)
+    def _init():
+        out_ref[...] = m_ref[...]
+
+    src = src_ref[...]
+    dst = dst_ref[...]
+    thr = thr_ref[...].astype(jnp.uint32)
+    x = x_ref[...].astype(jnp.uint32)
+    h = kedge_hash(src, dst, seed)  # (E_BLK,)
+
+    def body(i, _):
+        u = src[i]
+        v = dst[i]
+        mask = (h[i] ^ x) < thr[i]  # (R_TILE,) — fused sampling, one XOR+cmp
+        pulled = pl.load(m_ref, (v, slice(None)))  # Jacobi gather of v's tile
+        contrib = jnp.where(mask, pulled, jnp.full_like(pulled, VISITED))
+        cur = pl.load(out_ref, (u, slice(None)))
+        # sticky visited: a VISITED register never resurrects
+        new = jnp.where(cur == VISITED, cur, jnp.maximum(cur, contrib))
+        pl.store(out_ref, (u, slice(None)), new)
+        return 0
+
+    jax.lax.fori_loop(0, edge_block, body, 0)
+
+
+@partial(jax.jit, static_argnames=("seed", "edge_block", "reg_tile", "interpret"))
+def propagate_sweep_pallas(m, src, dst, thr, x, *, seed: int = 0,
+                           edge_block: int = EDGE_BLOCK, reg_tile: int = REG_TILE,
+                           interpret: bool = True):
+    n_pad, num_regs = m.shape
+    num_edges = src.shape[0]
+    reg_tile = pick_block(num_regs, reg_tile)
+    edge_block = pick_block(num_edges, edge_block)
+    assert num_edges % edge_block == 0 and num_regs % reg_tile == 0
+    grid = (num_regs // reg_tile, num_edges // edge_block)
+    return pl.pallas_call(
+        partial(_propagate_kernel, edge_block=edge_block, seed=seed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((edge_block,), lambda r, e: (e,)),
+            pl.BlockSpec((edge_block,), lambda r, e: (e,)),
+            pl.BlockSpec((edge_block,), lambda r, e: (e,)),
+            pl.BlockSpec((reg_tile,), lambda r, e: (r,)),
+            pl.BlockSpec((n_pad, reg_tile), lambda r, e: (0, r)),
+        ],
+        out_specs=pl.BlockSpec((n_pad, reg_tile), lambda r, e: (0, r)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, num_regs), jnp.int8),
+        interpret=interpret,
+    )(src, dst, thr, x, m)

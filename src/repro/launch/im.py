@@ -1,0 +1,99 @@
+"""DiFuseR driver — the paper's workload end-to-end.
+
+    PYTHONPATH=src python -m repro.launch.im --graph rmat:14 --setting 0.1 \
+        --k 50 --registers 1024 --devices 8 --validate
+
+--devices > 1 forks the process env with fake XLA devices? No — it expects
+the caller to export XLA_FLAGS=--xla_force_host_platform_device_count=N
+(or run on a real multi-device backend) and builds a (v, s) mesh over them.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.baselines import influence_score, ris_find_seeds
+from repro.core.difuser import DiFuserConfig, find_seeds
+from repro.graphs import barabasi_albert_graph, erdos_renyi_graph, rmat_graph
+from repro.graphs.io import load_snap_edgelist
+
+
+def make_graph(spec: str, setting: str, seed: int):
+    kind, _, arg = spec.partition(":")
+    if kind == "rmat":
+        return rmat_graph(int(arg), setting=setting, seed=seed)
+    if kind == "er":
+        return erdos_renyi_graph(int(arg), setting=setting, seed=seed)
+    if kind == "ba":
+        return barabasi_albert_graph(int(arg), setting=setting, seed=seed)
+    if kind == "snap":
+        return load_snap_edgelist(arg, setting=setting, seed=seed)
+    raise ValueError(spec)
+
+
+def run(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="rmat:12", help="rmat:<scale>|er:<n>|ba:<n>|snap:<path>")
+    ap.add_argument("--setting", default="0.1",
+                    help="0.005|0.01|0.1|N0.05|U0.1|wc (paper §5)")
+    ap.add_argument("--k", type=int, default=50)
+    ap.add_argument("--registers", type=int, default=1024)
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--schedule", default="ring", choices=["ring", "allgather"])
+    ap.add_argument("--no-fasst", action="store_true")
+    ap.add_argument("--validate", action="store_true", help="score seeds with the MC oracle")
+    ap.add_argument("--ris", action="store_true", help="also run the RIS/IMM baseline")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    g = make_graph(args.graph, args.setting, args.seed)
+    print(f"graph n={g.n:,} m={g.m_real:,}")
+    out = {}
+
+    t0 = time.time()
+    if args.devices > 1:
+        import jax
+
+        from repro.core.distributed import DistributedConfig, find_seeds_distributed
+        from repro.launch.mesh import make_mesh
+
+        ndev = len(jax.devices())
+        if ndev < args.devices:
+            raise SystemExit(
+                f"need {args.devices} devices, found {ndev}: export "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={args.devices}")
+        mu_v = 2 if args.devices % 2 == 0 else 1
+        mesh = make_mesh((mu_v, args.devices // mu_v), ("data", "model"))
+        cfg = DistributedConfig(num_registers=args.registers, seed=args.seed,
+                                schedule=args.schedule, fasst=not args.no_fasst)
+        res, part = find_seeds_distributed(g, args.k, mesh, cfg)
+        out["max_shard_edges"] = int(part.edge_counts.max())
+    else:
+        cfg = DiFuserConfig(num_registers=args.registers, seed=args.seed,
+                            sort_x=not args.no_fasst)
+        res = find_seeds(g, args.k, cfg)
+    dt = time.time() - t0
+    out.update(time_s=round(dt, 2), seeds=res.seeds.tolist(),
+               difuser_score=float(res.scores[-1]), rebuilds=int(res.rebuilds.sum()))
+    print(f"difuser: {dt:.2f}s influence(est)={res.scores[-1]:.1f} "
+          f"rebuilds={int(res.rebuilds.sum())}/{args.k}")
+
+    if args.validate:
+        oracle = influence_score(g, res.seeds, num_sims=100, rng_seed=args.seed + 99)
+        out["oracle_score"] = oracle
+        print(f"oracle(difuser seeds) = {oracle:.1f}")
+    if args.ris:
+        t0 = time.time()
+        rs, rest = ris_find_seeds(g, args.k, num_rr_sets=4000, rng_seed=args.seed)
+        rt = time.time() - t0
+        roracle = influence_score(g, rs, num_sims=100, rng_seed=args.seed + 99)
+        out.update(ris_time_s=round(rt, 2), ris_oracle=roracle)
+        print(f"ris/imm: {rt:.2f}s oracle={roracle:.1f} "
+              f"(quality ratio {out.get('oracle_score', roracle)/max(roracle,1e-9):.3f})")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Axes: ``data`` (DP+FSDP / IM vertex partition), ``model`` (TP/EP / IM
+sample-space partition), ``pod`` (multi-pod data parallelism / IM ensemble).
+Functions, not module constants — importing this module never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single-pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices, found {len(devices)} — "
+            "the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax (see launch/dryrun.py)")
+    return jax.make_mesh(shape, axes, devices=devices[:ndev],
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple, axes: tuple) -> Mesh:
+    """Arbitrary mesh for tests/benchmarks (uses the first prod(shape) devices)."""
+    ndev = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:ndev],
+                         axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+Nothing here allocates: params/optimizer shapes come from jax.eval_shape
+over the real init; batches/caches are explicit ShapeDtypeStructs. The
+modality frontends are stubs per the assignment — ``input_specs`` supplies
+precomputed frame/patch embeddings for [audio]/[vlm] archs.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCell
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_cache, init_params
+from repro.train.optimizer import Optimizer
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def param_shapes(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def opt_state_shapes(cfg: ModelConfig, optimizer: Optimizer) -> Any:
+    return jax.eval_shape(optimizer.init, param_shapes(cfg))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((b, s), jnp.int32), "labels": sds((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = sds((b, s, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = sds((b, cfg.num_patches, cfg.d_model), jnp.float32)
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": sds((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        out["enc_embeds"] = sds((b, s, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        out["prefix_embeds"] = sds((b, cfg.num_patches, cfg.d_model), jnp.float32)
+    return out
+
+
+def decode_cache_shapes(cfg: ModelConfig, shape: ShapeCell) -> Any:
+    """Cache ShapeDtypeStructs for a decode cell: one new token against a
+    KV/SSM cache of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    return jax.eval_shape(lambda: init_cache(cfg, b, s, enc_len=s))
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    b = shape.global_batch
+    return {
+        "token": sds((b,), jnp.int32),
+        "cache": decode_cache_shapes(cfg, shape),
+        "position": sds((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    """The generic entry point: stand-ins for every model input of the cell."""
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape)
+    raise ValueError(shape.kind)

@@ -1,0 +1,96 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --steps 200 --batch 8 --seq 128 --reduced --ckpt-dir ckpt/
+
+On the CPU container you run --reduced configs; on a real cluster the same
+driver jits against the production mesh. Checkpoint/restart: re-running
+with the same --ckpt-dir resumes from the latest step (see launch/ft.py
+for the supervised relaunch loop).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.models.sharding import activation_mesh
+from repro.models.transformer import init_params
+from repro.train.checkpoint import latest_step, restore, save
+from repro.train.data import DataConfig, synthetic_batch
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+def run(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true", help="smoke-sized config")
+    ap.add_argument("--width", type=int, default=0, help="override d_model (reduced)")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.reduced:
+        over = {}
+        if args.width:
+            over.update(d_model=args.width, head_dim=max(args.width // 4, 8))
+        if args.layers:
+            over["num_layers"] = args.layers
+        cfg = get_reduced(args.arch, **over)
+    else:
+        cfg = get_config(args.arch)
+
+    opt = make_optimizer(cfg.optimizer, lr=args.lr, warmup=args.warmup)
+    step_fn = jax.jit(make_train_step(cfg, opt, TrainConfig(accum_steps=args.accum)),
+                      donate_argnums=(0, 1))
+    dcfg = DataConfig(batch=args.batch, seq=args.seq, seed=args.seed)
+
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        start, tree = restore(args.ckpt_dir)
+        params, opt_state = tree["params"], tree["opt_state"]
+        print(f"resumed from step {start}")
+    else:
+        params = init_params(cfg, jax.random.PRNGKey(args.seed))
+        opt_state = opt.init(params)
+
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} family={cfg.family} params={n_params/1e6:.1f}M "
+          f"batch={args.batch} seq={args.seq}")
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in synthetic_batch(cfg, dcfg, step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if (step + 1) % args.log_every == 0:
+            dt = (time.time() - t0) / args.log_every
+            tok_s = args.batch * args.seq / dt
+            print(f"step {step+1:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {tok_s:,.0f} tok/s")
+            t0 = time.time()
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save(args.ckpt_dir, step + 1, {"params": params, "opt_state": opt_state})
+    if args.ckpt_dir:
+        save(args.ckpt_dir, args.steps, {"params": params, "opt_state": opt_state})
+    return {"final_loss": losses[-1] if losses else float("nan"),
+            "first_loss": losses[0] if losses else float("nan")}
+
+
+if __name__ == "__main__":
+    run()

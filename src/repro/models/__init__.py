@@ -1,0 +1,5 @@
+"""LM architecture zoo (assigned-pool deliverable)."""
+from repro.models.config import ModelConfig, reduced
+from repro.models.transformer import decode_step, forward, init_cache, init_params, prefill
+
+__all__ = ["ModelConfig", "reduced", "forward", "prefill", "decode_step", "init_cache", "init_params"]

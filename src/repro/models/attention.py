@@ -1,0 +1,240 @@
+"""GQA attention with RoPE, optional sliding window, cross-attention, and
+KV-cache decode. einsum formulation so pjit can shard heads over ``model``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rotary, init_dense, rotary_embedding
+from repro.models.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def _pad_heads_grouped(w, cfg: ModelConfig, *, head_axis: int):
+    """Zero-pad q heads to cfg.q_heads, inserting pads at the END of each
+    KV group so every real head keeps its original kv assignment — the
+    padded heads produce zero scores -> uniform attention -> zeroed by the
+    zero wo rows, so the math is exact (§Perf yi-34b iteration)."""
+    h, kv, hp = cfg.num_heads, cfg.num_kv_heads, cfg.q_heads
+    if hp == h:
+        return w
+    assert h % kv == 0 and hp % kv == 0, (
+        "padded_q_heads requires kv | heads and kv | padded (MHA models "
+        "would need paired q+kv padding)", h, kv, hp)
+    per, per_pad = h // kv, hp // kv
+    shape = list(w.shape)
+    shape[head_axis:head_axis + 1] = [kv, per]
+    w = w.reshape(shape)
+    pad = [(0, 0)] * len(shape)
+    pad[head_axis + 1] = (0, per_pad - per)
+    w = jnp.pad(w, pad)
+    shape[head_axis:head_axis + 2] = [hp]
+    return w.reshape(shape)
+
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    hd = cfg.hd
+    ks = jax.random.split(key, 5)
+    wq = init_dense(ks[0], cfg.d_model, cfg.num_heads * hd, cfg.pdtype).reshape(
+        cfg.d_model, cfg.num_heads, hd)
+    wo = init_dense(ks[3], cfg.num_heads * hd, cfg.d_model, cfg.pdtype).reshape(
+        cfg.num_heads, hd, cfg.d_model)
+    p = {
+        "wq": _pad_heads_grouped(wq, cfg, head_axis=1),
+        "wk": init_dense(ks[1], cfg.d_model, cfg.num_kv_heads * hd, cfg.pdtype).reshape(
+            cfg.d_model, cfg.num_kv_heads, hd),
+        "wv": init_dense(ks[2], cfg.d_model, cfg.num_kv_heads * hd, cfg.pdtype).reshape(
+            cfg.d_model, cfg.num_kv_heads, hd),
+        "wo": _pad_heads_grouped(wo, cfg, head_axis=0),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((cfg.q_heads, hd), cfg.pdtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads, hd), cfg.pdtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads, hd), cfg.pdtype)
+    return p
+
+
+def _qkv(p: dict, x: jnp.ndarray, kv_x: jnp.ndarray):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = constrain(q, "batch", "un", "un", "un")
+    k = constrain(k, "batch", "un", "un", "un")
+    v = constrain(v, "batch", "un", "un", "un")
+    return q, k, v
+
+
+def _attend(q, k, v, mask, num_kv_heads: int):
+    """q: (B,Sq,H,hd) k/v: (B,Sk,KV,hd); GQA groups H/KV."""
+    b, sq, h, hd = q.shape
+    groups = h // num_kv_heads
+    q = q.reshape(b, sq, num_kv_heads, groups, hd)
+    scores = jnp.einsum("bsngk,btnk->bnsgt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    # keep the batch dim of the S x S scores sharded — XLA propagation will
+    # otherwise replicate it in favor of exotic head shardings (34 GB/dev
+    # measured on train_4k; EXPERIMENTS.md §Perf)
+    scores = constrain(scores, "batch", "un", "un", "un", "un")
+    if mask is not None:
+        scores = jnp.where(mask[:, None, :, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnsgt,btnk->bsngk", probs.astype(v.dtype), v)
+    out = constrain(out, "batch", "un", "un", "un", "un")
+    return out.reshape(b, sq, h, hd)
+
+
+def _attend_chunked(q, k, v, num_kv_heads: int, *, chunk: int, causal: bool,
+                    window: int = 0):
+    """Online-softmax attention over key chunks (flash-attention schedule,
+    beyond-paper optimization for the memory-bound train cells: peak temp
+    drops from O(S^2) to O(S*chunk); EXPERIMENTS.md §Perf).
+
+    Jacobian-complete: plain lax.scan of differentiable ops, so remat/grad
+    work unchanged.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    groups = h // num_kv_heads
+    assert sk % chunk == 0, (sk, chunk)
+    qr = q.reshape(b, sq, num_kv_heads, groups, hd).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    kc = k.reshape(b, sk // chunk, chunk, num_kv_heads, hd)
+    vc = v.reshape(b, sk // chunk, chunk, num_kv_heads, hd)
+    qpos = jnp.arange(sq)
+
+    def step(carry, inp):
+        m_run, l_run, acc = carry
+        ci, k_blk, v_blk = inp
+        s = jnp.einsum("bsngk,btnk->bnsgt", qr, k_blk.astype(jnp.float32)) * scale
+        s = constrain(s, "batch", "un", "un", "un", "un")
+        kpos = ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask = kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(mask[None, None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bnsgt,btnk->bnsgk", p, v_blk.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, num_kv_heads, sq, groups), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, num_kv_heads, sq, groups), jnp.float32)
+    a0 = jnp.zeros((b, num_kv_heads, sq, groups, hd), jnp.float32)
+    idx = jnp.arange(sk // chunk)
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                      (idx, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+    out = acc / jnp.maximum(l_f[..., None], 1e-30)
+    out = jnp.moveaxis(out, 1, 2)  # (b, sq, n, g, hd)
+    return out.reshape(b, sq, h, hd).astype(v.dtype)
+
+
+def causal_mask(sq: int, sk: int, *, window: int = 0, offset: int = 0) -> jnp.ndarray:
+    """(1, Sq, Sk) bool; query i attends key j iff j <= i+offset (and within
+    the sliding window when window > 0)."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(sk)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m = jnp.logical_and(m, kj > qi - window)
+    return m[None]
+
+
+def attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *, causal: bool = True,
+              positions: Optional[jnp.ndarray] = None,
+              kv_x: Optional[jnp.ndarray] = None,
+              rope: bool = True) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill). kv_x != None => cross-attn."""
+    kv_in = x if kv_x is None else kv_x
+    q, k, v = _qkv(p, x, kv_in)
+    if rope and kv_x is None:
+        if positions is None:
+            positions = jnp.arange(x.shape[1])
+        cos, sin = rotary_embedding(positions, cfg.hd, cfg.rope_theta)
+        q = apply_rotary(q, cos, sin)
+        k = apply_rotary(k, cos, sin)
+    if cfg.attn_chunk and kv_x is None and x.shape[1] % cfg.attn_chunk == 0:
+        out = _attend_chunked(q, k, v, cfg.num_kv_heads, chunk=cfg.attn_chunk,
+                              causal=causal, window=cfg.sliding_window)
+    else:
+        mask = None
+        if causal and kv_x is None:
+            mask = causal_mask(x.shape[1], kv_in.shape[1], window=cfg.sliding_window)
+        out = _attend(q, k, v, mask, cfg.num_kv_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention_with_cache(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                         positions: Optional[jnp.ndarray] = None):
+    """Causal self-attention that also returns rotary-applied (k, v) for a
+    prefill cache. Returns (out, k, v)."""
+    q, k, v = _qkv(p, x, x)
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+    cos, sin = rotary_embedding(positions, cfg.hd, cfg.rope_theta)
+    q = apply_rotary(q, cos, sin)
+    k = apply_rotary(k, cos, sin)
+    if cfg.attn_chunk and x.shape[1] % cfg.attn_chunk == 0:
+        out = _attend_chunked(q, k, v, cfg.num_kv_heads, chunk=cfg.attn_chunk,
+                              causal=True, window=cfg.sliding_window)
+    else:
+        mask = causal_mask(x.shape[1], x.shape[1], window=cfg.sliding_window)
+        out = _attend(q, k, v, mask, cfg.num_kv_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), k, v
+
+
+def attention_decode(p: dict, x: jnp.ndarray, cache: dict, position: jnp.ndarray,
+                     cfg: ModelConfig) -> tuple[jnp.ndarray, dict]:
+    """One-token decode against a KV cache.
+
+    x: (B, 1, d). cache: {"k": (B, S_max, KV, hd), "v": ...}. position: scalar
+    int32 — index of the new token. With sliding-window configs the cache is
+    still laid out full-length; masking enforces the window (ring-buffer
+    layout is a serving-engine optimization, see serve/engine.py).
+    """
+    q, k_new, v_new = _qkv(p, x, x)
+    cos, sin = rotary_embedding(position[None], cfg.hd, cfg.rope_theta)
+    q = apply_rotary(q, cos, sin)
+    k_new = apply_rotary(k_new, cos, sin)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                           (0, position, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                           (0, position, 0, 0))
+    s_max = k_cache.shape[1]
+    kj = jnp.arange(s_max)[None, :]
+    mask = kj <= position
+    if cfg.sliding_window > 0:
+        mask = jnp.logical_and(mask, kj > position - cfg.sliding_window)
+    out = _attend(q, k_cache, v_cache, mask[:, None, :] * jnp.ones((x.shape[0], 1, 1), bool),
+                  cfg.num_kv_heads)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def cross_attention_decode(p: dict, x: jnp.ndarray, enc_k: jnp.ndarray,
+                           enc_v: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Decode-time cross-attention against precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    out = _attend(q, enc_k, enc_v, None, cfg.num_kv_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def encode_kv(p: dict, enc_out: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v

@@ -1,0 +1,181 @@
+"""Model configuration shared by the whole zoo."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str = "decoder"          # decoder | encdec | hybrid | ssm | vlm
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: Optional[int] = None   # default d_model // num_heads
+    qkv_bias: bool = False
+    sliding_window: int = 0          # 0 = full attention
+    tie_embeddings: bool = False
+    # --- MoE ---
+    moe_num_experts: int = 0
+    moe_top_k: int = 0
+    moe_num_shared: int = 0          # shared experts (DeepSeekMoE)
+    moe_d_ff: int = 0                # per-expert hidden (fine-grained MoE)
+    moe_shard_mode: str = "expert"   # "expert" (EP) | "ffn" (TP inside expert)
+    moe_capacity_factor: float = 1.25
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_kernel: int = 4
+    attn_every: int = 0              # hybrid: shared attn block period (Zamba2)
+    # --- enc-dec ---
+    enc_layers: int = 0
+    # --- modality frontend stubs ---
+    frontend: str = "none"           # none | audio_frames | vision_patches
+    num_patches: int = 256
+    # --- numerics / training ---
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    remat: str = "full"              # full | none
+    optimizer: str = "adamw"         # adamw | adafactor
+    # --- shape-cell policy (assignment rules) ---
+    sub_quadratic: bool = False      # may run long_500k
+    has_decoder: bool = True         # encoder-only archs would skip decode
+    max_train_seq: int = 4096
+    vocab_pad_multiple: int = 128    # embeddings padded so vocab shards 16-way
+    scan_layers: bool = True         # False: unroll (dry-run cost probes)
+    attn_chunk: int = 0              # >0: online-softmax over key chunks
+                                     # (flash-style; kills the SxS temp)
+    padded_q_heads: int = 0          # pad q heads (zeros, per KV group) so
+                                     # heads shard over model — kills the
+                                     # S x S score psum (§Perf yi-34b)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return (self.vocab_size + m - 1) // m * m
+
+    @property
+    def q_heads(self) -> int:
+        """Physical q-head count (>= num_heads when padded for sharding)."""
+        return self.padded_q_heads or self.num_heads
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // max(self.num_heads, 1)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_num_experts > 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        d, l, v = self.d_model, self.num_layers, self.vocab_size
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d
+        per_layer = 0
+        if self.family in ("decoder", "encdec", "vlm"):
+            per_layer += self._attn_params() + self._mlp_params()
+            per_layer += 2 * d  # norms
+        elif self.family == "ssm":
+            per_layer += self._ssm_params() + d
+        elif self.family == "hybrid":
+            per_layer += self._ssm_params() + d  # mamba-only backbone (Zamba2)
+        total += l * per_layer
+        if self.family == "hybrid" and self.attn_every:
+            # one weight-shared transformer block: attn + MLP (this is where
+            # Zamba2's d_ff lives — NOT in every backbone layer)
+            total += self._attn_params() + 3 * d * self.d_ff + 2 * d
+        if self.family == "encdec":
+            total += self.enc_layers * (self._attn_params() + self._mlp_params() + 2 * d)
+            total += l * (self._attn_params() + d)  # cross-attention per dec layer
+        return total
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE counts top-k + shared only)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, l = self.d_model, self.num_layers
+        dense = self.param_count() - l * self._mlp_params()
+        ff = self.moe_d_ff or self.d_ff
+        active_mlp = 3 * d * ff * (self.moe_top_k + self.moe_num_shared)
+        router = d * self.moe_num_experts
+        return dense + l * (active_mlp + router)
+
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.hd
+        qkv = d * (self.num_heads + 2 * self.num_kv_heads) * hd
+        out = self.num_heads * hd * d
+        bias = (self.num_heads + 2 * self.num_kv_heads) * hd if self.qkv_bias else 0
+        return qkv + out + bias
+
+    def _mlp_params(self) -> int:
+        d = self.d_model
+        if self.is_moe:
+            ff = self.moe_d_ff or self.d_ff
+            router = d * self.moe_num_experts
+            experts = self.moe_num_experts * 3 * d * ff
+            shared = self.moe_num_shared * 3 * d * ff
+            return router + experts + shared
+        return 3 * d * self.d_ff  # SwiGLU: in/gate/out
+
+    def _ssm_params(self) -> int:
+        d, di, n = self.d_model, self.d_inner, self.ssm_state
+        h = self.ssm_heads
+        in_proj = d * (2 * di + 2 * n + h)  # x, z, B, C, dt
+        conv = self.conv_kernel * (di + 2 * n)
+        out = di * d
+        return in_proj + conv + out + 2 * h + di  # + A, dt_bias, D
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A smoke-test-sized sibling of ``cfg`` (same family/topology)."""
+    small: dict = dict(
+        num_layers=min(cfg.num_layers, 2),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(4, max(1, cfg.num_kv_heads * 4 // max(cfg.num_heads, 1))),
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        enc_layers=min(cfg.enc_layers, 2),
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat="none",
+        num_patches=8,
+        padded_q_heads=0,
+    )
+    if cfg.is_moe:
+        small.update(moe_num_experts=8, moe_top_k=min(cfg.moe_top_k, 2),
+                     moe_num_shared=min(cfg.moe_num_shared, 1), moe_d_ff=64)
+    if cfg.ssm_state:
+        small.update(ssm_state=16, ssm_head_dim=32)
+    if cfg.attn_every:
+        small.update(attn_every=2)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

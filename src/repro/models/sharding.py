@@ -1,0 +1,245 @@
+"""Parameter/activation sharding rules for the production mesh.
+
+Mesh axes: ``data`` (DP + FSDP), ``model`` (TP/EP), optional ``pod``
+(data-parallel across pods; params replicated over pod, gradients
+all-reduced). Rules are path-based over the param pytree.
+
+Divisibility fallbacks (recorded in EXPERIMENTS.md §Dry-run): head counts
+in the assigned pool aren't all multiples of 16 (yi-34b 56H, qwen1.5 20H,
+GQA kv=4/8). The resolver tries, in order: shard heads over ``model`` →
+shard head_dim over ``model`` (contracted-dim sharding; XLA inserts the
+all-reduce) → replicate that dim. Vocab is padded to a multiple of 128
+(config.padded_vocab) so embeddings always shard.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+def _attn_proj_spec(cfg: ModelConfig, mesh: Mesh, *, heads: int, out: bool) -> P:
+    """(d, H, hd) for qkv / (H, hd, d) for o. Heads shard over ``model`` when
+    divisible (pad with config.padded_q_heads when they are not); otherwise
+    the projection replicates over model (FSDP over data still applies).
+    NEVER shard head_dim: a contracted-dim sharding of q/k forces an
+    all-reduce of the S x S scores — measured 60 GB/layer on yi-34b
+    (EXPERIMENTS.md §Perf)."""
+    d_ok = _div(cfg.d_model, mesh, "data")
+    d_ax = "data" if d_ok else None
+    if _div(heads, mesh, "model"):
+        return P("model", None, d_ax) if out else P(d_ax, "model", None)
+    return P(None, None, d_ax) if out else P(d_ax, None, None)
+
+
+def _mlp_specs(cfg: ModelConfig, mesh: Mesh, d_ff: int) -> dict:
+    d_ax = "data" if _div(cfg.d_model, mesh, "data") else None
+    f_ax = "model" if _div(d_ff, mesh, "model") else None
+    return {"w_in": P(d_ax, f_ax), "w_gate": P(d_ax, f_ax), "w_out": P(f_ax, d_ax)}
+
+
+def _moe_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    ff = cfg.moe_d_ff or cfg.d_ff
+    d_ax = "data" if _div(cfg.d_model, mesh, "data") else None
+    if cfg.moe_shard_mode == "expert" and _div(cfg.moe_num_experts, mesh, "model"):
+        e_ax, f_ax = "model", None
+    else:
+        e_ax, f_ax = None, ("model" if _div(ff, mesh, "model") else None)
+    specs = {
+        "router": P(d_ax, None),
+        "w_in": P(e_ax, d_ax, f_ax),
+        "w_gate": P(e_ax, d_ax, f_ax),
+        "w_out": P(e_ax, f_ax, d_ax),
+    }
+    if cfg.moe_num_shared:
+        sff = ff * cfg.moe_num_shared
+        specs["shared"] = _mlp_specs(cfg, mesh, sff)
+    return specs
+
+
+def _attn_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    specs = {
+        "wq": _attn_proj_spec(cfg, mesh, heads=cfg.q_heads, out=False),
+        "wk": _attn_proj_spec(cfg, mesh, heads=cfg.num_kv_heads, out=False),
+        "wv": _attn_proj_spec(cfg, mesh, heads=cfg.num_kv_heads, out=False),
+        "wo": _attn_proj_spec(cfg, mesh, heads=cfg.q_heads, out=True),
+    }
+    if cfg.qkv_bias:
+        hq = "model" if _div(cfg.q_heads, mesh, "model") else None
+        hkv = "model" if _div(cfg.num_kv_heads, mesh, "model") else None
+        specs.update(bq=P(hq, None), bk=P(hkv, None), bv=P(hkv, None))
+    return specs
+
+
+def _mamba_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    d_ax = "data" if _div(cfg.d_model, mesh, "data") else None
+    proj_out = 2 * cfg.d_inner + 2 * cfg.ssm_state + cfg.ssm_heads
+    e_ax = "model" if _div(proj_out, mesh, "model") else None
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    c_ax = "model" if _div(conv_dim, mesh, "model") else None
+    h_ax = "model" if _div(cfg.ssm_heads, mesh, "model") else None
+    di_ax = "model" if _div(cfg.d_inner, mesh, "model") else None
+    return {
+        "w_in": P(d_ax, e_ax),
+        "conv_w": P(None, c_ax), "conv_b": P(c_ax),
+        "a_log": P(h_ax), "dt_bias": P(h_ax), "d_skip": P(h_ax),
+        "w_out": P(di_ax, d_ax),
+    }
+
+
+def _layer_specs(cfg: ModelConfig, mesh: Mesh, *, cross: bool = False) -> dict:
+    if cfg.family in ("decoder", "vlm", "encdec"):
+        p = {"ln1": P(None), "ln2": P(None), "attn": _attn_specs(cfg, mesh),
+             "mlp": _moe_specs(cfg, mesh) if cfg.is_moe else _mlp_specs(cfg, mesh, cfg.d_ff)}
+        if cross:
+            p["ln_x"] = P(None)
+            p["xattn"] = _attn_specs(cfg, mesh)
+        return p
+    if cfg.family == "ssm":
+        return {"ln1": P(None), "mamba": _mamba_specs(cfg, mesh)}
+    if cfg.family == "hybrid":
+        return {"ln1": P(None), "mamba": _mamba_specs(cfg, mesh)}
+    raise ValueError(cfg.family)
+
+
+def _prepend(spec_tree, axis=None):
+    """Add a leading (layer-stack) dim to every PartitionSpec in a tree."""
+    return jax.tree.map(lambda s: P(axis, *s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    """PartitionSpec pytree matching transformer.init_params output."""
+    v_ax = "model" if _div(cfg.padded_vocab, mesh, "model") else None
+    d_ax = "data" if _div(cfg.d_model, mesh, "data") else None
+    specs: dict = {
+        "embed": P(v_ax, d_ax),
+        "final_ln": P(None),
+        "layers": _prepend(_layer_specs(cfg, mesh, cross=(cfg.family == "encdec"))),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(d_ax, v_ax)
+    if cfg.family == "hybrid" and cfg.attn_every:
+        specs["shared_attn"] = {"ln": P(None), "attn": _attn_specs(cfg, mesh),
+                                "ln2": P(None), "mlp": _mlp_specs(cfg, mesh, cfg.d_ff)}
+    if cfg.family == "encdec":
+        specs["encoder"] = {"layers": _prepend(_layer_specs(cfg, mesh)),
+                            "final_ln": P(None)}
+    return specs
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, *, batch: int) -> dict:
+    """Input sharding for a train batch."""
+    b = batch_axes(mesh)
+    b_ax = b if all(a in mesh.axis_names for a in b) else None
+    spec = {"tokens": P(b_ax, None), "labels": P(b_ax, None)}
+    if cfg.family == "encdec":
+        spec["enc_embeds"] = P(b_ax, None, None)
+    if cfg.family == "vlm":
+        spec["patch_embeds"] = P(b_ax, None, None)
+    return spec
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, *, batch: int, seq_shard: bool = False) -> dict:
+    """KV / SSM-state cache sharding for decode.
+
+    seq_shard=True (long_500k, batch=1): shard the cache *sequence* dim over
+    ``data`` — decode-time context parallelism; softmax over the sharded key
+    axis psums (DESIGN.md §5)."""
+    b = batch_axes(mesh)
+    bsz_total = 1
+    for a in b:
+        bsz_total *= mesh.shape[a]
+    b_ax = b if batch % bsz_total == 0 and not seq_shard else None
+    s_ax = "data" if seq_shard else None
+    kv_ax = "model" if _div(cfg.num_kv_heads, mesh, "model") else None
+    # decode caches MAY shard head_dim: the decode score psum is one token's
+    # (B, KV, 1, G, S) — tiny next to the cache itself. (Training forbids
+    # hd-sharding because there the psum is the full S x S scores.)
+    hd_ax = None if kv_ax else ("model" if _div(cfg.hd, mesh, "model") else None)
+    kv_spec = P(None, b_ax, s_ax, kv_ax, hd_ax)
+    if cfg.family in ("decoder", "vlm"):
+        return {"k": kv_spec, "v": kv_spec}
+    if cfg.family == "encdec":
+        return {"k": kv_spec, "v": kv_spec, "xk": kv_spec, "xv": kv_spec}
+    h_ax = "model" if _div(cfg.ssm_heads, mesh, "model") else None
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    c_ax = "model" if _div(conv_dim, mesh, "model") else None
+    ssm = {"state": P(None, b_ax, h_ax, None, None), "conv": P(None, b_ax, None, c_ax)}
+    if cfg.family == "ssm":
+        return ssm
+    if cfg.family == "hybrid":
+        return dict(ssm, k=kv_spec, v=kv_spec)
+    raise ValueError(cfg.family)
+
+
+def to_shardings(tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (trace-time, context-scoped)
+# ---------------------------------------------------------------------------
+# XLA's sharding propagation sometimes prefers exotic head/group shardings
+# that replicate the batch dim of the S x S attention scores — measured as a
+# 34 GB/device temp on tinyllama train_4k (EXPERIMENTS.md §Perf iteration 1).
+# Model code stays mesh-agnostic: constraints apply only when a launcher
+# traces inside `activation_mesh(mesh)`.
+
+import contextlib
+import threading
+
+_ACT = threading.local()
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh):
+    prev = getattr(_ACT, "mesh", None)
+    _ACT.mesh = mesh
+    try:
+        yield
+    finally:
+        _ACT.mesh = prev
+
+
+def constrain(x, *dims):
+    """Constrain activation sharding by logical dim tags.
+
+    Tags per dim: "batch" (data[+pod] if divisible), a mesh axis name
+    (used if divisible), None (replicated), "un" (unconstrained — let
+    propagation decide). No-op outside an activation_mesh context.
+    """
+    mesh = getattr(_ACT, "mesh", None)
+    if mesh is None:
+        return x
+    un = P.UNCONSTRAINED
+    resolved = []
+    for tag, size in zip(dims, x.shape):
+        if tag == "batch":
+            axes = tuple(a for a in batch_axes(mesh) if a in mesh.axis_names)
+            tot = 1
+            for a in axes:
+                tot *= mesh.shape[a]
+            resolved.append(axes if tot and size % tot == 0 else un)
+        elif tag == "un":
+            resolved.append(un)
+        elif tag is None:
+            resolved.append(None)
+        elif tag in mesh.axis_names:
+            resolved.append(tag if size % mesh.shape[tag] == 0 else un)
+        else:  # unknown axis for this mesh — leave to propagation
+            resolved.append(un)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*resolved)))

@@ -1,0 +1,161 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060) block.
+
+Chunked train/prefill path: intra-chunk "attention-like" term + inter-chunk
+state recurrence (lax.scan over chunks), O(S·Q) instead of O(S^2). Decode
+path: O(1) state update — which is what makes the ssm/hybrid architectures
+eligible for the long_500k cell.
+
+Layout: x (B,S,d_inner) viewed as (B,S,H,P) heads; state (B,H,P,N);
+single B/C group (G=1) as in the released Mamba-2 models.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection: [x, z, B, C, dt]
+        "w_in": init_dense(ks[0], d, 2 * di + 2 * n + h, cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim), jnp.float32)
+                   * 0.1).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.pdtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "w_out": init_dense(ks[2], di, d, cfg.pdtype),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d, kernel K unrolled (K is 4)."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    s = u.shape[1]
+    out = sum(pad[:, i:i + s, :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(dA: jnp.ndarray) -> jnp.ndarray:
+    """dA: (..., Q) -> L-matrix log-weights (..., Q, Q): sum_{l=j+1..i} dA_l
+    for j <= i, -inf above the diagonal."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig, *, chunk: int = 128,
+                   return_cache: bool = False):
+    """Full-sequence SSD. x: (B, S, d_model) -> (B, S, d_model).
+
+    return_cache=True additionally returns the decode cache after the last
+    token: {"state": (B,H,N,P) final SSM state, "conv": last K-1 conv inputs}.
+    """
+    bsz, s, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_head_dim
+    q = min(chunk, s)
+    while s % q != 0:
+        q //= 2
+    nc = s // q
+
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    from repro.models.sharding import constrain
+    proj = constrain(proj, "batch", "un", "un")
+    xc, z, bmat, cmat, dt = jnp.split(proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xc, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    a = -jnp.exp(p["a_log"])                                  # (H,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    xh = xc.reshape(bsz, s, h, pdim).astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+
+    # chunk views
+    dA = (dt * a).reshape(bsz, nc, q, h)                      # (B,nc,Q,H)
+    xck = xh.reshape(bsz, nc, q, h, pdim)
+    bk = bmat.reshape(bsz, nc, q, n)
+    ck = cmat.reshape(bsz, nc, q, n)
+    dtk = dt.reshape(bsz, nc, q, h)
+
+    # --- intra-chunk (the "duality" attention-like term) ---
+    logl = _segsum(jnp.moveaxis(dA, -1, -2))                  # (B,nc,H,Q,Q)
+    lmat = jnp.exp(logl)
+    scores = jnp.einsum("bcin,bcjn->bcij", ck, bk)            # (B,nc,Q,Q)
+    w = scores[:, :, None] * lmat * jnp.moveaxis(dtk, -1, -2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", w, xck)
+
+    # --- chunk final states + inter-chunk scan ---
+    cs = jnp.cumsum(dA, axis=2)                               # (B,nc,Q,H)
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)             # (B,nc,Q,H)
+    states = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", decay_to_end * dtk, bk, xck)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                    # (B,nc,H)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp                                         # (B,H,N,P), (B,H)
+        h_new = h_prev * dec[:, :, None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, n, pdim), jnp.float32)
+    h_final, h_in = jax.lax.scan(
+        scan_fn, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                           # (B,nc,H,N,P) state entering chunk
+
+    in_decay = jnp.exp(cs)                                    # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", ck, in_decay, h_in)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, pdim)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = (y.reshape(bsz, s, di) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    if return_cache:
+        k = cfg.conv_kernel
+        tail = conv_in[:, -(k - 1):, :] if s >= k - 1 else jnp.pad(
+            conv_in, ((0, 0), (k - 1 - s, 0), (0, 0)))
+        return out, {"state": h_final, "conv": tail}
+    return out
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode(p: dict, x: jnp.ndarray, cache: dict, cfg: ModelConfig) -> tuple[jnp.ndarray, dict]:
+    """One-token step. x: (B, 1, d_model)."""
+    bsz = x.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_head_dim
+
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])[:, 0]
+    xc, z, bvec, cvec, dt = jnp.split(proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xc, bvec, cvec], axis=-1)      # (B, conv_dim)
+    window = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)  # (B,K,conv)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])
+    xc, bvec, cvec = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    a = -jnp.exp(p["a_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    xh = xc.reshape(bsz, h, pdim).astype(jnp.float32)
+    decay = jnp.exp(dt * a)                                   # (B,H)
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, bvec.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhnp->bhp", cvec.astype(jnp.float32), state)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = (y.reshape(bsz, di) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["w_out"])[:, None]
+    return out, {"state": state, "conv": window[:, 1:]}

@@ -1,0 +1,454 @@
+"""Model assembly for every family in the zoo.
+
+Families:
+  decoder — llama-style decoder-only LM (dense or MoE), scan-over-layers.
+  ssm     — attention-free Mamba-2 stack.
+  hybrid  — Mamba-2 backbone + ONE weight-shared attention block applied
+            every ``attn_every`` layers (Zamba2).
+  encdec  — Whisper-style: bidirectional encoder over stub frame embeddings,
+            causal decoder with cross-attention.
+  vlm     — decoder-only backbone consuming [patch-embeddings ; tokens]
+            (InternVL2: the ViT frontend is a stub per the assignment).
+
+Params are nested dicts; repeated layers are stacked on a leading axis and
+consumed by ``lax.scan`` (compile-time O(1) in depth). ``cfg.remat``
+checkpoints each block.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (attention, attention_decode,
+                                    cross_attention_decode, encode_kv,
+                                    init_attention)
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense, init_embed, rms_norm, swiglu
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.sharding import constrain
+from repro.models.ssm import (init_mamba2, mamba2_decode, mamba2_forward,
+                              mamba2_init_cache)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_mlp(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": init_dense(ks[0], cfg.d_model, cfg.d_ff, cfg.pdtype),
+        "w_gate": init_dense(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype),
+        "w_out": init_dense(ks[2], cfg.d_ff, cfg.d_model, cfg.pdtype),
+    }
+
+
+def _init_decoder_layer(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), cfg.pdtype),
+        "attn": init_attention(ks[0], cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.pdtype),
+        "mlp": init_moe(ks[1], cfg) if cfg.is_moe else _init_mlp(ks[1], cfg),
+    }
+    if cross:
+        p["ln_x"] = jnp.ones((cfg.d_model,), cfg.pdtype)
+        p["xattn"] = init_attention(ks[2], cfg, cross=True)
+    return p
+
+
+def _init_ssm_layer(key, cfg: ModelConfig, *, with_mlp: bool) -> dict:
+    ks = jax.random.split(key, 2)
+    p = {"ln1": jnp.ones((cfg.d_model,), cfg.pdtype), "mamba": init_mamba2(ks[0], cfg)}
+    if with_mlp:
+        p["ln2"] = jnp.ones((cfg.d_model,), cfg.pdtype)
+        p["mlp"] = _init_mlp(ks[1], cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, 8)
+    layer_keys = jax.random.split(keys[0], cfg.num_layers)
+    if cfg.family in ("decoder", "vlm"):
+        layers = jax.vmap(lambda k: _init_decoder_layer(k, cfg))(layer_keys)
+    elif cfg.family == "ssm":
+        layers = jax.vmap(lambda k: _init_ssm_layer(k, cfg, with_mlp=False))(layer_keys)
+    elif cfg.family == "hybrid":
+        # Zamba2: the backbone is mamba-only; the d_ff MLP lives in the
+        # weight-shared transformer block (config.param_count matches 1.2B
+        # only with this layout)
+        layers = jax.vmap(lambda k: _init_ssm_layer(k, cfg, with_mlp=False))(layer_keys)
+    elif cfg.family == "encdec":
+        layers = jax.vmap(lambda k: _init_decoder_layer(k, cfg, cross=True))(layer_keys)
+    else:
+        raise ValueError(cfg.family)
+
+    params = {
+        "embed": init_embed(keys[1], cfg.padded_vocab, cfg.d_model, cfg.pdtype),
+        "layers": layers,
+        "final_ln": jnp.ones((cfg.d_model,), cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(keys[2], cfg.d_model, cfg.padded_vocab, cfg.pdtype)
+    if cfg.family == "hybrid" and cfg.attn_every:
+        params["shared_attn"] = {
+            "ln": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "attn": init_attention(keys[3], cfg),
+            "ln2": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "mlp": _init_mlp(keys[5], cfg),
+        }
+    if cfg.family == "encdec":
+        enc_keys = jax.random.split(keys[4], cfg.enc_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_decoder_layer(k, cfg))(enc_keys),
+            "final_ln": jnp.ones((cfg.d_model,), cfg.pdtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _decoder_block(lp: dict, x: jnp.ndarray, cfg: ModelConfig, *, causal: bool,
+                   positions=None, enc_out=None) -> jnp.ndarray:
+    # pin the residual stream batch-sharded: without this XLA prefers to
+    # all-gather activations over ``data`` (computing every projection on
+    # the full global batch, 16x redundant) instead of FSDP-gathering the
+    # weights (§Perf deepseek iteration 2)
+    x = constrain(x, "batch", "un", "un")
+    h = attention(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+                  causal=causal, positions=positions)
+    x = x + h
+    if enc_out is not None:
+        h = attention(lp["xattn"], rms_norm(x, lp["ln_x"], cfg.norm_eps), cfg,
+                      causal=False, kv_x=enc_out, rope=False)
+        x = x + h
+    y = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        return x + moe_ffn(lp["mlp"], y, cfg)
+    return x + swiglu(y, lp["mlp"]["w_in"], lp["mlp"]["w_gate"], lp["mlp"]["w_out"])
+
+
+def _ssm_block(lp: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = constrain(x, "batch", "un", "un")
+    x = x + mamba2_forward(lp["mamba"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg)
+    if "mlp" in lp:
+        y = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + swiglu(y, lp["mlp"]["w_in"], lp["mlp"]["w_gate"], lp["mlp"]["w_out"])
+    return x
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+
+def _layer_slice(layers, i: int):
+    return jax.tree.map(lambda a: a[i], layers)
+
+
+def _scan_or_unroll(blk, x, layers, cfg: ModelConfig):
+    """lax.scan over stacked layers, or a python unroll when
+    cfg.scan_layers=False (used by the dry-run cost probes: XLA's
+    HloCostAnalysis counts while-loop bodies once, so probes unroll)."""
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda c, lp: (blk(lp, c), None), x, layers)
+        return x
+    n = jax.tree.leaves(layers)[0].shape[0]
+    for i in range(n):
+        x = blk(_layer_slice(layers, i), x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: ModelConfig, *,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            enc_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """tokens: (B, S) int32 -> logits (B, S_total, V).
+
+    prefix_embeds: (B, P, d) modality embeddings prepended to the token
+    embeddings (vlm / the assignment's stub frontends).
+    enc_embeds: (B, S_enc, d) encoder-side stub frame embeddings (encdec).
+    """
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.cdtype), x], axis=1)
+
+    enc_out = None
+    if cfg.family == "encdec":
+        assert enc_embeds is not None, "encdec needs encoder embeddings"
+        enc_out = _encode(params, enc_embeds, cfg)
+
+    if cfg.family in ("decoder", "vlm", "encdec"):
+        blk = _maybe_remat(
+            partial(_decoder_block, cfg=cfg, causal=True, enc_out=enc_out), cfg)
+        x = _scan_or_unroll(blk, x, params["layers"], cfg)
+    elif cfg.family == "ssm":
+        blk = _maybe_remat(partial(_ssm_block, cfg=cfg), cfg)
+        x = _scan_or_unroll(blk, x, params["layers"], cfg)
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(params, x, cfg)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+
+
+def _encode(params: dict, enc_embeds: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = enc_embeds.astype(cfg.cdtype)
+    blk = _maybe_remat(partial(_decoder_block, cfg=cfg, causal=False), cfg)
+    x = _scan_or_unroll(blk, x, params["encoder"]["layers"], cfg)
+    return rms_norm(x, params["encoder"]["final_ln"], cfg.norm_eps)
+
+
+def _hybrid_forward(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Mamba scan with the weight-shared attention block every attn_every
+    layers (Zamba2). The shared block's weights are closure constants, so
+    the scan still compiles O(1) in depth."""
+    sa = params["shared_attn"]
+    mamba_blk = _maybe_remat(partial(_ssm_block, cfg=cfg), cfg)
+
+    def shared(x):
+        x = x + attention(sa["attn"], rms_norm(x, sa["ln"], cfg.norm_eps), cfg, causal=True)
+        y = rms_norm(x, sa["ln2"], cfg.norm_eps)
+        return x + swiglu(y, sa["mlp"]["w_in"], sa["mlp"]["w_gate"], sa["mlp"]["w_out"])
+
+    def body(carry, inp):
+        i, lp = inp
+        x = carry
+        x = jax.lax.cond(i % cfg.attn_every == 0, shared, lambda v: v, x)
+        return mamba_blk(lp, x), None
+
+    idx = jnp.arange(cfg.num_layers)
+    x, _ = _scan_with_cache(body, x, (idx, params["layers"]), cfg.scan_layers)
+    return x
+
+
+
+def _scan_with_cache(body, carry, inputs, scan: bool):
+    """scan, or python-unroll + restack ys (dry-run cost probes)."""
+    if scan:
+        return jax.lax.scan(body, carry, inputs)
+    n = jax.tree.leaves(inputs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], inputs))
+        ys.append(y)
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# prefill (forward that also materializes the decode cache)
+# ---------------------------------------------------------------------------
+
+def prefill(params: dict, tokens: jnp.ndarray, cfg: ModelConfig, *,
+            enc_embeds: Optional[jnp.ndarray] = None,
+            prefix_embeds: Optional[jnp.ndarray] = None) -> tuple[jnp.ndarray, dict]:
+    """Full forward over the prompt, returning (logits, decode cache).
+
+    Cache sequence length == prompt length; serve/engine.py pads it out to
+    the generation horizon before decoding.
+    """
+    from repro.models.attention import attention_with_cache, encode_kv
+
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.cdtype), x], axis=1)
+
+    if cfg.family in ("decoder", "vlm", "encdec"):
+        enc_out = None
+        if cfg.family == "encdec":
+            enc_out = _encode(params, enc_embeds, cfg)
+
+        def body(carry, lp):
+            x = carry
+            h, k, v = attention_with_cache(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg)
+            x = x + h
+            ys = {"k": k, "v": v}
+            if enc_out is not None:
+                h = attention(lp["xattn"], rms_norm(x, lp["ln_x"], cfg.norm_eps), cfg,
+                              causal=False, kv_x=enc_out, rope=False)
+                x = x + h
+                xk, xv = encode_kv(lp["xattn"], enc_out)
+                ys.update(xk=xk, xv=xv)
+            y = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                x = x + moe_ffn(lp["mlp"], y, cfg)
+            else:
+                x = x + swiglu(y, lp["mlp"]["w_in"], lp["mlp"]["w_gate"], lp["mlp"]["w_out"])
+            return x, ys
+
+        x, cache = _scan_with_cache(body, x, params["layers"], cfg.scan_layers)
+
+    elif cfg.family == "ssm":
+        def body(carry, lp):
+            x = carry
+            h, c = mamba2_forward(lp["mamba"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+                                  return_cache=True)
+            return x + h, c
+
+        x, cache = _scan_with_cache(body, x, params["layers"], cfg.scan_layers)
+
+    elif cfg.family == "hybrid":
+        sa = params["shared_attn"]
+        n_apps = (cfg.num_layers + cfg.attn_every - 1) // cfg.attn_every
+        s_len = x.shape[1]
+        ks = jnp.zeros((n_apps, x.shape[0], s_len, cfg.num_kv_heads, cfg.hd), cfg.cdtype)
+        vs = jnp.zeros_like(ks)
+
+        def body(carry, inp):
+            i, lp = inp
+            x, ks, vs = carry
+            app = jnp.minimum(i // cfg.attn_every, n_apps - 1)
+
+            def with_attn(op):
+                x, ks, vs = op
+                h, k, v = attention_with_cache(sa["attn"], rms_norm(x, sa["ln"], cfg.norm_eps), cfg)
+                ks = jax.lax.dynamic_update_index_in_dim(ks, k.astype(ks.dtype), app, 0)
+                vs = jax.lax.dynamic_update_index_in_dim(vs, v.astype(vs.dtype), app, 0)
+                x = x + h
+                y = rms_norm(x, sa["ln2"], cfg.norm_eps)
+                x = x + swiglu(y, sa["mlp"]["w_in"], sa["mlp"]["w_gate"], sa["mlp"]["w_out"])
+                return x, ks, vs
+
+            x, ks, vs = jax.lax.cond(i % cfg.attn_every == 0, with_attn, lambda o: o, (x, ks, vs))
+            h, c = mamba2_forward(lp["mamba"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+                                  return_cache=True)
+            return (x + h, ks, vs), c
+
+        idx = jnp.arange(cfg.num_layers)
+        (x, ks, vs), ssm_cache = _scan_with_cache(body, (x, ks, vs), (idx, params["layers"]),
+                                                  cfg.scan_layers)
+        cache = dict(ssm_cache, k=ks, v=vs)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against a cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               enc_len: int = 0, dtype=None) -> dict:
+    dtype = dtype or cfg.cdtype
+    hd, kv = cfg.hd, cfg.num_kv_heads
+    if cfg.family in ("decoder", "vlm"):
+        return {"k": jnp.zeros((cfg.num_layers, batch, max_len, kv, hd), dtype),
+                "v": jnp.zeros((cfg.num_layers, batch, max_len, kv, hd), dtype)}
+    if cfg.family == "encdec":
+        return {"k": jnp.zeros((cfg.num_layers, batch, max_len, kv, hd), dtype),
+                "v": jnp.zeros((cfg.num_layers, batch, max_len, kv, hd), dtype),
+                "xk": jnp.zeros((cfg.num_layers, batch, enc_len, kv, hd), dtype),
+                "xv": jnp.zeros((cfg.num_layers, batch, enc_len, kv, hd), dtype)}
+    if cfg.family == "ssm":
+        c = mamba2_init_cache(cfg, batch, dtype)
+        return {"state": jnp.zeros((cfg.num_layers,) + c["state"].shape, jnp.float32),
+                "conv": jnp.zeros((cfg.num_layers,) + c["conv"].shape, dtype)}
+    if cfg.family == "hybrid":
+        c = mamba2_init_cache(cfg, batch, dtype)
+        n_apps = (cfg.num_layers + cfg.attn_every - 1) // cfg.attn_every
+        return {"state": jnp.zeros((cfg.num_layers,) + c["state"].shape, jnp.float32),
+                "conv": jnp.zeros((cfg.num_layers,) + c["conv"].shape, dtype),
+                "k": jnp.zeros((n_apps, batch, max_len, kv, hd), dtype),
+                "v": jnp.zeros((n_apps, batch, max_len, kv, hd), dtype)}
+    raise ValueError(cfg.family)
+
+
+def decode_step(params: dict, token: jnp.ndarray, cache: dict, position: jnp.ndarray,
+                cfg: ModelConfig) -> tuple[jnp.ndarray, dict]:
+    """token: (B,) int32; position: scalar int32. Returns (logits (B, V), cache)."""
+    x = params["embed"][token][:, None].astype(cfg.cdtype)  # (B,1,d)
+
+    if cfg.family in ("decoder", "vlm", "encdec"):
+        def body(carry, inp):
+            lp, ck, cv, *cross = inp
+            x = carry
+            h, newc = attention_decode(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                       {"k": ck, "v": cv}, position, cfg)
+            x = x + h
+            if cross:
+                xk, xv = cross
+                h = cross_attention_decode(lp["xattn"], rms_norm(x, lp["ln_x"], cfg.norm_eps),
+                                           xk, xv, cfg)
+                x = x + h
+            y = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                x = x + moe_ffn(lp["mlp"], y, cfg)
+            else:
+                x = x + swiglu(y, lp["mlp"]["w_in"], lp["mlp"]["w_gate"], lp["mlp"]["w_out"])
+            return x, (newc["k"], newc["v"])
+
+        inputs = (params["layers"], cache["k"], cache["v"])
+        if cfg.family == "encdec":
+            inputs = inputs + (cache["xk"], cache["xv"])
+        x, (nk, nv) = _scan_with_cache(body, x, inputs, cfg.scan_layers)
+        new_cache = dict(cache, k=nk, v=nv)
+
+    elif cfg.family == "ssm":
+        def body(carry, inp):
+            lp, st, cv = inp
+            x = carry
+            h, newc = mamba2_decode(lp["mamba"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                    {"state": st, "conv": cv}, cfg)
+            return x + h, (newc["state"], newc["conv"])
+
+        x, (ns, ncv) = _scan_with_cache(body, x, (params["layers"], cache["state"], cache["conv"]),
+                                        cfg.scan_layers)
+        new_cache = {"state": ns, "conv": ncv}
+
+    elif cfg.family == "hybrid":
+        sa = params["shared_attn"]
+        n_apps = cache["k"].shape[0]
+        ks, vs = cache["k"], cache["v"]
+
+        def body(carry, inp):
+            i, lp, st, cv = inp
+            x, ks, vs = carry
+            app = jnp.minimum(i // cfg.attn_every, n_apps - 1)
+
+            def with_attn(operand):
+                x, ks, vs = operand
+                h, newc = attention_decode(sa["attn"], rms_norm(x, sa["ln"], cfg.norm_eps),
+                                           {"k": ks[app], "v": vs[app]}, position, cfg)
+                ks = jax.lax.dynamic_update_index_in_dim(ks, newc["k"], app, 0)
+                vs = jax.lax.dynamic_update_index_in_dim(vs, newc["v"], app, 0)
+                x = x + h
+                y = rms_norm(x, sa["ln2"], cfg.norm_eps)
+                x = x + swiglu(y, sa["mlp"]["w_in"], sa["mlp"]["w_gate"], sa["mlp"]["w_out"])
+                return x, ks, vs
+
+            x, ks, vs = jax.lax.cond(i % cfg.attn_every == 0, with_attn,
+                                     lambda o: o, (x, ks, vs))
+            h, newc = mamba2_decode(lp["mamba"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                    {"state": st, "conv": cv}, cfg)
+            return (x + h, ks, vs), (newc["state"], newc["conv"])
+
+        idx = jnp.arange(cfg.num_layers)
+        (x, ks, vs), (ns, ncv) = _scan_with_cache(
+            body, (x, ks, vs), (idx, params["layers"], cache["state"], cache["conv"]),
+            cfg.scan_layers)
+        new_cache = {"state": ns, "conv": ncv, "k": ks, "v": vs}
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    return logits[:, 0], new_cache

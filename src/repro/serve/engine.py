@@ -1,0 +1,87 @@
+"""Batched serving engine: prefill + greedy/temperature decode.
+
+``serve_step`` — one token for the whole batch against the KV/SSM cache —
+is the unit the decode_32k / long_500k dry-run cells lower. The engine
+wraps it with cache allocation, prompt prefill, and a sampling loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    temperature: float = 0.0      # 0 = greedy
+    seed: int = 0
+
+
+def make_serve_step(cfg: ModelConfig):
+    """(params, token (B,), cache, position) -> (logits (B, V), cache)."""
+
+    def serve_step(params, token, cache, position):
+        return decode_step(params, token, cache, position, cfg)
+
+    return serve_step
+
+
+def _pad_cache(cache: dict, max_len: int) -> dict:
+    """Grow the sequence axis of attention caches to max_len."""
+    def grow(name, x):
+        if name in ("k", "v") and x.ndim == 5:
+            pad = max_len - x.shape[2]
+            if pad > 0:
+                return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return x
+
+    return {k: grow(k, v) for k, v in cache.items()}
+
+
+class Engine:
+    """Minimal batched generation engine over the zoo models."""
+
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: Optional[ServeConfig] = None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg or ServeConfig()
+        self._prefill = jax.jit(partial(prefill, cfg=cfg))
+        self._step = jax.jit(make_serve_step(cfg))
+
+    def generate(self, prompt_tokens: np.ndarray, num_steps: int,
+                 enc_embeds=None, prefix_embeds=None) -> np.ndarray:
+        """prompt_tokens: (B, S). Returns (B, num_steps) generated ids."""
+        cfg, scfg = self.cfg, self.scfg
+        bsz, plen = prompt_tokens.shape
+        kw = {}
+        if enc_embeds is not None:
+            kw["enc_embeds"] = enc_embeds
+        if prefix_embeds is not None:
+            kw["prefix_embeds"] = prefix_embeds
+        logits, cache = self._prefill(self.params, jnp.asarray(prompt_tokens), **kw)
+        cache = _pad_cache(cache, plen + num_steps)
+        key = jax.random.PRNGKey(scfg.seed)
+        out = []
+        tok = self._sample(logits[:, -1], key)
+        pos = plen + (prefix_embeds.shape[1] if prefix_embeds is not None else 0)
+        for i in range(num_steps):
+            out.append(np.asarray(tok))
+            step_logits, cache = self._step(self.params, tok, cache, jnp.int32(pos + i))
+            key, sub = jax.random.split(key)
+            tok = self._sample(step_logits, sub)
+        return np.stack(out, axis=1)
+
+    def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        # clamp to the logical vocab (embeddings are padded for sharding)
+        logits = logits[:, : self.cfg.vocab_size]
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.scfg.temperature).astype(jnp.int32)

@@ -1,0 +1,3 @@
+from repro.train.data import DataConfig, data_iterator, synthetic_batch
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import TrainConfig, make_train_step

@@ -1,0 +1,59 @@
+"""Synthetic token pipeline: deterministic, restartable, host-sharded.
+
+Real deployments plug a file-backed loader behind the same iterator
+protocol; what matters for the framework is that (a) batches are a pure
+function of (seed, step) so checkpoint restart resumes the stream exactly,
+and (b) each host generates only its addressable slice (data-parallel
+sharding happens at the source, not via scatter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    batch: int = 8
+    seq: int = 128
+    seed: int = 0
+    zipf_a: float = 1.2           # skewed unigram distribution (more LM-like
+                                  # than uniform; loss actually decreases)
+
+
+def synthetic_batch(cfg: ModelConfig, dcfg: DataConfig, step: int,
+                    *, host_id: int = 0, num_hosts: int = 1) -> dict:
+    """Batch for ``step`` — pure function of (seed, step, host)."""
+    rng = np.random.default_rng((dcfg.seed, step, host_id))
+    b = dcfg.batch // num_hosts
+    # zipf over the *logical* vocab, with a deterministic shift pattern so
+    # the next-token structure is learnable (x[t+1] = (x[t]*3+7) % V on 50%)
+    v = cfg.vocab_size
+    base = rng.integers(0, v, size=(b, dcfg.seq + 1))
+    zipf = np.minimum(rng.zipf(dcfg.zipf_a, size=(b, dcfg.seq + 1)) - 1, v - 1)
+    toks = np.where(rng.random((b, dcfg.seq + 1)) < 0.5, zipf, base)
+    follow = (toks[:, :-1] * 3 + 7) % v
+    mask = rng.random((b, dcfg.seq)) < 0.5
+    toks[:, 1:] = np.where(mask, follow, toks[:, 1:])
+    batch = {
+        "tokens": toks[:, :-1].astype(np.int32),
+        "labels": toks[:, 1:].astype(np.int32),
+    }
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = rng.standard_normal((b, dcfg.seq, cfg.d_model)).astype(np.float32)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = rng.standard_normal(
+            (b, cfg.num_patches, cfg.d_model)).astype(np.float32)
+    return batch
+
+
+def data_iterator(cfg: ModelConfig, dcfg: DataConfig, *, start_step: int = 0,
+                  host_id: int = 0, num_hosts: int = 1) -> Iterator[dict]:
+    step = start_step
+    while True:
+        yield synthetic_batch(cfg, dcfg, step, host_id=host_id, num_hosts=num_hosts)
+        step += 1

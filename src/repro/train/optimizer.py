@@ -1,0 +1,159 @@
+"""Optimizers in pure JAX pytrees: AdamW and Adafactor.
+
+Adafactor (factored second moment, no first moment) exists because the
+largest assigned config (grok-1-314b) cannot afford AdamW's 2x fp32 state
+at 256 chips x 16 GB; see EXPERIMENTS.md §Dry-run memory table.
+
+States carry the same sharding specs as their parameters (train_step jits
+with matching in_shardings), so FSDP shards optimizer state too (ZeRO-3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], tuple[Any, Any]]
+    # state_specs(param_specs) -> state specs pytree
+    state_specs: Callable[[Any], Any]
+
+
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, warmup: int = 100) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def schedule(count):
+        w = jnp.minimum(count / max(warmup, 1), 1.0)
+        return lr * w
+
+    def update(grads, state, params, _step=None):
+        count = state["count"] + 1
+        cur_lr = schedule(count.astype(jnp.float32))
+        b1c = 1 - b1 ** count.astype(jnp.float32)
+        b2c = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - cur_lr * step).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+        return {"m": param_specs, "v": param_specs, "count": P()}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0,
+              warmup: int = 100) -> Optimizer:
+    """Factored second-moment (Shazeer & Stern 2018), momentum-free.
+
+    >=2-D leaves factor over the *last two* dims (layer-stacked params keep
+    their leading dims unfactored); 0/1-D leaves keep a full accumulator.
+    """
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"acc": jax.tree.map(one, params), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _step=None):
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+        beta = 1.0 - cf ** -decay
+        cur_lr = lr * jnp.minimum(cf / max(warmup, 1), 1.0)
+
+        def upd(g, acc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * acc["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * acc["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(vr[..., None] * vc[..., None, :]
+                                 / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps))
+                new_acc = {"vr": vr, "vc": vc}
+            else:
+                v = beta * acc["v"] + (1 - beta) * g2
+                denom = jnp.sqrt(v)
+                new_acc = {"v": v}
+            step = g / jnp.maximum(denom, eps)
+            norm = jnp.sqrt(jnp.mean(step * step))
+            step = step / jnp.maximum(1.0, norm / clip_threshold)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - cur_lr * step).astype(p.dtype), new_acc
+
+        is_acc = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        out = jax.tree.map(upd, grads, state["acc"], params, is_leaf=is_acc)
+        istup = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=istup)
+        new_acc = jax.tree.map(lambda o: o[1], out, is_leaf=istup)
+        return new_params, {"acc": new_acc, "count": count}
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+
+        def one(spec):
+            # factored accumulators follow the parameter spec minus one axis
+            return {"vr": P(*spec[:-1]) if len(spec) >= 2 else P(),
+                    "vc": P(*(tuple(spec[:-2]) + tuple(spec[-1:]))) if len(spec) >= 2 else P()}
+
+        # NOTE: leaves that are not factored (ndim<2) get {"v": spec}; we
+        # cannot see shapes here, so state specs are resolved against real
+        # state trees in train_step via tree-matching (see specs_for_state).
+        return {"acc": jax.tree.map(one, param_specs, is_leaf=lambda x: isinstance(x, P)),
+                "count": P()}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def specs_for_state(state, param_specs):
+    """Resolve optimizer-state sharding specs against a concrete state tree
+    (handles adafactor's shape-dependent factoring)."""
+    from jax.sharding import PartitionSpec as P
+
+    if "m" in state:  # adamw
+        return {"m": param_specs, "v": param_specs, "count": P()}
+
+    def one(acc, spec):
+        if "vr" in acc:
+            return {"vr": P(*spec[:-1]), "vc": P(*(tuple(spec[:-2]) + tuple(spec[-1:])))}
+        return {"v": spec}
+
+    is_acc = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    return {"acc": jax.tree.map(one, state["acc"], param_specs, is_leaf=is_acc),
+            "count": P()}
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(name)

@@ -1,0 +1,134 @@
+"""Training step factory: loss, grad (with remat from the model config),
+optional microbatch gradient accumulation, optional bf16 gradient
+compression for the cross-pod all-reduce, optimizer apply.
+
+The returned step is a pure function jitted with explicit in/out shardings
+derived from models/sharding.py, so the same code path serves the CPU smoke
+tests (trivial mesh) and the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import cross_entropy_loss
+from repro.models.transformer import forward
+from repro.train.optimizer import Optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    accum_steps: int = 1            # microbatch gradient accumulation
+    grad_dtype: str = "float32"     # "bfloat16" = compressed grad reduce
+    max_grad_norm: float = 1.0
+
+
+def make_loss_fn(cfg: ModelConfig, mesh=None):
+    """mesh != None adds an explicit sharding constraint on the logits —
+    (batch over data[+pod], vocab over model). Without it XLA's sharding
+    propagation can replicate the (B, S, V) fp32 logits, which at train_4k
+    scale is a 134 GB/device temp (measured; see EXPERIMENTS.md §Dry-run)."""
+    logits_sharding = None
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.models.sharding import batch_axes
+        logits_sharding = NamedSharding(mesh, P(batch_axes(mesh), None, "model"))
+
+    def loss_fn(params, batch):
+        kw = {}
+        if cfg.family == "encdec":
+            kw["enc_embeds"] = batch["enc_embeds"]
+        if cfg.family == "vlm":
+            kw["prefix_embeds"] = batch["patch_embeds"]
+        logits = forward(params, batch["tokens"], cfg, **kw)
+        if logits_sharding is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+        labels = batch["labels"]
+        if cfg.family == "vlm":
+            # prefix positions carry no next-token target
+            pad = jnp.full(batch["patch_embeds"].shape[:2], -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        return cross_entropy_loss(logits, labels)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    tcfg: Optional[TrainConfig] = None, mesh=None):
+    tcfg = tcfg or TrainConfig()
+    loss_fn = make_loss_fn(cfg, mesh=mesh)
+    gdtype = jnp.dtype(tcfg.grad_dtype)
+
+    def compute_grads(params, batch):
+        if tcfg.accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, jax.tree.map(lambda g: g.astype(gdtype), grads)
+
+        def micro(batch_slice, _):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch_slice)
+            return loss, jax.tree.map(lambda g: g.astype(gdtype), grads)
+
+        def reshape(x):
+            return x.reshape((tcfg.accum_steps, x.shape[0] // tcfg.accum_steps) + x.shape[1:])
+
+        micro_batches = jax.tree.map(reshape, batch)
+
+        def body(carry, mb):
+            acc_loss, acc_grads = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            grads = jax.tree.map(lambda a, g: a + g.astype(gdtype), acc_grads, grads)
+            return (acc_loss + loss, grads), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, gdtype), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zeros), micro_batches)
+        inv = 1.0 / tcfg.accum_steps
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
+        # global-norm clip (f32 accumulate regardless of grad dtype)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, tcfg.max_grad_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def jit_train_step(cfg: ModelConfig, optimizer: Optimizer, mesh, *,
+                   tcfg: Optional[TrainConfig] = None, batch: int, seq: int,
+                   opt_state_example: Any = None):
+    """AOT-friendly jitted step with explicit shardings (used by launch/)."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.sharding import batch_specs, param_specs, to_shardings
+    from repro.train.optimizer import specs_for_state
+
+    pspecs = param_specs(cfg, mesh)
+    bspecs = batch_specs(cfg, mesh, batch=batch)
+    if opt_state_example is None:
+        shapes = jax.eval_shape(lambda k: __import__("repro.models.transformer",
+                                                     fromlist=["init_params"]).init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+        opt_state_example = jax.eval_shape(optimizer.init, shapes)
+    ospecs = specs_for_state(opt_state_example, pspecs)
+
+    step = make_train_step(cfg, optimizer, tcfg)
+    return jax.jit(
+        step,
+        in_shardings=(to_shardings(pspecs, mesh), to_shardings(ospecs, mesh),
+                      to_shardings(bspecs, mesh)),
+        out_shardings=(to_shardings(pspecs, mesh), to_shardings(ospecs, mesh),
+                       NamedSharding(mesh, P())),
+        donate_argnums=(0, 1),
+    ), pspecs, ospecs, bspecs

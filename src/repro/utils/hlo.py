@@ -1,0 +1,99 @@
+"""Collective-traffic extraction from compiled (post-SPMD) HLO text.
+
+``compiled.as_text()`` is the per-device module after partitioning; every
+collective op line carries its result shape and replica groups. We classify
+each op and convert payload size to *wire bytes per device* with the
+standard ring-algorithm formulas:
+
+    all-reduce       2 * B * (N-1)/N      (reduce-scatter + all-gather)
+    all-gather       B_out * (N-1)/N
+    reduce-scatter   B_in  * (N-1)/N
+    all-to-all       B * (N-1)/N
+    collective-permute  B                 (point-to-point)
+
+B = full (result) tensor bytes, N = replica-group size parsed from the op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,4096,512]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\b"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0               # per device
+    by_kind: dict = dataclasses.field(default_factory=dict)
+    op_count: int = 0
+
+    def to_dict(self) -> dict:
+        return {"wire_bytes": self.wire_bytes, "by_kind": dict(self.by_kind),
+                "op_count": self.op_count}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats(by_kind=defaultdict(float))
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        if "-done(" in line:   # async pair: count only the -start
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        payload = _shape_bytes(dtype, dims)
+        n = _group_size(line)
+        if kind == "all-reduce":
+            wire = 2.0 * payload * (n - 1) / max(n, 1)
+        elif kind == "all-gather":
+            wire = payload * (n - 1) / max(n, 1)
+        elif kind == "reduce-scatter":
+            wire = payload * (n - 1)  # result shape is the shard: input = out*n
+        elif kind == "all-to-all":
+            wire = payload * (n - 1) / max(n, 1)
+        else:  # collective-permute
+            wire = float(payload)
+        stats.wire_bytes += wire
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + wire
+        stats.op_count += 1
+    return stats
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [num_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    if _PAIRS_RE.search(line):
+        return 2
+    return 2

@@ -1,0 +1,68 @@
+"""Tiny HLO dot-flop profiler for the perf loop.
+
+compiled.as_text() doesn't inline operand shapes, so we build a def-table
+(every ``%name = dtype[shape]``) and resolve dot contractions from it.
+Groups flops by the jax op_name suffix — enough to answer "which einsum
+dominates" during hillclimbing without a real profiler.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+
+_DEF_RE = re.compile(r"%([\w.\-]+) = ([a-z0-9]+)\[([0-9,]*)\]")
+_DOT_RE = re.compile(r"%[\w.\-]+ = [a-z0-9]+\[[0-9,]*\][^\n]*? dot\(%([\w.\-]+), %([\w.\-]+)\)")
+_CDIM_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]+)\}")
+_NAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _shape(dims: str) -> list[int]:
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def dot_flop_profile(hlo_text: str, top: int = 12):
+    """Returns (total_flops, [(share, flops, count, op_name), ...])."""
+    defs: dict[str, list[int]] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        defs[m.group(1)] = _shape(m.group(3))
+    agg: Counter = Counter()
+    cnt: Counter = Counter()
+    for line in hlo_text.splitlines():
+        if " dot(" not in line:
+            continue
+        md = _DOT_RE.search(line)
+        out = _DEF_RE.search(line)
+        if not md or not out:
+            continue
+        out_n = 1
+        for d in _shape(out.group(3)):
+            out_n *= d
+        lhs = defs.get(md.group(1), [])
+        cd = _CDIM_RE.search(line)
+        contract = 1
+        if cd and lhs:
+            for idx in cd.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs):
+                    contract *= lhs[i]
+        name = "?"
+        nm = _NAME_RE.search(line)
+        if nm:
+            path = nm.group(1)
+            es = re.search(r"([a-zA-Z.,]+->[a-zA-Z.]+)", path)  # einsum spec
+            tags = [p for p in ("transpose", "jvp", "remat") if p in path]
+            name = (es.group(1) if es else path.split("/")[-1])[:48]
+            if tags:
+                name += " [" + "+".join(tags) + "]"
+        agg[name] += 2 * out_n * contract
+        cnt[name] += 1
+    total = sum(agg.values())
+    rows = [(v / max(total, 1), v, cnt[k], k) for k, v in agg.most_common(top)]
+    return total, rows
+
+
+def print_profile(hlo_text: str, top: int = 12) -> None:
+    total, rows = dot_flop_profile(hlo_text, top)
+    print(f"total dot flops/device: {total:.4g}")
+    for share, v, c, name in rows:
+        print(f"{share*100:5.1f}% {v:11.4g} x{c:<3d} {name}")

@@ -1,0 +1,22 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real single CPU device; only launch/dryrun.py forces 512 fake devices.
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.graphs import rmat_graph
+
+    return rmat_graph(8, edge_factor=8, seed=3, setting="w1").sorted_by_dst()
+
+
+@pytest.fixture(scope="session")
+def tiny_graph():
+    from repro.graphs.structs import Graph
+
+    src = np.array([0, 0, 1, 2, 2, 3, 4])
+    dst = np.array([1, 2, 3, 3, 4, 4, 0])
+    w = np.full(7, 0.9, np.float32)
+    return Graph.from_edges(5, src, dst, w, edge_block=8).sorted_by_dst()

@@ -1,0 +1,49 @@
+"""Baseline implementations are themselves correct (they referee DiFuseR)."""
+import numpy as np
+
+from repro.baselines import exact_greedy, influence_score, ris_find_seeds
+from repro.graphs import erdos_renyi_graph
+from repro.graphs.structs import Graph
+
+
+def _line_graph(p=1.0):
+    # 0 -> 1 -> 2 -> 3 with probability p
+    src = np.array([0, 1, 2])
+    dst = np.array([1, 2, 3])
+    return Graph.from_edges(4, src, dst, np.full(3, p, np.float32), edge_block=8)
+
+
+def test_oracle_deterministic_graph():
+    g = _line_graph(1.0)
+    assert influence_score(g, np.array([0]), num_sims=10) == 4.0
+    assert influence_score(g, np.array([2]), num_sims=10) == 2.0
+
+
+def test_oracle_probabilistic_expectation():
+    g = _line_graph(0.5)
+    # E[spread from 0] = 1 + 1/2 + 1/4 + 1/8 = 1.875
+    s = influence_score(g, np.array([0]), num_sims=4000, rng_seed=1)
+    assert abs(s - 1.875) < 0.1, s
+
+
+def test_exact_greedy_picks_source():
+    g = _line_graph(1.0)
+    seeds, score = exact_greedy(g, 1, num_sims=20)
+    assert seeds[0] == 0
+    assert score == 4.0
+
+
+def test_ris_close_to_greedy():
+    g = erdos_renyi_graph(200, avg_degree=5, seed=3, setting="w1")
+    ris_seeds, _ = ris_find_seeds(g, 4, num_rr_sets=4000, rng_seed=2)
+    greedy_seeds, greedy_score = exact_greedy(g, 4, num_sims=100, rng_seed=4)
+    o_ris = influence_score(g, ris_seeds, num_sims=300, rng_seed=5)
+    o_greedy = influence_score(g, greedy_seeds, num_sims=300, rng_seed=5)
+    assert o_ris >= 0.9 * o_greedy
+
+
+def test_ris_theta_bound_reasonable():
+    from repro.baselines.ris import imm_num_rr_sets
+
+    t = imm_num_rr_sets(10_000, 50, epsilon=0.5)
+    assert 256 <= t < 10_000_000

@@ -1,0 +1,62 @@
+"""FASST partitioner tests (paper §4.1, Tables 5/6/7)."""
+import numpy as np
+
+from repro.core.fasst import (build_partition, duplication_histogram,
+                              lane_fill_rate, max_shard_fraction,
+                              partition_samples)
+from repro.core.sampling import make_x_vector
+from repro.graphs import rmat_graph
+
+
+def test_partition_is_permutation():
+    x = make_x_vector(256, seed=1)
+    for method in ("fasst", "naive"):
+        shards, perm = partition_samples(x, 8, method=method)
+        assert sorted(x.tolist()) == sorted(shards.reshape(-1).tolist())
+        assert sorted(perm.tolist()) == list(range(256))
+
+
+def test_fasst_shards_are_contiguous_ranges():
+    x = make_x_vector(128, seed=2)
+    shards, _ = partition_samples(x, 4, method="fasst")
+    flat = shards.reshape(-1)
+    assert (np.diff(flat.astype(np.int64)) >= 0).all()  # globally sorted
+
+
+def test_fasst_reduces_duplication_and_max_shard():
+    g = rmat_graph(9, edge_factor=8, seed=5, setting="w1")
+    x = make_x_vector(256, seed=3)
+    fasst = build_partition(g, x, 4, method="fasst")
+    naive = build_partition(g, x, 4, method="naive")
+    # Table 7: FASST's largest device-local graph is no larger than naive's
+    assert max_shard_fraction(g, fasst) <= max_shard_fraction(g, naive) + 1e-9
+    # Table 5: FASST puts more edges in exactly-1 shard
+    hf = duplication_histogram(g, fasst)
+    hn = duplication_histogram(g, naive)
+    assert hf[1] >= hn[1] - 1e-9
+    # never-sampled fraction is partition-independent
+    np.testing.assert_allclose(hf[0], hn[0], atol=1e-12)
+
+
+def test_fasst_improves_lane_fill():
+    g = rmat_graph(9, edge_factor=8, seed=6, setting="w1")
+    x = make_x_vector(512, seed=4)
+    naive_fill = lane_fill_rate(g, x, lane_width=32)
+    fasst_fill = lane_fill_rate(g, np.sort(x), lane_width=32)
+    assert fasst_fill > naive_fill, (naive_fill, fasst_fill)
+
+
+def test_device_local_edges_cover_all_sampled():
+    """Every edge sampled by a shard's X values is in its local edge list."""
+    from repro.core.sampling import edge_hash, weight_to_threshold
+
+    g = rmat_graph(8, edge_factor=6, seed=7, setting="u01")
+    x = make_x_vector(128, seed=9)
+    part = build_partition(g, x, 4, method="fasst")
+    h = edge_hash(g.src, g.dst)
+    thr = weight_to_threshold(g.weight)
+    for t in range(4):
+        sampled = ((h[:, None] ^ part.x_shards[t][None, :]) < thr[:, None]).any(1)
+        local = set(part.edge_index[t].tolist())
+        missing = set(np.nonzero(sampled)[0].tolist()) - local
+        assert not missing, (t, len(missing))

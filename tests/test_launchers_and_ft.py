@@ -1,0 +1,89 @@
+"""Launcher CLIs + fault-tolerance supervisor behavior."""
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+
+def test_im_cli_end_to_end(capsys):
+    from repro.launch.im import run
+
+    out = run(["--graph", "rmat:8", "--setting", "0.1", "--k", "5",
+               "--registers", "128", "--validate"])
+    assert out["difuser_score"] > 0
+    assert out["oracle_score"] > 0
+    rel = abs(out["difuser_score"] - out["oracle_score"]) / out["oracle_score"]
+    assert rel < 0.25
+
+
+def test_train_cli_resumes_from_checkpoint(tmp_path):
+    from repro.launch.train import run
+
+    ck = str(tmp_path / "ck")
+    args = ["--arch", "tinyllama-1.1b", "--reduced", "--width", "64", "--layers", "2",
+            "--steps", "6", "--batch", "4", "--seq", "32", "--ckpt-dir", ck,
+            "--ckpt-every", "3"]
+    run(args)
+    # resume: should start from step 6 checkpoint and do nothing more
+    m = run(args)
+    assert np.isfinite(m["final_loss"]) or np.isnan(m["final_loss"])  # resumed at end
+    from repro.train.checkpoint import latest_step
+
+    assert latest_step(ck) == 6
+
+
+def test_ft_supervisor_restarts_until_success(tmp_path):
+    """A command that fails twice then succeeds is relaunched transparently."""
+    from repro.launch.ft import supervise
+
+    marker = tmp_path / "attempts"
+    script = (
+        "import sys, pathlib\n"
+        f"p = pathlib.Path({str(marker)!r})\n"
+        "n = int(p.read_text()) if p.exists() else 0\n"
+        "p.write_text(str(n + 1))\n"
+        "sys.exit(0 if n >= 2 else 1)\n"
+    )
+    rc = supervise([sys.executable, "-c", script], max_restarts=5)
+    assert rc == 0
+    assert marker.read_text() == "3"
+
+
+def test_ft_supervisor_gives_up(tmp_path):
+    from repro.launch.ft import supervise
+
+    rc = supervise([sys.executable, "-c", "import sys; sys.exit(3)"], max_restarts=1)
+    assert rc == 3
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A leftover .tmp dir from a killed writer is ignored and overwritten."""
+    from repro.train.checkpoint import latest_step, restore, save
+
+    d = str(tmp_path / "ck")
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))  # simulated crash debris
+    save(d, 9, {"a": np.arange(4)})
+    assert latest_step(d) == 9
+    step, tree = restore(d)
+    np.testing.assert_array_equal(tree["a"], np.arange(4))
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    """Save on one 'topology', restore onto another sharding layout."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.train.checkpoint import restore_sharded, save
+
+    d = str(tmp_path / "ck")
+    x = np.arange(64, dtype=np.float32).reshape(8, 8)
+    save(d, 1, {"w": x})
+    mesh = jax.make_mesh((1,), ("data",), devices=jax.devices()[:1],
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    step, tree = restore_sharded(d, sh)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["w"]), x)

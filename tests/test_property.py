@@ -1,0 +1,100 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.sampling import clz32, edge_hash, mix32, weight_to_threshold
+from repro.core.sketch import VISITED, merge
+
+regs = st.lists(st.integers(min_value=-1, max_value=32), min_size=4, max_size=4)
+
+
+def _m(vals):
+    return jnp.asarray(np.array(vals, dtype=np.int8)[None, :])
+
+
+@settings(max_examples=60, deadline=None)
+@given(regs, regs)
+def test_merge_commutative_modulo_visited(a, b):
+    """merge(a,b) == merge(b,a) wherever neither side is VISITED; VISITED
+    positions are sticky to the *left* operand (the paper's in-place
+    update)."""
+    ab = np.asarray(merge(_m(a), _m(b)))[0]
+    ba = np.asarray(merge(_m(b), _m(a)))[0]
+    for i, (x, y) in enumerate(zip(a, b)):
+        if x != VISITED and y != VISITED:
+            assert ab[i] == ba[i] == max(x, y)
+
+
+@settings(max_examples=60, deadline=None)
+@given(regs, regs, regs)
+def test_merge_contribution_associative(a, b, c):
+    """The law the kernels rely on: the destination guard commutes with
+    accumulating contributions by plain max —
+        merge(merge(a, b), c) == merge(a, max(b, c)).
+    (Plain associativity of ``merge`` itself does NOT hold: VISITED is
+    sticky only on the destination side, by design.)"""
+    import jax.numpy as jnp
+
+    lhs = merge(merge(_m(a), _m(b)), _m(c))
+    rhs = merge(_m(a), jnp.maximum(_m(b), _m(c)))
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+@settings(max_examples=60, deadline=None)
+@given(regs)
+def test_merge_idempotent(a):
+    m = _m(a)
+    np.testing.assert_array_equal(np.asarray(merge(m, m)), np.asarray(m))
+
+
+@settings(max_examples=60, deadline=None)
+@given(regs, regs)
+def test_merge_monotone_and_visited_sticky(a, b):
+    out = np.asarray(merge(_m(a), _m(b)))[0]
+    for i, x in enumerate(a):
+        if x == VISITED:
+            assert out[i] == VISITED  # visited never resurrects
+        else:
+            assert out[i] >= x  # monotone non-decreasing
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+def test_clz32_definition(v):
+    x = np.array([v], dtype=np.uint32)
+    expect = 32 if v == 0 else 32 - int(v).bit_length()
+    assert clz32(x)[0] == expect
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_edge_hash_deterministic(u, v):
+    a = edge_hash(np.array([u]), np.array([v]))
+    b = edge_hash(np.array([u]), np.array([v]))
+    assert a[0] == b[0]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(min_value=0.0, max_value=1.0, allow_nan=False))
+def test_threshold_in_range(w):
+    thr = weight_to_threshold(np.array([w], np.float32))
+    assert 0 <= int(thr[0]) <= 0xFFFFFFFF
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=2**32 - 1),
+                min_size=8, max_size=64, unique=True))
+def test_partition_preserves_sample_multiset(xs):
+    """FASST is a permutation of the sample space: the multiset of sampled
+    graphs is invariant (paper §4.1)."""
+    from repro.core.fasst import partition_samples
+
+    x = np.array(xs[: len(xs) // 4 * 4], dtype=np.uint32)
+    if x.size == 0:
+        return
+    shards, perm = partition_samples(x, 4, method="fasst")
+    assert sorted(shards.reshape(-1).tolist()) == sorted(x.tolist())
+    np.testing.assert_array_equal(x[perm], shards.reshape(-1))

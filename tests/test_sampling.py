@@ -1,0 +1,74 @@
+"""Hash / fused-sampling unit tests (paper §2.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampling import (clz32, edge_hash, make_x_vector, mix32,
+                                 register_hash, sample_mask,
+                                 weight_to_threshold)
+
+
+def test_mix32_avalanche():
+    """Flipping one input bit flips ~half the output bits on average."""
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 1 << 32, 2000, dtype=np.uint64).astype(np.uint32)
+    flips = []
+    for bit in (0, 7, 16, 31):
+        y = x ^ np.uint32(1 << bit)
+        d = mix32(x) ^ mix32(y)
+        flips.append(np.mean([bin(v).count("1") for v in d.astype(np.uint64)]))
+    assert all(12 < f < 20 for f in flips), flips
+
+
+def test_mix32_numpy_jnp_agree():
+    x = np.arange(4096, dtype=np.uint32) * np.uint32(2654435761)
+    a = mix32(x)
+    b = np.asarray(mix32(jnp.asarray(x)))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_edge_hash_order_sensitive():
+    src = np.array([1, 2, 3], dtype=np.int32)
+    dst = np.array([2, 1, 3], dtype=np.int32)
+    h1 = edge_hash(src, dst)
+    h2 = edge_hash(dst, src)
+    assert (h1 != h2).any()
+
+
+def test_clz32_matches_lax():
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 1 << 32, 10000, dtype=np.uint64).astype(np.uint32)
+    x[:33] = [0] + [1 << i for i in range(32)]  # exact boundary cases
+    ours = clz32(x)
+    lax = np.asarray(jax.lax.clz(jnp.asarray(x))).astype(np.int32)
+    np.testing.assert_array_equal(ours, lax)
+
+
+def test_sample_rate_matches_weight():
+    """Empirical sampling probability ~ w for the XOR scheme (paper eq. 2)."""
+    rng = np.random.default_rng(2)
+    m, r = 2000, 512
+    src = rng.integers(0, 1000, m).astype(np.int32)
+    dst = rng.integers(0, 1000, m).astype(np.int32)
+    x = make_x_vector(r, seed=5)
+    h = edge_hash(src, dst)
+    for w in (0.01, 0.1, 0.5):
+        thr = weight_to_threshold(np.full(m, w, np.float32))
+        mask = sample_mask(h, thr, x)
+        rate = mask.mean()
+        assert abs(rate - w) < 0.01 + 0.1 * w, (w, rate)
+
+
+def test_zero_weight_never_sampled():
+    src = np.arange(100, dtype=np.int32)
+    dst = src + 1
+    thr = weight_to_threshold(np.zeros(100, np.float32))
+    mask = sample_mask(edge_hash(src, dst), thr, make_x_vector(64))
+    assert not mask.any()
+
+
+def test_threshold_monotone_in_weight():
+    w = np.linspace(0, 1, 101).astype(np.float32)
+    thr = weight_to_threshold(w)
+    assert (np.diff(thr.astype(np.int64)) >= 0).all()
+    assert thr[0] == 0
