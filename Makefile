@@ -1,0 +1,20 @@
+# One entry point for the repo's verify/bench/lint loops.
+#
+#   make test         tier-1 suite (the ROADMAP verify command)
+#   make bench-smoke  fast benchmark pass (small graphs, CI-sized)
+#   make lint         syntax + import sanity over src/tests/benchmarks
+
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test bench-smoke lint
+
+test:
+	python -m pytest -x -q
+
+bench-smoke:
+	python -m benchmarks.run --fast
+
+lint:
+	python -m compileall -q src tests benchmarks examples
+	python -c "import importlib; [importlib.import_module(m) for m in ('repro', 'repro.core.difuser', 'repro.service', 'repro.service.engine', 'repro.launch.serve_im')]; print('imports ok')"

@@ -1,0 +1,81 @@
+"""Service throughput: cold-build vs warm-store serving on an RMAT graph.
+
+    PYTHONPATH=src python -m benchmarks.service_throughput [--scale 14]
+
+Emits the repo's standard ``name,us_per_call,derived`` CSV rows (the
+benchmarks/run.py schema) plus one ``service.json`` row whose derived field
+is the full JSON stats blob. The acceptance metric is ``service.speedup``:
+amortized per-query cost of the 2nd..Nth warm query vs repeated cold runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.difuser import DiFuserConfig, find_seeds
+from repro.graphs import rmat_graph
+from repro.launch.serve_im import make_workload
+from repro.service import (InfluenceEngine, SketchStore, TopKSeeds,
+                           summarize_latencies)
+
+
+def main(scale: int = 14, *, registers: int = 256, k: int = 10,
+         num_queries: int = 200, seed: int = 0) -> dict:
+    g = rmat_graph(scale, edge_factor=8, seed=seed, setting="w1")
+    cfg = DiFuserConfig(num_registers=registers, seed=seed)
+
+    # cold: what every query costs without the store (build + rounds)
+    t0 = time.perf_counter()
+    cold = find_seeds(g, k, cfg)
+    cold_s = time.perf_counter() - t0
+    emit(f"service.cold_find_seeds.n{g.n}", cold_s * 1e6, cold.propagate_iters)
+
+    store = SketchStore()
+    engine = InfluenceEngine(store)
+    t0 = time.perf_counter()
+    key = engine.register(g, cfg)
+    build_s = time.perf_counter() - t0
+    emit(f"service.store_build.n{g.n}", build_s * 1e6,
+         store.entry(key).build_iters)
+
+    # warm: the 1st query eats jit compiles; report 2nd..Nth amortized
+    warm = engine(key, TopKSeeds(k)).value
+    assert np.array_equal(warm.seeds, cold.seeds), "warm/cold seed mismatch"
+
+    for q in make_workload(g.n, num_queries, k=k, seed=seed + 7):
+        engine.submit(key, q)
+    t0 = time.perf_counter()
+    results = engine.run()
+    wall_s = time.perf_counter() - t0
+    stats = summarize_latencies(results)
+
+    amortized_s = wall_s / num_queries
+    speedup = cold_s / amortized_s
+    emit(f"service.warm_query.n{g.n}", amortized_s * 1e6,
+         f"{stats['qps']:.0f}qps")
+    emit(f"service.p50.n{g.n}", stats["p50_ms"] * 1e3, "")
+    emit(f"service.p99.n{g.n}", stats["p99_ms"] * 1e3, "")
+    emit(f"service.speedup.n{g.n}", amortized_s * 1e6, f"{speedup:.1f}x")
+
+    out = {"n": g.n, "m": g.m_real, "registers": registers, "k": k,
+           "num_queries": num_queries, "cold_s": cold_s, "build_s": build_s,
+           "wall_s": wall_s, "amortized_s": amortized_s, "speedup": speedup,
+           **stats}
+    emit("service.json", wall_s * 1e6, json.dumps(out))
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=14)
+    ap.add_argument("--registers", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--queries", type=int, default=200)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(args.scale, registers=args.registers, k=args.k,
+         num_queries=args.queries)

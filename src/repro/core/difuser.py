@@ -56,13 +56,15 @@ def _init_registers(n_pad: int, n_real: int, num_regs: int) -> jnp.ndarray:
     return jnp.where(pad_rows, jnp.int8(VISITED), m)
 
 
-def _find_seeds(src, dst, thr, x, n_pad, *, k, n_real, num_regs, seed, estimator,
-                impl, edge_chunk, max_prop, max_casc, rebuild_threshold):
-    m = _init_registers(n_pad, n_real, num_regs)
-    m = ops.sketch_fill(m, reg_offset=0, seed=seed, impl=impl)
-    m, build_iters = propagate_to_fixpoint(
-        m, src, dst, thr, x, seed=seed, impl=impl, edge_chunk=edge_chunk,
-        max_iters=max_prop)
+def _seed_rounds(m, src, dst, thr, x, *, k, n_real, num_regs, seed, estimator,
+                 impl, edge_chunk, max_prop, max_casc, rebuild_threshold):
+    """Alg. 4 lines 7-23: K rounds of {select, cascade, score, lazy-rebuild}
+    starting from an already-propagated register matrix ``m``.
+
+    Shared by the cold path (``find_seeds``) and the warm-start path
+    (``find_seeds_warm`` / service.SketchStore) so both trace the identical
+    round program — warm seeds are byte-identical to cold seeds.
+    """
 
     def round_fn(carry, _):
         m, score, oldscore = carry
@@ -90,7 +92,28 @@ def _find_seeds(src, dst, thr, x, n_pad, *, k, n_real, num_regs, seed, estimator
 
     (_, _, _), outs = jax.lax.scan(round_fn, (m, jnp.float32(0.0), jnp.float32(0.0)),
                                    None, length=k)
-    seeds, gains, scores, rebuilds = outs
+    return outs  # (seeds, gains, scores, rebuilds)
+
+
+def _build_matrix(src, dst, thr, x, n_pad, *, n_real, num_regs, seed, impl,
+                  edge_chunk, max_prop, reg_offset=0):
+    """Alg. 4 lines 3-6: init + fill + propagate-to-fixpoint. Returns (m, iters)."""
+    m = _init_registers(n_pad, n_real, num_regs)
+    m = ops.sketch_fill(m, reg_offset=reg_offset, seed=seed, impl=impl)
+    return propagate_to_fixpoint(
+        m, src, dst, thr, x, seed=seed, impl=impl, edge_chunk=edge_chunk,
+        max_iters=max_prop)
+
+
+def _find_seeds(src, dst, thr, x, n_pad, *, k, n_real, num_regs, seed, estimator,
+                impl, edge_chunk, max_prop, max_casc, rebuild_threshold):
+    m, build_iters = _build_matrix(
+        src, dst, thr, x, n_pad, n_real=n_real, num_regs=num_regs, seed=seed,
+        impl=impl, edge_chunk=edge_chunk, max_prop=max_prop)
+    seeds, gains, scores, rebuilds = _seed_rounds(
+        m, src, dst, thr, x, k=k, n_real=n_real, num_regs=num_regs, seed=seed,
+        estimator=estimator, impl=impl, edge_chunk=edge_chunk, max_prop=max_prop,
+        max_casc=max_casc, rebuild_threshold=rebuild_threshold)
     return seeds, gains, scores, rebuilds, build_iters
 
 
@@ -99,17 +122,22 @@ _find_seeds_jit = partial(jax.jit, static_argnames=(
     "max_prop", "max_casc", "rebuild_threshold"))(
     lambda src, dst, thr, x, *, n_pad, **kw: _find_seeds(src, dst, thr, x, n_pad, **kw))
 
+_build_matrix_jit = partial(jax.jit, static_argnames=(
+    "n_pad", "n_real", "num_regs", "seed", "impl", "edge_chunk", "max_prop",
+    "reg_offset"))(
+    lambda src, dst, thr, x, *, n_pad, **kw: _build_matrix(src, dst, thr, x, n_pad, **kw))
+
+_seed_rounds_jit = partial(jax.jit, static_argnames=(
+    "k", "n_real", "num_regs", "seed", "estimator", "impl", "edge_chunk",
+    "max_prop", "max_casc", "rebuild_threshold"))(_seed_rounds)
+
 
 def find_seeds(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
                x: Optional[np.ndarray] = None) -> InfluenceResult:
     """Run DiFuseR on a single device. ``x`` overrides the random vector
     (the distributed tests use this to pin identical sample spaces)."""
     cfg = config or DiFuserConfig()
-    if x is None:
-        x = make_x_vector(cfg.num_registers, seed=cfg.seed)
-    if cfg.sort_x:
-        x = np.sort(x)
-    g = g.sorted_by_dst()
+    g, x = normalize_inputs(g, cfg, x)
     thr = weight_to_threshold(g.weight)
     seeds, gains, scores, rebuilds, build_iters = _find_seeds_jit(
         jnp.asarray(g.src), jnp.asarray(g.dst), jnp.asarray(thr), jnp.asarray(x),
@@ -121,3 +149,83 @@ def find_seeds(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
         seeds=np.asarray(seeds), est_gains=np.asarray(gains),
         scores=np.asarray(scores), rebuilds=np.asarray(rebuilds),
         propagate_iters=int(build_iters), x=np.asarray(x))
+
+
+def normalize_x(cfg: DiFuserConfig, x: Optional[np.ndarray]) -> np.ndarray:
+    """The x half of ``normalize_inputs`` (no graph work): default from the
+    config seed, cast to uint32, FASST-sort."""
+    if x is None:
+        x = make_x_vector(cfg.num_registers, seed=cfg.seed)
+    x = np.asarray(x, dtype=np.uint32)
+    return np.sort(x) if cfg.sort_x else x
+
+
+def normalize_inputs(g: Graph, config: Optional[DiFuserConfig] = None,
+                     x: Optional[np.ndarray] = None) -> tuple[Graph, np.ndarray]:
+    """The host-side canonicalization ``find_seeds`` applies before tracing:
+    FASST-sort the sample vector and lay edges out by destination. Idempotent,
+    so callers that cache the results (service.SketchStore) and ``find_seeds``
+    itself agree on the exact arrays."""
+    cfg = config or DiFuserConfig()
+    return g.sorted_by_dst(), normalize_x(cfg, x)
+
+
+def build_sketch_matrix(g: Graph, config: Optional[DiFuserConfig] = None,
+                        x: Optional[np.ndarray] = None, *, reg_offset: int = 0,
+                        init_matrix=None, normalized: bool = False):
+    """Run Alg. 4 lines 3-6 once: fill + propagate-to-fixpoint.
+
+    Returns ``(matrix int8[n_pad, J], build_iters, x_used)`` where ``matrix``
+    stays device-resident — the persistent index the service layer amortizes
+    across queries. ``reg_offset`` offsets the register hash slots so a
+    sample-space bank covering x[b*J_loc:(b+1)*J_loc] fills slots starting at
+    b*J_loc (bank concatenation is bit-identical to one full build).
+    ``init_matrix`` warm-starts the fixpoint from an existing matrix instead
+    of a fresh fill — the monotone-insertion repair path (service.delta).
+    ``normalized=True`` skips the host canonicalization when the caller
+    already holds a dst-sorted graph and sorted x (per-bank store builds).
+    """
+    cfg = config or DiFuserConfig()
+    if not normalized:
+        g, x = normalize_inputs(g, cfg, x)
+    thr = weight_to_threshold(g.weight)
+    if init_matrix is None:
+        m, iters = _build_matrix_jit(
+            jnp.asarray(g.src), jnp.asarray(g.dst), jnp.asarray(thr),
+            jnp.asarray(x), n_pad=g.n_pad, n_real=g.n, num_regs=x.shape[0],
+            seed=cfg.seed, impl=cfg.impl, edge_chunk=cfg.edge_chunk,
+            max_prop=cfg.max_propagate_iters, reg_offset=reg_offset)
+    else:
+        m, iters = propagate_to_fixpoint(
+            init_matrix, jnp.asarray(g.src), jnp.asarray(g.dst),
+            jnp.asarray(thr), jnp.asarray(x), seed=cfg.seed, impl=cfg.impl,
+            edge_chunk=cfg.edge_chunk, max_iters=cfg.max_propagate_iters)
+    return m, int(iters), x
+
+
+def find_seeds_warm(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
+                    *, matrix, x: np.ndarray, edges=None) -> InfluenceResult:
+    """Warm-start Alg. 4: skip fill + propagate and run the K seed rounds from
+    an already-propagated register ``matrix`` (from ``build_sketch_matrix``
+    with the same graph/config/x). The round loop is the identical traced
+    program as ``find_seeds``'s, so the returned seed set is byte-identical
+    to a cold run; only the build cost is amortized away.
+
+    ``edges``: optional (src, dst, thr) device arrays for an already
+    dst-sorted ``g`` with ``x`` already normalized — the SketchStore fast
+    path, skipping the per-query O(m log m) host sort and re-upload."""
+    cfg = config or DiFuserConfig()
+    if edges is None:
+        g, x = normalize_inputs(g, cfg, x)
+        edges = (jnp.asarray(g.src), jnp.asarray(g.dst),
+                 jnp.asarray(weight_to_threshold(g.weight)))
+    seeds, gains, scores, rebuilds = _seed_rounds_jit(
+        matrix, edges[0], edges[1], edges[2],
+        jnp.asarray(x), k=k, n_real=g.n, num_regs=x.shape[0], seed=cfg.seed,
+        estimator=cfg.estimator, impl=cfg.impl, edge_chunk=cfg.edge_chunk,
+        max_prop=cfg.max_propagate_iters, max_casc=cfg.max_cascade_iters,
+        rebuild_threshold=cfg.rebuild_threshold)
+    return InfluenceResult(
+        seeds=np.asarray(seeds), est_gains=np.asarray(gains),
+        scores=np.asarray(scores), rebuilds=np.asarray(rebuilds),
+        propagate_iters=0, x=np.asarray(x))

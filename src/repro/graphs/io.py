@@ -35,10 +35,12 @@ def load_snap_edgelist(
             dst_l.append(int(parts[1]))
     src = np.asarray(src_l, dtype=np.int64)
     dst = np.asarray(dst_l, dtype=np.int64)
+    # compact ids to [0, n): np.unique returns sorted ids, so searchsorted is
+    # an exact vectorized inverse (the per-edge dict loop dominated load time
+    # on the paper's larger SNAP graphs)
     ids = np.unique(np.concatenate([src, dst]))
-    remap = {int(v): i for i, v in enumerate(ids)}
-    src = np.array([remap[int(v)] for v in src], dtype=np.int64)
-    dst = np.array([remap[int(v)] for v in dst], dtype=np.int64)
+    src = np.searchsorted(ids, src).astype(np.int64)
+    dst = np.searchsorted(ids, dst).astype(np.int64)
     n = int(ids.size)
     if not directed:
         src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])

@@ -23,6 +23,12 @@ import numpy as np
 INT = np.int32
 
 
+def edge_pair_keys(src: np.ndarray, dst: np.ndarray, n_pad: int) -> np.ndarray:
+    """Collision-free int64 key for (u, v) pairs with u, v < n_pad — the one
+    encoding shared by removal matching and delta repair."""
+    return src.astype(np.int64) * np.int64(n_pad) + dst.astype(np.int64)
+
+
 def pad_to_multiple(x: np.ndarray, multiple: int, fill) -> np.ndarray:
     """Pad 1-D array ``x`` up to a multiple of ``multiple`` with ``fill``."""
     n = x.shape[0]
@@ -127,6 +133,82 @@ class Graph:
 
     def csr(self) -> "CSR":
         return CSR.from_graph(self)
+
+    def content_key(self) -> str:
+        """Stable content hash of the real edge set (order-insensitive) —
+        the graph component of a service.SketchStore key."""
+        import hashlib
+
+        src = self.src[: self.m_real].astype(np.int64)
+        dst = self.dst[: self.m_real].astype(np.int64)
+        w = self.weight[: self.m_real].astype(np.float32)
+        order = np.lexsort((dst, src))
+        h = hashlib.blake2b(digest_size=12)
+        h.update(np.int64(self.n).tobytes())
+        h.update(src[order].tobytes())
+        h.update(dst[order].tobytes())
+        h.update(w[order].tobytes())
+        return h.hexdigest()
+
+    def apply_delta(self, delta: "GraphDelta", *, edge_block: int = 256) -> "Graph":
+        """Updated graph: drop every (u, v) pair named in ``delta`` removals,
+        append the added edges, re-pad. Added edges that duplicate surviving
+        ones merge with compound probability (``from_edges`` dedup)."""
+        src = self.src[: self.m_real].astype(np.int64)
+        dst = self.dst[: self.m_real].astype(np.int64)
+        w = self.weight[: self.m_real]
+        if delta.rem_src.size:
+            keep = ~np.isin(edge_pair_keys(src, dst, self.n_pad),
+                            edge_pair_keys(delta.rem_src, delta.rem_dst, self.n_pad))
+            src, dst, w = src[keep], dst[keep], w[keep]
+        if delta.add_src.size:
+            src = np.concatenate([src, delta.add_src.astype(np.int64)])
+            dst = np.concatenate([dst, delta.add_dst.astype(np.int64)])
+            w = np.concatenate([w, delta.add_weight.astype(np.float32)])
+        return Graph.from_edges(self.n, src, dst, w, edge_block=edge_block)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphDelta:
+    """A batch of edge insertions/removals against an existing Graph.
+
+    Vertex ids must already live in ``[0, n)`` of the target graph (the delta
+    path repairs sketches in place, so the vertex set is fixed). Removals
+    match every parallel (u, v) edge regardless of weight.
+    """
+
+    add_src: np.ndarray     # int64[a]
+    add_dst: np.ndarray     # int64[a]
+    add_weight: np.ndarray  # float32[a]
+    rem_src: np.ndarray     # int64[r]
+    rem_dst: np.ndarray     # int64[r]
+
+    @staticmethod
+    def make(add=None, remove=None, default_weight: float = 0.1) -> "GraphDelta":
+        """``add``: (src, dst[, weight]) arrays; ``remove``: (src, dst)."""
+        empty_i = np.zeros(0, dtype=np.int64)
+        if add is None:
+            a_src, a_dst, a_w = empty_i, empty_i, np.zeros(0, dtype=np.float32)
+        else:
+            a_src = np.asarray(add[0], dtype=np.int64)
+            a_dst = np.asarray(add[1], dtype=np.int64)
+            a_w = (np.asarray(add[2], dtype=np.float32) if len(add) > 2
+                   else np.full(a_src.shape, default_weight, dtype=np.float32))
+        if remove is None:
+            r_src, r_dst = empty_i, empty_i
+        else:
+            r_src = np.asarray(remove[0], dtype=np.int64)
+            r_dst = np.asarray(remove[1], dtype=np.int64)
+        return GraphDelta(add_src=a_src, add_dst=a_dst, add_weight=a_w,
+                          rem_src=r_src, rem_dst=r_dst)
+
+    @property
+    def num_added(self) -> int:
+        return int(self.add_src.size)
+
+    @property
+    def num_removed(self) -> int:
+        return int(self.rem_src.size)
 
 
 @dataclasses.dataclass(frozen=True)

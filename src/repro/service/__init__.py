@@ -1,0 +1,15 @@
+"""Online influence query service: persistent sketch store, batched query
+engine, and incremental graph-delta repair over the DiFuseR index."""
+from repro.service.delta import DeltaReport, apply_delta
+from repro.service.engine import (InfluenceEngine, QueryResult, Request,
+                                  summarize_latencies)
+from repro.service.queries import (CoverageProbe, MarginalGain, SpreadEstimate,
+                                   TopKSeeds)
+from repro.service.store import SketchStore, StoreEntry, StoreKey
+
+__all__ = [
+    "SketchStore", "StoreEntry", "StoreKey",
+    "TopKSeeds", "SpreadEstimate", "MarginalGain", "CoverageProbe",
+    "InfluenceEngine", "QueryResult", "Request", "summarize_latencies",
+    "DeltaReport", "apply_delta",
+]

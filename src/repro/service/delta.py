@@ -1,0 +1,154 @@
+"""Incremental graph-delta repair for resident sketch indexes.
+
+Edge insertions are sound without a rebuild: registers form a max-merge
+lattice and adding edges only grows each simulation's reachability sets, so
+the old fixpoint sits *below* the new one and monotone sweeps climb the rest
+of the way. The repair is frontier-shaped: one cheap sweep over just the
+touched edges (O(E_delta * J)) decides whether anything changed at all; only
+if it did do full sweeps run — and they start from the old fixpoint, so they
+converge in frontier-depth iterations instead of graph-diameter ones.
+
+Edge removals cannot un-merge registers, so they accrue *staleness*: the
+matrix keeps over-estimating until the removed fraction crosses
+``rebuild_threshold`` (the Alg. 4 line-22 lazy-rebuild idea lifted to the
+store), at which point a full pristine rebuild runs. Below the threshold the
+entry is only marked stale — TopKSeeds' lazy-rebuild check (queries.py)
+rebuilds on first exact-query demand and writes the matrix back.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampling import weight_to_threshold
+from repro.core.simulate import propagate_to_fixpoint
+from repro.graphs.structs import (Graph, GraphDelta, edge_pair_keys,
+                                  pad_to_multiple)
+from repro.kernels import ops
+from repro.service.store import SketchStore, StoreEntry, StoreKey
+
+
+@dataclasses.dataclass
+class DeltaReport:
+    """What apply_delta did: repair path taken + work accounting."""
+
+    added: int
+    removed: int              # edges actually removed (absent pairs don't count)
+    rebuilt: bool             # full rebuild ran (threshold crossed)
+    stale: bool               # entry left stale (removals below threshold)
+    staleness_frac: float
+    repair_sweeps: int        # fixpoint sweeps the insertion repair ran
+    banks_touched: int        # banks whose frontier sweep found real work
+    time_s: float
+
+
+def _touched_edge_arrays(new_g: Graph, delta: GraphDelta, edge_block: int = 256):
+    """Slice the *new* graph's padded edge arrays down to the edges whose
+    (src, dst) pair appears in the delta's additions — their final compound
+    weights included (an added duplicate raises the pair's threshold)."""
+    hit = np.isin(
+        edge_pair_keys(new_g.src[: new_g.m_real], new_g.dst[: new_g.m_real],
+                       new_g.n_pad),
+        edge_pair_keys(delta.add_src, delta.add_dst, new_g.n_pad))
+    src = new_g.src[: new_g.m_real][hit]
+    dst = new_g.dst[: new_g.m_real][hit]
+    if src.size == 0:
+        # every added edge vanished in from_edges (self-loops): nothing touched
+        return None
+    w = new_g.weight[: new_g.m_real][hit]
+    sentinel = np.int32(new_g.n_pad - 1)
+    src = pad_to_multiple(src, edge_block, sentinel)
+    dst = pad_to_multiple(dst, edge_block, sentinel)
+    w = pad_to_multiple(w, edge_block, np.float32(0.0))
+    return src, dst, weight_to_threshold(w)
+
+
+def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
+                *, rebuild_threshold: float = 0.1) -> DeltaReport:
+    """Apply edge insertions/removals to a resident entry, repairing or
+    invalidating its matrix as cheaply as soundness allows.
+
+    The entry's graph is always updated; its StoreKey is kept (the key names
+    the *lineage* — the graph the index was registered under — so engine
+    handles stay valid across deltas).
+    """
+    t0 = time.perf_counter()
+    entry = store.entry(key)
+    m_before = entry.graph.m_real
+    # count edges the removals actually hit (a pair absent from the graph, or
+    # listed twice, removes nothing and must not accrue staleness)
+    removed = 0
+    if delta.num_removed:
+        removed = int(np.isin(
+            edge_pair_keys(entry.graph.src[: m_before],
+                           entry.graph.dst[: m_before], entry.graph.n_pad),
+            edge_pair_keys(delta.rem_src, delta.rem_dst,
+                           entry.graph.n_pad)).sum())
+    new_g = entry.graph.apply_delta(delta).sorted_by_dst()
+    entry.graph = new_g
+    entry.version += 1
+
+    rebuilt = False
+    repair_sweeps = 0
+    banks_touched = 0
+
+    if removed:
+        entry.staleness_frac += removed / max(m_before, 1)
+        if entry.staleness_frac > rebuild_threshold:
+            store.rebuild(key)   # clears stale/staleness, bumps version
+            rebuilt = True
+        else:
+            entry.stale = True
+
+    if delta.num_added and not rebuilt:
+        repair_sweeps, banks_touched = _repair_insertions(entry, new_g, delta)
+
+    entry = store.entry(key)
+    return DeltaReport(added=delta.num_added, removed=removed,
+                       rebuilt=rebuilt, stale=entry.stale,
+                       staleness_frac=entry.staleness_frac,
+                       repair_sweeps=repair_sweeps, banks_touched=banks_touched,
+                       time_s=time.perf_counter() - t0)
+
+
+def _repair_insertions(entry: StoreEntry, new_g: Graph, delta: GraphDelta):
+    """Monotone insertion repair, per register bank.
+
+    Even for a stale entry this is worth doing: the matrix stays a sound
+    over-approximation and the eventual rebuild starts no worse off.
+    """
+    cfg = entry.cfg
+    touched_arrays = _touched_edge_arrays(new_g, delta)
+    if touched_arrays is None:
+        return 0, 0
+    t_src, t_dst, t_thr = touched_arrays
+    t_src_j, t_dst_j, t_thr_j = (jnp.asarray(t_src), jnp.asarray(t_dst),
+                                 jnp.asarray(t_thr))
+    full_src, full_dst = jnp.asarray(new_g.src), jnp.asarray(new_g.dst)
+    full_thr = jnp.asarray(weight_to_threshold(new_g.weight))
+
+    j_loc = entry.regs_per_bank
+    total_sweeps = 0
+    touched = 0
+    new_banks = []
+    for b, m_b in enumerate(entry.banks):
+        x_b = jnp.asarray(entry.x[b * j_loc:(b + 1) * j_loc])
+        # frontier probe: one sweep over just the touched edges
+        m_probe = ops.propagate_sweep(m_b, t_src_j, t_dst_j, t_thr_j, x_b,
+                                      seed=cfg.seed, impl=cfg.impl,
+                                      edge_chunk=cfg.edge_chunk)
+        if not bool(jnp.any(m_probe != m_b)):
+            new_banks.append(m_b)   # no sample in this bank uses the new edges
+            continue
+        touched += 1
+        m_fix, iters = propagate_to_fixpoint(
+            m_probe, full_src, full_dst, full_thr, x_b, seed=cfg.seed,
+            impl=cfg.impl, edge_chunk=cfg.edge_chunk,
+            max_iters=cfg.max_propagate_iters)
+        total_sweeps += int(iters) + 1
+        new_banks.append(m_fix)
+    entry.banks = new_banks
+    return total_sweeps, touched

@@ -1,0 +1,218 @@
+"""Batched influence query engine — the serving analogue of serve/engine.py
+for IM traffic.
+
+A request stream of mixed queries is grouped by (store key, query class),
+padded into fixed-shape batches (batch size and candidate-set length rounded
+up to powers of two so the jit cache stays small), executed under one jit
+per query class, and scattered back to per-request results with latency
+accounting.
+
+``TopKSeeds`` requests are deduplicated: identical (store, k) requests in a
+batch share one execution, and results are memoized against the entry's
+``version`` token (bumped by every delta/rebuild), so repeated top-k traffic
+against an unchanged index is a dictionary hit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.difuser import DiFuserConfig
+from repro.graphs.structs import Graph
+from repro.service import queries as Q
+from repro.service.store import SketchStore, StoreEntry, StoreKey
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One query bound to a store key (assigned by ``InfluenceEngine.submit``)."""
+
+    key: StoreKey
+    query: Q.Query
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Per-request result with serving metadata.
+
+    value: float (SpreadEstimate / MarginalGain / CoverageProbe) or
+           InfluenceResult (TopKSeeds).
+    latency_s: wall time of the batch this request rode in.
+    amortized_s: latency_s / batch_size — the per-query serving cost.
+    batch_size: number of real requests in the executed batch.
+    cache_hit: True if the result came from the top-k memo (no execution).
+    deduped: True if this request shared another identical request's
+             execution within the same batch (distinct from a memo hit).
+    """
+
+    query: Q.Query
+    value: object
+    latency_s: float
+    amortized_s: float
+    batch_size: int
+    cache_hit: bool = False
+    deduped: bool = False
+
+
+class InfluenceEngine:
+    """Accepts a stream of mixed queries and executes them in padded batches."""
+
+    def __init__(self, store: Optional[SketchStore] = None, max_batch: int = 256):
+        # explicit None check: an empty SketchStore is falsy (__len__ == 0)
+        self.store = SketchStore() if store is None else store
+        self.max_batch = max_batch
+        self._pending: list[Request] = []
+        # (store key, k) -> (state token, InfluenceResult); keying tokens in
+        # the *value* means a delta/rebuild overwrites instead of stranding
+        # old-version entries, so the memo is bounded by distinct (key, k)
+        self._topk_memo: dict[tuple, tuple] = {}
+
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
+
+    def register(self, g: Graph, config: Optional[DiFuserConfig] = None) -> StoreKey:
+        """Warm the store for a graph (the one cold build) and return its key."""
+        return self.store.get_or_build(g, config).key
+
+    def submit(self, key: StoreKey, query: Q.Query) -> int:
+        """Enqueue a query; returns its request index in the next ``run``."""
+        self._pending.append(Request(key=key, query=query))
+        return len(self._pending) - 1
+
+    # ------------------------------------------------------------------
+    # Execution
+    # ------------------------------------------------------------------
+
+    def run(self, requests: Optional[Sequence[Request]] = None) -> list[QueryResult]:
+        """Execute pending (or explicitly passed) requests; results are
+        returned in request order."""
+        if requests is None:
+            requests, self._pending = self._pending, []
+        results: list[Optional[QueryResult]] = [None] * len(requests)
+
+        groups: dict[tuple, list[int]] = {}
+        for i, req in enumerate(requests):
+            groups.setdefault((req.key, type(req.query).__name__), []).append(i)
+
+        for (key, qname), idxs in groups.items():
+            entry = self.store.entry(key)
+            for lo in range(0, len(idxs), self.max_batch):
+                chunk = idxs[lo: lo + self.max_batch]
+                if qname == "TopKSeeds":
+                    self._run_topk(entry, requests, chunk, results)
+                elif qname == "SpreadEstimate":
+                    self._run_spread(entry, requests, chunk, results)
+                elif qname == "MarginalGain":
+                    self._run_marginal(entry, requests, chunk, results)
+                elif qname == "CoverageProbe":
+                    self._run_probe(entry, requests, chunk, results)
+                else:  # pragma: no cover
+                    raise TypeError(f"unknown query type: {qname}")
+        return results  # type: ignore[return-value]
+
+    def __call__(self, key: StoreKey, query: Q.Query) -> QueryResult:
+        """Convenience single-query path (batch of one)."""
+        return self.run([Request(key=key, query=query)])[0]
+
+    # -- per-class executors ------------------------------------------------
+
+    def _pad_sets(self, sets: list[tuple]) -> list[tuple]:
+        """Pad the batch dim to a power of two with empty sets (sentinel-only
+        rows are inert) so jit specializations stay O(log max_batch)."""
+        b = _pow2(len(sets))
+        return sets + [()] * (b - len(sets))
+
+    def _run_spread(self, entry, requests, chunk, results):
+        sets = self._pad_sets([requests[i].query.candidates for i in chunk])
+        length = _pow2(max((len(s) for s in sets), default=1))
+        t0 = time.perf_counter()
+        est = Q.spread_estimates(entry, sets, length)
+        dt = time.perf_counter() - t0
+        for j, i in enumerate(chunk):
+            results[i] = QueryResult(requests[i].query, float(est[j]), dt,
+                                     dt / len(chunk), len(chunk))
+
+    def _run_marginal(self, entry, requests, chunk, results):
+        sentinel = entry.graph.n_pad - 1
+        cands = [requests[i].query.candidate for i in chunk]
+        comm = self._pad_sets([requests[i].query.committed for i in chunk])
+        length = _pow2(max((len(s) for s in comm), default=1))
+        cands = cands + [sentinel] * (len(comm) - len(chunk))
+        t0 = time.perf_counter()
+        gains = Q.marginal_gains(entry, cands, comm, length)
+        dt = time.perf_counter() - t0
+        for j, i in enumerate(chunk):
+            results[i] = QueryResult(requests[i].query, float(gains[j]), dt,
+                                     dt / len(chunk), len(chunk))
+
+    def _run_probe(self, entry, requests, chunk, results):
+        sentinel = entry.graph.n_pad - 1
+        flat: list[int] = []
+        spans = []
+        for i in chunk:
+            vs = requests[i].query.vertices
+            spans.append((len(flat), len(vs)))
+            flat.extend(vs)
+        b = _pow2(max(len(flat), 1))
+        flat = flat + [sentinel] * (b - len(flat))
+        t0 = time.perf_counter()
+        est, max_reg = Q.coverage_probes(entry, flat)
+        dt = time.perf_counter() - t0
+        for (off, ln), i in zip(spans, chunk):
+            value = {"est": est[off: off + ln].copy(),
+                     "max_register": max_reg[off: off + ln].copy()}
+            results[i] = QueryResult(requests[i].query, value, dt,
+                                     dt / len(chunk), len(chunk))
+
+    def _run_topk(self, entry, requests, chunk, results):
+        # dedupe identical k within the batch; memoize against entry.version
+        by_k: dict[int, list[int]] = {}
+        for i in chunk:
+            by_k.setdefault(requests[i].query.k, []).append(i)
+        for k, idxs in by_k.items():
+            memo_key = (entry.key, k)
+            cached = self._topk_memo.get(memo_key)
+            if cached is not None and cached[0] == (entry.version, entry.stale):
+                for i in idxs:
+                    results[i] = QueryResult(requests[i].query, cached[1], 0.0,
+                                             0.0, len(idxs), cache_hit=True)
+                continue
+            t0 = time.perf_counter()
+            res = Q.top_k_seeds(self.store, entry, k)
+            dt = time.perf_counter() - t0
+            # top_k_seeds may have rebuilt a stale entry (version bump) —
+            # memoize under the *current* state token
+            entry = self.store.entry(entry.key)
+            self._topk_memo[memo_key] = ((entry.version, entry.stale), res)
+            for j, i in enumerate(idxs):
+                results[i] = QueryResult(requests[i].query, res, dt,
+                                         dt / len(idxs), len(idxs),
+                                         deduped=j > 0)
+
+
+def summarize_latencies(results: Sequence[QueryResult]) -> dict:
+    """Aggregate serving stats: p50/p99 per-request latency, amortized cost."""
+    lat = np.asarray([r.latency_s for r in results], dtype=np.float64)
+    amort = np.asarray([r.amortized_s for r in results], dtype=np.float64)
+    total = float(amort.sum())
+    return {
+        "num_queries": len(results),
+        "total_s": total,
+        "qps": len(results) / total if total > 0 else float("inf"),
+        "p50_ms": float(np.percentile(lat, 50) * 1e3) if len(results) else 0.0,
+        "p99_ms": float(np.percentile(lat, 99) * 1e3) if len(results) else 0.0,
+        "amortized_ms": total / len(results) * 1e3 if len(results) else 0.0,
+        "cache_hits": sum(1 for r in results if r.cache_hit),
+        "deduped": sum(1 for r in results if r.deduped),
+    }

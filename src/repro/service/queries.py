@@ -1,0 +1,174 @@
+"""Influence query types and their lowerings to register reductions.
+
+Every query except ``TopKSeeds`` is a pure reduction over the store's
+propagated matrix — no propagation, no cascade — using the same sufficient
+statistics the distributed selection reduces (sketch.partial_sums /
+estimate_from_sums, paper eqs. 6/7 and Fig. 3):
+
+* ``SpreadEstimate(S)``: union the candidate rows (eq. 5 max-merge) and
+  finish the estimate — expected IC spread of seed set S.
+* ``MarginalGain(c, S)``: spread(S + {c}) - spread(S), two such reductions.
+* ``CoverageProbe(V)``: per-vertex singleton spread for each probed vertex
+  (the quantity Alg. 4's argmax scans globally, served point-wise).
+* ``TopKSeeds(k)``: the full Alg. 4 round loop warm-started from the cached
+  matrix (fill + propagate skipped). If deltas left the entry stale, the
+  lazy-rebuild check fires first and the rebuilt pristine matrix is written
+  back into the store.
+
+Candidate sets are padded with the graph's sentinel vertex (``n_pad - 1``),
+whose row is all VISITED (= -1, the bottom of the max lattice), so padding
+is inert under the union merge by construction — batches of ragged candidate
+sets lower to one fixed-shape jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch
+from repro.core.difuser import InfluenceResult, find_seeds_warm
+from repro.service.store import SketchStore, StoreEntry
+
+
+def _as_tuple(v) -> tuple:
+    if isinstance(v, (int, np.integer)):
+        return (int(v),)
+    return tuple(int(u) for u in np.asarray(v).reshape(-1))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKSeeds:
+    """Greedy top-k seed set (Alg. 4 rounds, warm-started)."""
+
+    k: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SpreadEstimate:
+    """Expected IC spread of a fixed candidate seed set."""
+
+    candidates: tuple
+
+    def __init__(self, candidates):
+        object.__setattr__(self, "candidates", _as_tuple(candidates))
+
+
+@dataclasses.dataclass(frozen=True)
+class MarginalGain:
+    """Expected gain of adding ``candidate`` to ``committed``."""
+
+    candidate: int
+    committed: tuple
+
+    def __init__(self, candidate, committed=()):
+        object.__setattr__(self, "candidate", int(candidate))
+        object.__setattr__(self, "committed", _as_tuple(committed))
+
+
+@dataclasses.dataclass(frozen=True)
+class CoverageProbe:
+    """Per-vertex singleton influence estimates for the probed vertices."""
+
+    vertices: tuple
+
+    def __init__(self, vertices):
+        object.__setattr__(self, "vertices", _as_tuple(vertices))
+
+
+Query = Union[TopKSeeds, SpreadEstimate, MarginalGain, CoverageProbe]
+
+
+# ---------------------------------------------------------------------------
+# Jitted batch kernels (one compile per (B, L) bucket)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("total_regs", "estimator"))
+def _spread_batch(m, cands, *, total_regs: int, estimator: str) -> jnp.ndarray:
+    """m int8[n_pad, J], cands int32[B, L] (sentinel-padded) -> float32[B]."""
+    rows = m[cands]                      # (B, L, J)
+    merged = jnp.max(rows, axis=1)       # eq. (5) union; sentinel rows are -1
+    sums = sketch.partial_sums(merged, estimator=estimator)  # (2, B)
+    return sketch.estimate_from_sums(sums, total_regs, estimator=estimator)
+
+
+@partial(jax.jit, static_argnames=("total_regs", "estimator"))
+def _marginal_batch(m, cand, committed, *, total_regs: int, estimator: str):
+    """cand int32[B], committed int32[B, L] -> (gain, with, without) float32[B]."""
+    with_c = jnp.concatenate([committed, cand[:, None]], axis=1)
+    est_with = _spread_batch(m, with_c, total_regs=total_regs, estimator=estimator)
+    est_without = _spread_batch(m, committed, total_regs=total_regs,
+                                estimator=estimator)
+    return est_with - est_without, est_with, est_without
+
+
+@partial(jax.jit, static_argnames=("total_regs", "estimator"))
+def _probe_batch(m, verts, *, total_regs: int, estimator: str):
+    """verts int32[B] -> (est float32[B], max_register int32[B])."""
+    rows = m[verts]                      # (B, J)
+    sums = sketch.partial_sums(rows, estimator=estimator)
+    est = sketch.estimate_from_sums(sums, total_regs, estimator=estimator)
+    return est, jnp.max(rows, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers (host side)
+# ---------------------------------------------------------------------------
+
+
+def pad_candidate_sets(sets: Sequence[tuple], sentinel: int, length: int) -> np.ndarray:
+    """Stack ragged candidate tuples into int32[B, length], sentinel-padded."""
+    out = np.full((len(sets), max(length, 1)), sentinel, dtype=np.int32)
+    for i, s in enumerate(sets):
+        if len(s):
+            out[i, : len(s)] = np.asarray(s, dtype=np.int32)
+    return out
+
+
+def spread_estimates(entry: StoreEntry, sets: Sequence[tuple],
+                     length: int | None = None) -> np.ndarray:
+    """Batch of SpreadEstimate queries against one store entry. ``length``
+    overrides the padded set length (the engine rounds it to a power of two
+    to bound jit specializations)."""
+    if length is None:
+        length = max((len(s) for s in sets), default=1)
+    cands = pad_candidate_sets(sets, entry.graph.n_pad - 1, length)
+    est = _spread_batch(entry.matrix, jnp.asarray(cands),
+                        total_regs=entry.x.shape[0], estimator=entry.cfg.estimator)
+    return np.asarray(est)
+
+
+def marginal_gains(entry: StoreEntry, cands: Sequence[int],
+                   committed: Sequence[tuple],
+                   length: int | None = None) -> np.ndarray:
+    if length is None:
+        length = max((len(s) for s in committed), default=1)
+    comm = pad_candidate_sets(committed, entry.graph.n_pad - 1, length)
+    gain, _, _ = _marginal_batch(
+        entry.matrix, jnp.asarray(np.asarray(cands, dtype=np.int32)),
+        jnp.asarray(comm), total_regs=entry.x.shape[0],
+        estimator=entry.cfg.estimator)
+    return np.asarray(gain)
+
+
+def coverage_probes(entry: StoreEntry, verts: Sequence[int]) -> tuple[np.ndarray, np.ndarray]:
+    est, max_reg = _probe_batch(
+        entry.matrix, jnp.asarray(np.asarray(verts, dtype=np.int32)),
+        total_regs=entry.x.shape[0], estimator=entry.cfg.estimator)
+    return np.asarray(est), np.asarray(max_reg)
+
+
+def top_k_seeds(store: SketchStore, entry: StoreEntry, k: int) -> InfluenceResult:
+    """Warm-start Alg. 4 from the cached matrix. The lazy-rebuild check: a
+    stale entry (edge removals since the last build) is rebuilt pristine
+    first and the fresh matrix written back into the store, so this query —
+    and every later one — serves from a sound index."""
+    if entry.stale:
+        entry = store.rebuild(entry.key)
+    return find_seeds_warm(entry.graph, k, entry.cfg, matrix=entry.matrix,
+                           x=entry.x, edges=entry.device_edges())

@@ -1,8 +1,16 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+``hypothesis`` is an optional test dependency (not baked into the runtime
+image); the module skips cleanly when it is absent so plain ``pytest -x -q``
+still collects the rest of the suite.
+"""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core.sampling import clz32, edge_hash, mix32, weight_to_threshold
 from repro.core.sketch import VISITED, merge

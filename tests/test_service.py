@@ -1,0 +1,188 @@
+"""Influence query service: store, queries, engine, delta repair."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import influence_score
+from repro.core.difuser import DiFuserConfig, find_seeds
+from repro.graphs import rmat_graph
+from repro.graphs.structs import GraphDelta
+from repro.service import (CoverageProbe, InfluenceEngine, MarginalGain,
+                           Request, SketchStore, SpreadEstimate, TopKSeeds,
+                           apply_delta, summarize_latencies)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One shared (graph, config, store, engine) — the build is the point."""
+    g = rmat_graph(9, edge_factor=8, seed=21, setting="w1")
+    cfg = DiFuserConfig(num_registers=256, seed=2)
+    store = SketchStore()
+    engine = InfluenceEngine(store)
+    key = engine.register(g, cfg)
+    return g, cfg, store, engine, key
+
+
+def test_warm_topk_matches_cold_exactly(served):
+    """Acceptance: warm-store TopKSeeds is byte-identical to cold find_seeds
+    on the same (graph, config, x)."""
+    g, cfg, store, engine, key = served
+    entry = store.entry(key)
+    cold = find_seeds(g, 8, cfg, x=entry.x)
+    warm = engine(key, TopKSeeds(8)).value
+    np.testing.assert_array_equal(warm.seeds, cold.seeds)
+    np.testing.assert_array_equal(warm.est_gains, cold.est_gains)
+    np.testing.assert_array_equal(warm.scores, cold.scores)
+    np.testing.assert_array_equal(warm.rebuilds, cold.rebuilds)
+
+
+def test_spread_estimate_matches_oracle(served):
+    """SpreadEstimate agrees with the independent MC oracle within sketch
+    tolerance (same bar as the e2e internal-score test)."""
+    g, cfg, store, engine, key = served
+    seeds = engine(key, TopKSeeds(5)).value.seeds
+    est = engine(key, SpreadEstimate(seeds)).value
+    oracle = influence_score(g, seeds, num_sims=300, rng_seed=17)
+    assert abs(est - oracle) / max(oracle, 1.0) < 0.20, (est, oracle)
+
+
+def test_marginal_gain_consistency(served):
+    """gain(c | S) == spread(S + c) - spread(S), and committed vertices have
+    zero gain."""
+    g, cfg, store, engine, key = served
+    s0, s1 = 3, 17
+    sp_s0 = engine(key, SpreadEstimate([s0])).value
+    sp_both = engine(key, SpreadEstimate([s0, s1])).value
+    gain = engine(key, MarginalGain(s1, [s0])).value
+    np.testing.assert_allclose(gain, sp_both - sp_s0, rtol=1e-5, atol=1e-3)
+    self_gain = engine(key, MarginalGain(s0, [s0])).value
+    np.testing.assert_allclose(self_gain, 0.0, atol=1e-3)
+
+
+def test_coverage_probe_matches_singleton_spread(served):
+    g, cfg, store, engine, key = served
+    verts = [0, 5, 9]
+    probe = engine(key, CoverageProbe(verts)).value
+    singles = [engine(key, SpreadEstimate([v])).value for v in verts]
+    np.testing.assert_allclose(probe["est"], singles, rtol=1e-5)
+    assert probe["max_register"].shape == (3,)
+
+
+def test_engine_batching_matches_single(served):
+    """A mixed padded batch returns the same answers as one-by-one queries,
+    in request order, with latency accounting filled in."""
+    g, cfg, store, engine, key = served
+    rng = np.random.default_rng(4)
+    qs = []
+    for _ in range(17):
+        size = int(rng.integers(1, 7))
+        qs.append(SpreadEstimate(rng.integers(0, g.n, size)))
+    qs.append(MarginalGain(11, [2, 3]))
+    qs.append(CoverageProbe([1, 2]))
+    results = engine.run([Request(key=key, query=q) for q in qs])
+    assert len(results) == len(qs)
+    for q, r in zip(qs, results):
+        assert r.query is q
+        assert r.latency_s >= r.amortized_s >= 0.0
+    # spot-check padded-batch values against singleton execution
+    for i in (0, 7, 16):
+        solo = engine(key, qs[i]).value
+        np.testing.assert_allclose(results[i].value, solo, rtol=1e-6)
+    stats = summarize_latencies(results)
+    assert stats["num_queries"] == len(qs) and stats["p99_ms"] >= stats["p50_ms"]
+
+
+def test_topk_dedupe_and_memo(served):
+    g, cfg, store, engine, key = served
+    reqs = [Request(key=key, query=TopKSeeds(4)) for _ in range(3)]
+    results = engine.run(reqs)
+    # first batch: one execution shared in-batch (dedupe, not memo hits)
+    assert sum(1 for r in results if r.deduped) == 2
+    assert sum(1 for r in results if r.cache_hit) == 0
+    for r in results[1:]:
+        np.testing.assert_array_equal(r.value.seeds, results[0].value.seeds)
+    # second batch: the memo serves it without execution
+    again = engine.run([Request(key=key, query=TopKSeeds(4))])
+    assert again[0].cache_hit
+    np.testing.assert_array_equal(again[0].value.seeds, results[0].value.seeds)
+
+
+def test_multi_bank_build_bit_identical(served):
+    g, cfg, store, engine, key = served
+    banked = SketchStore(num_banks=4).get_or_build(g, cfg)
+    assert bool(jnp.all(banked.matrix == store.entry(key).matrix))
+
+
+def test_delta_insertion_matches_rebuild(served):
+    """Acceptance: apply_delta insertion result equals a from-scratch build
+    on the updated graph, bit for bit."""
+    g, cfg, _, _, _ = served
+    store = SketchStore()
+    engine = InfluenceEngine(store)
+    key = engine.register(g, cfg)
+    rng = np.random.default_rng(8)
+    delta = GraphDelta.make(add=(rng.integers(0, g.n, 40),
+                                 rng.integers(0, g.n, 40)))
+    report = apply_delta(store, key, delta)
+    assert report.added == 40 and not report.rebuilt and not report.stale
+    entry = store.entry(key)
+    fresh = SketchStore().get_or_build(entry.graph, cfg, entry.x)
+    assert bool(jnp.all(entry.matrix == fresh.matrix))
+
+
+def test_delta_removal_staleness_and_lazy_rebuild(served):
+    """Removals below threshold mark the entry stale; the next TopKSeeds
+    rebuilds pristine and matches a cold run on the updated graph."""
+    g, cfg, _, _, _ = served
+    store = SketchStore()
+    engine = InfluenceEngine(store)
+    key = engine.register(g, cfg)
+    entry = store.entry(key)
+    rem = (np.asarray(entry.graph.src[:4]), np.asarray(entry.graph.dst[:4]))
+    report = apply_delta(store, key, GraphDelta.make(remove=rem))
+    assert report.stale and not report.rebuilt
+    warm = engine(key, TopKSeeds(5)).value
+    entry = store.entry(key)
+    assert not entry.stale and entry.rebuilds == 1
+    cold = find_seeds(entry.graph, 5, cfg, x=entry.x)
+    np.testing.assert_array_equal(warm.seeds, cold.seeds)
+
+
+def test_delta_removal_threshold_triggers_full_rebuild(served):
+    g, cfg, _, _, _ = served
+    store = SketchStore()
+    engine = InfluenceEngine(store)
+    key = engine.register(g, cfg)
+    entry = store.entry(key)
+    m = entry.graph.m_real
+    rem = (np.asarray(entry.graph.src[: m // 2]),
+           np.asarray(entry.graph.dst[: m // 2]))
+    report = apply_delta(store, key, GraphDelta.make(remove=rem),
+                         rebuild_threshold=0.1)
+    assert report.rebuilt and not report.stale
+    fresh = SketchStore().get_or_build(store.entry(key).graph, cfg,
+                                       store.entry(key).x)
+    assert bool(jnp.all(store.entry(key).matrix == fresh.matrix))
+
+
+def test_store_save_load_roundtrip(served, tmp_path):
+    g, cfg, store, engine, key = served
+    path = os.path.join(tmp_path, "index.npz")
+    store.save(path, key)
+    restored = SketchStore()
+    entry2 = restored.load(path)
+    assert entry2.key == key
+    assert bool(jnp.all(entry2.matrix == store.entry(key).matrix))
+    # the restored store serves identical top-k without rebuilding
+    warm2 = InfluenceEngine(restored)(key, TopKSeeds(6)).value
+    warm1 = engine(key, TopKSeeds(6)).value
+    np.testing.assert_array_equal(warm2.seeds, warm1.seeds)
+
+
+def test_store_hit_no_rebuild(served):
+    g, cfg, store, engine, key = served
+    before = len(store)
+    e1 = store.get_or_build(g, cfg)
+    assert len(store) == before and e1 is store.entry(key)
