@@ -1,20 +1,26 @@
 # One entry point for the repo's verify/bench/lint loops.
 #
-#   make test         tier-1 suite (the ROADMAP verify command)
-#   make bench-smoke  fast benchmark pass (small graphs, CI-sized)
-#   make lint         syntax + import sanity over src/tests/benchmarks
+#   make test           tier-1 suite (the ROADMAP verify command)
+#   make test-property  hypothesis property suite (needs requirements-dev.txt)
+#   make bench-smoke    fast benchmark pass (small graphs, CI-sized) +
+#                       model-zoo smoke (every registered diffusion model)
+#   make lint           syntax + import sanity over src/tests/benchmarks/scripts
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench-smoke lint
+.PHONY: test test-property bench-smoke lint
 
 test:
 	python -m pytest -x -q
 
+test-property:
+	python -m pytest -q tests/test_property.py
+
 bench-smoke:
+	python scripts/check_models.py
 	python -m benchmarks.run --fast
 
 lint:
-	python -m compileall -q src tests benchmarks examples
-	python -c "import importlib; [importlib.import_module(m) for m in ('repro', 'repro.core.difuser', 'repro.service', 'repro.service.engine', 'repro.launch.serve_im')]; print('imports ok')"
+	python -m compileall -q src tests benchmarks examples scripts
+	python -c "import importlib; [importlib.import_module(m) for m in ('repro', 'repro.core.difuser', 'repro.diffusion', 'repro.diffusion.models', 'repro.service', 'repro.service.engine', 'repro.launch.serve_im', 'benchmarks.model_zoo')]; print('imports ok')"

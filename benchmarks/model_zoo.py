@@ -1,0 +1,78 @@
+"""Diffusion model zoo benchmark: spread quality + sketch-build time for
+every registered model on the synthetic workloads.
+
+    PYTHONPATH=src python -m benchmarks.model_zoo [--scale 11]
+
+For each ``zoo-*`` preset (configs/difuser_workloads.py — one per registered
+model, shared topology) this measures:
+
+  * ``build``   — cold build_sketch_matrix wall time (fill + fixpoint);
+  * ``seeds``   — full find_seeds wall time;
+  * ``quality`` — DiFuseR's own spread estimate vs the model's independent
+                  Monte-Carlo oracle on the same seed set (ratio ~ 1.0).
+
+Emits the repo's standard ``name,us_per_call,derived`` CSV rows plus one
+``model_zoo.json`` row whose derived field is the full JSON blob (the
+service_throughput.py convention).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import emit, timed
+from repro.baselines import influence_score
+from repro.configs.difuser_workloads import PRESETS
+from repro.core.difuser import DiFuserConfig, build_sketch_matrix, find_seeds
+from repro.launch.im import make_graph
+
+ZOO_PRESETS = tuple(name for name in PRESETS if name.startswith("zoo-"))
+
+
+def main(scale: int | None = None, *, k: int | None = None,
+         registers: int | None = None, num_sims: int = 120,
+         seed: int = 0) -> dict:
+    out = {}
+    for name in ZOO_PRESETS:
+        wl = PRESETS[name]
+        # the preset pins graph/k/registers/model; scale/k/registers override
+        # the preset so --fast stays CI-sized
+        graph_spec = wl.graph if scale is None else f"rmat:{scale}"
+        kk = wl.k if k is None else k
+        regs = wl.registers if registers is None else registers
+        g = make_graph(graph_spec, wl.setting, seed)
+        cfg = DiFuserConfig(num_registers=regs, seed=seed, model=wl.model)
+
+        (_, build_iters, _), build_us = timed(build_sketch_matrix, g, cfg)
+        emit(f"model_zoo.build.{wl.model}", build_us, f"{build_iters}sweeps")
+
+        res, seeds_us = timed(find_seeds, g, kk, cfg)
+        emit(f"model_zoo.find_seeds.{wl.model}", seeds_us, f"k={kk}")
+
+        oracle = influence_score(g, res.seeds, num_sims=num_sims,
+                                 rng_seed=seed + 99, model=wl.model)
+        ratio = float(res.scores[-1]) / max(oracle, 1e-9)
+        emit(f"model_zoo.quality.{wl.model}", 0.0, f"{ratio:.3f}")
+
+        out[wl.model] = {
+            "preset": name, "n": g.n, "m": g.m_real,
+            "build_s": build_us / 1e6, "build_iters": int(build_iters),
+            "find_seeds_s": seeds_us / 1e6,
+            "sketch_spread": float(res.scores[-1]),
+            "oracle_spread": float(oracle),
+            "quality_ratio": ratio,
+        }
+    emit("model_zoo.json", 0.0, json.dumps(out))
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=None,
+                    help="override preset graph with rmat:<scale>")
+    ap.add_argument("--k", type=int, default=None)
+    ap.add_argument("--registers", type=int, default=None)
+    ap.add_argument("--sims", type=int, default=120)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(args.scale, k=args.k, registers=args.registers, num_sims=args.sims)

@@ -17,14 +17,19 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true", help="smaller graphs (CI)")
     args = ap.parse_args()
 
-    from benchmarks import (kernels_micro, roofline_report, service_throughput,
-                            table8_scaling, table9_comm, table34_quality_speed,
-                            table567_fasst)
+    from benchmarks import (kernels_micro, model_zoo, roofline_report,
+                            service_throughput, table8_scaling, table9_comm,
+                            table34_quality_speed, table567_fasst)
 
     jobs = {
         "service": lambda: service_throughput.main(
             scale=11 if args.fast else 14,
             num_queries=50 if args.fast else 200),
+        "model_zoo": lambda: model_zoo.main(
+            scale=9 if args.fast else None,          # None -> preset graphs
+            k=8 if args.fast else None,
+            registers=256 if args.fast else None,
+            num_sims=40 if args.fast else 120),
         "table34": lambda: table34_quality_speed.main(scale=9 if args.fast else 10),
         "table567": lambda: table567_fasst.main(scale=10 if args.fast else 11),
         "table8": lambda: table8_scaling.main(scale=10 if args.fast else 11),

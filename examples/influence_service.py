@@ -21,7 +21,10 @@ from repro.service import (InfluenceEngine, SketchStore, TopKSeeds,
 
 graph = rmat_graph(12, edge_factor=8, seed=0, setting="w1")
 print(f"graph: n={graph.n:,} vertices, m={graph.m_real:,} edges")
-config = DiFuserConfig(num_registers=512, seed=0)
+# explicit diffusion model id ("wc" = the backward-compatible default);
+# the model is part of the SketchStore key, so one engine can serve
+# ic/lt/dic indexes of the same graph side by side
+config = DiFuserConfig(num_registers=512, seed=0, model="wc")
 
 # --- cold baseline: one offline batch answer, full build every call -------
 t0 = time.perf_counter()
@@ -62,3 +65,10 @@ print(f"delta(+64 edges):  repaired in {report.time_s:.2f}s "
       f"vs {store.entry(key).build_time_s:.2f}s rebuild")
 fresh = engine(key, TopKSeeds(10)).value
 print(f"post-delta top-10: {fresh.seeds[:5].tolist()}...")
+
+# --- mixed-model traffic: one engine, distinct store keys per model --------
+lt_key = engine.register(graph, DiFuserConfig(num_registers=512, seed=0, model="lt"))
+assert lt_key != key, "model id must separate store keys"
+lt_top = engine(lt_key, TopKSeeds(10)).value
+print(f"lt model top-10:   {lt_top.seeds[:5].tolist()}... "
+      f"({len(store)} model-keyed indexes resident)")

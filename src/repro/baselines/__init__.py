@@ -1,5 +1,7 @@
 """Baselines the paper compares against, plus the independent scoring oracle."""
-from repro.baselines.mc_oracle import influence_score, exact_greedy
+from repro.baselines.mc_oracle import (exact_greedy, influence_score,
+                                       make_live_sampler, sample_live_mask)
 from repro.baselines.ris import ris_find_seeds
 
-__all__ = ["influence_score", "exact_greedy", "ris_find_seeds"]
+__all__ = ["influence_score", "exact_greedy", "ris_find_seeds",
+           "make_live_sampler", "sample_live_mask"]

@@ -14,6 +14,23 @@ import numpy as np
 from repro.graphs.structs import CSR, Graph
 
 
+def make_live_sampler(g: Graph, model: str):
+    """Precompute a model's host state once and return a closure drawing
+    bool[m_real] live-edge samples of ``g`` in the graph's edge order —
+    the per-sim cost inside the oracle loops is just the RNG draw.
+    Randomness comes from the numpy PRNG — deliberately independent of the
+    fused XOR-hash scheme, so this referees it."""
+    from repro.diffusion import resolve
+
+    sampler = resolve(model).mc_sampler(g)
+    return lambda rng: sampler(rng)[: g.m_real]
+
+
+def sample_live_mask(g: Graph, model: str, rng: np.random.Generator) -> np.ndarray:
+    """One live-edge sample (one-shot convenience over ``make_live_sampler``)."""
+    return make_live_sampler(g, model)(rng)
+
+
 def _bfs_reach(csr: CSR, sampled: np.ndarray, seeds: np.ndarray) -> int:
     """|vertices reachable from seeds via sampled edges| (sampled: bool[m])."""
     visited = np.zeros(csr.n, dtype=bool)
@@ -33,29 +50,42 @@ def _bfs_reach(csr: CSR, sampled: np.ndarray, seeds: np.ndarray) -> int:
 
 
 def influence_score(g: Graph, seeds: np.ndarray, *, num_sims: int = 200,
-                    rng_seed: int = 12345) -> float:
-    """Expected influence of ``seeds`` under IC, by plain Monte-Carlo."""
+                    rng_seed: int = 12345, model: str = "wc") -> float:
+    """Expected influence of ``seeds`` under a registered diffusion model
+    (default ``wc`` — per-edge probabilities from the graph's weights, the
+    historical behaviour), by plain Monte-Carlo."""
     csr = g.csr()
     rng = np.random.default_rng(rng_seed)
     seeds = np.asarray(seeds, dtype=np.int64)
     total = 0
-    for _ in range(num_sims):
-        sampled = rng.random(csr.weight.shape[0]) < csr.weight
-        total += _bfs_reach(csr, sampled, seeds)
+    if model in (None, "wc"):
+        # legacy draw pattern kept bit-for-bit (same RNG stream as pre-zoo)
+        for _ in range(num_sims):
+            sampled = rng.random(csr.weight.shape[0]) < csr.weight
+            total += _bfs_reach(csr, sampled, seeds)
+    else:
+        draw = make_live_sampler(g, model)
+        for _ in range(num_sims):
+            total += _bfs_reach(csr, draw(rng)[csr.order], seeds)
     return total / num_sims
 
 
-def exact_greedy(g: Graph, k: int, *, num_sims: int = 200, rng_seed: int = 999) -> tuple[np.ndarray, float]:
+def exact_greedy(g: Graph, k: int, *, num_sims: int = 200, rng_seed: int = 999,
+                 model: str = "wc") -> tuple[np.ndarray, float]:
     """CELF-free exact greedy with shared samples (the classic Kempe et al.
     randomized-greedy reference, feasible only for small graphs).
 
-    Pre-samples ``num_sims`` graphs once, then per round picks the vertex
-    with the largest exact marginal coverage.
+    Pre-samples ``num_sims`` live-edge graphs once under ``model``, then per
+    round picks the vertex with the largest exact marginal coverage.
     """
     csr = g.csr()
     rng = np.random.default_rng(rng_seed)
     n = csr.n
-    sampled = [rng.random(csr.weight.shape[0]) < csr.weight for _ in range(num_sims)]
+    if model in (None, "wc"):
+        sampled = [rng.random(csr.weight.shape[0]) < csr.weight for _ in range(num_sims)]
+    else:
+        draw = make_live_sampler(g, model)
+        sampled = [draw(rng)[csr.order] for _ in range(num_sims)]
     covered = [np.zeros(n, dtype=bool) for _ in range(num_sims)]
     seeds = []
     # cache per (sim, vertex) reach sets lazily as frozensets of indices

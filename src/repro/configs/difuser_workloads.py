@@ -5,6 +5,10 @@ production-scale dry-run cells in launch/dryrun.py (IM_CELLS).
 The container-scale presets mirror the paper's graph/degree regimes at
 sizes the CPU oracle can referee; the dry-run cells carry the full
 SNAP-scale shapes (n up to 2^26, m up to 2^31) through lower()+compile().
+
+``model`` selects a diffusion model from the repro.diffusion registry
+(wc | ic[:p] | lt | dic[:lambda]); the ``zoo-*`` presets cover one workload
+per registered model for the model-zoo benchmark (benchmarks/model_zoo.py).
 """
 import dataclasses
 
@@ -13,9 +17,10 @@ import dataclasses
 class IMWorkload:
     name: str
     graph: str          # launch/im.py --graph spec
-    setting: str        # paper influence setting
+    setting: str        # paper influence setting (edge-weight generator)
     k: int = 50
     registers: int = 1024
+    model: str = "wc"   # diffusion model spec (repro.diffusion registry)
 
 
 PRESETS = {
@@ -25,4 +30,13 @@ PRESETS = {
     "youtube-like": IMWorkload("youtube-like", "er:8192", "0.005"),
     "mixed-n005": IMWorkload("mixed-n005", "rmat:12", "N0.05"),
     "mixed-u01": IMWorkload("mixed-u01", "rmat:12", "U0.1"),
+    # diffusion model zoo: one workload per registered model, shared topology
+    "zoo-ic": IMWorkload("zoo-ic", "rmat:11", "0.1", k=16, registers=512,
+                         model="ic:0.1"),
+    "zoo-wc": IMWorkload("zoo-wc", "rmat:11", "0.1", k=16, registers=512,
+                         model="wc"),
+    "zoo-lt": IMWorkload("zoo-lt", "rmat:11", "0.1", k=16, registers=512,
+                         model="lt"),
+    "zoo-dic": IMWorkload("zoo-dic", "rmat:11", "0.1", k=16, registers=512,
+                          model="dic:1.0"),
 }

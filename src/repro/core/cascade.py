@@ -7,6 +7,8 @@ visited set is already closed, re-closing after adding one seed only
 explores the seed's newly-covered region — the same work the paper's
 frontier queue does, expressed as masked dense sweeps with a fixpoint early
 exit (DESIGN.md §2).
+
+Same (h, lo, predicate) diffusion-model hook as core/simulate.py.
 """
 from __future__ import annotations
 
@@ -19,9 +21,11 @@ from repro.core.sketch import VISITED
 from repro.kernels import ops
 
 
-@partial(jax.jit, static_argnames=("seed", "impl", "edge_chunk", "max_iters"))
-def cascade_from_seed(m, seed_vertex, src, dst, thr, x, *, seed: int = 0,
-                      impl: str = "ref", edge_chunk: int = 2048, max_iters: int = 64):
+@partial(jax.jit, static_argnames=("seed", "impl", "edge_chunk", "max_iters",
+                                   "predicate"))
+def cascade_from_seed(m, seed_vertex, src, dst, thr, x, h=None, lo=None, *,
+                      seed: int = 0, impl: str = "ref", edge_chunk: int = 2048,
+                      max_iters: int = 64, predicate=None):
     """Mark the seed visited in all sims and close under sampled edges.
 
     Returns (m, iters_used).
@@ -35,7 +39,8 @@ def cascade_from_seed(m, seed_vertex, src, dst, thr, x, *, seed: int = 0,
     def body(carry):
         m_cur, _, it = carry
         m_new = ops.cascade_sweep(m_cur, src, dst, thr, x, seed=seed, impl=impl,
-                                  edge_chunk=edge_chunk)
+                                  edge_chunk=edge_chunk, h=h, lo=lo,
+                                  predicate=predicate)
         changed = jnp.any(m_new != m_cur)
         return m_new, changed, it + 1
 

@@ -5,6 +5,12 @@ of {select, cascade, score, lazy-rebuild} — is one jitted JAX program:
 ``lax.scan`` over seed rounds, ``lax.while_loop`` fixpoints inside,
 ``lax.cond`` for the rebuild decision. The distributed runtime
 (core/distributed.py) wraps the same building blocks in shard_map.
+
+Diffusion model: ``DiFuserConfig.model`` selects a registered model from
+repro.diffusion (``wc`` default — the legacy behaviour, bit-identical).
+Host preprocessing lowers the model to per-edge ``(h, lo, thr)`` operands
+once per build (hash once instead of once per sweep), and the model's fused
+predicate is threaded through every kernel as a static hook.
 """
 from __future__ import annotations
 
@@ -18,11 +24,23 @@ import numpy as np
 
 from repro.core import select as _select
 from repro.core.cascade import cascade_from_seed
-from repro.core.sampling import make_x_vector, weight_to_threshold
+from repro.core.sampling import make_x_vector
 from repro.core.simulate import propagate_to_fixpoint
 from repro.core.sketch import VISITED, count_visited
+# the constants leaf is importable mid-cycle (repro.diffusion's package init
+# reaches back through repro.core); the full registry is not — hence the
+# lazy resolve_model below
+from repro.diffusion.constants import DEFAULT_MODEL
 from repro.graphs.structs import Graph
 from repro.kernels import ops
+
+
+def resolve_model(spec: str):
+    """Lazy repro.diffusion.resolve — breaks the package-init cycle
+    (diffusion/models.py imports repro.core.sampling)."""
+    from repro.diffusion import resolve
+
+    return resolve(spec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +56,7 @@ class DiFuserConfig:
     edge_chunk: int = 2048
     impl: str = "ref"                  # "ref" | "pallas"
     sort_x: bool = True                # FASST ordering (§4.1)
+    model: str = DEFAULT_MODEL         # diffusion model spec (repro.diffusion)
 
 
 @dataclasses.dataclass
@@ -50,14 +69,25 @@ class InfluenceResult:
     x: np.ndarray              # the random vector actually used (uint32[J])
 
 
+def edge_operands(g: Graph, cfg: DiFuserConfig):
+    """Lower ``cfg.model`` against ``g`` (must already be in serving edge
+    order, i.e. dst-sorted) to device-ready jnp operands
+    ``(src, dst, h, lo, thr)`` — everything the kernels consume besides the
+    register matrix and x."""
+    ep = resolve_model(cfg.model).edge_params(g, seed=cfg.seed)
+    return (jnp.asarray(g.src), jnp.asarray(g.dst), jnp.asarray(ep.h),
+            jnp.asarray(ep.lo), jnp.asarray(ep.thr))
+
+
 def _init_registers(n_pad: int, n_real: int, num_regs: int) -> jnp.ndarray:
     m = jnp.zeros((n_pad, num_regs), jnp.int8)
     pad_rows = jnp.arange(n_pad)[:, None] >= n_real
     return jnp.where(pad_rows, jnp.int8(VISITED), m)
 
 
-def _seed_rounds(m, src, dst, thr, x, *, k, n_real, num_regs, seed, estimator,
-                 impl, edge_chunk, max_prop, max_casc, rebuild_threshold):
+def _seed_rounds(m, src, dst, h, lo, thr, x, *, k, n_real, num_regs, seed,
+                 estimator, impl, edge_chunk, max_prop, max_casc,
+                 rebuild_threshold, predicate=None):
     """Alg. 4 lines 7-23: K rounds of {select, cascade, score, lazy-rebuild}
     starting from an already-propagated register matrix ``m``.
 
@@ -70,8 +100,9 @@ def _seed_rounds(m, src, dst, thr, x, *, k, n_real, num_regs, seed, estimator,
         m, score, oldscore = carry
         sums = _select.local_sums(m, impl=impl)
         s, gain = _select.finish_select(sums, num_regs, n_real, estimator=estimator)
-        m, _ = cascade_from_seed(m, s, src, dst, thr, x, seed=seed, impl=impl,
-                                 edge_chunk=edge_chunk, max_iters=max_casc)
+        m, _ = cascade_from_seed(m, s, src, dst, thr, x, h, lo, seed=seed,
+                                 impl=impl, edge_chunk=edge_chunk,
+                                 max_iters=max_casc, predicate=predicate)
         visited = count_visited(m, n_real).astype(jnp.float32)
         new_score = visited / jnp.float32(num_regs)
         rel = (new_score - oldscore) / jnp.maximum(new_score, 1e-9)
@@ -79,9 +110,9 @@ def _seed_rounds(m, src, dst, thr, x, *, k, n_real, num_regs, seed, estimator,
 
         def rebuild(m):
             m2 = ops.sketch_fill(m, reg_offset=0, seed=seed, impl=impl)
-            m2, _ = propagate_to_fixpoint(m2, src, dst, thr, x, seed=seed,
+            m2, _ = propagate_to_fixpoint(m2, src, dst, thr, x, h, lo, seed=seed,
                                           impl=impl, edge_chunk=edge_chunk,
-                                          max_iters=max_prop)
+                                          max_iters=max_prop, predicate=predicate)
             return m2, new_score
 
         def keep(m):
@@ -95,41 +126,46 @@ def _seed_rounds(m, src, dst, thr, x, *, k, n_real, num_regs, seed, estimator,
     return outs  # (seeds, gains, scores, rebuilds)
 
 
-def _build_matrix(src, dst, thr, x, n_pad, *, n_real, num_regs, seed, impl,
-                  edge_chunk, max_prop, reg_offset=0):
+def _build_matrix(src, dst, h, lo, thr, x, n_pad, *, n_real, num_regs, seed, impl,
+                  edge_chunk, max_prop, reg_offset=0, predicate=None):
     """Alg. 4 lines 3-6: init + fill + propagate-to-fixpoint. Returns (m, iters)."""
     m = _init_registers(n_pad, n_real, num_regs)
     m = ops.sketch_fill(m, reg_offset=reg_offset, seed=seed, impl=impl)
     return propagate_to_fixpoint(
-        m, src, dst, thr, x, seed=seed, impl=impl, edge_chunk=edge_chunk,
-        max_iters=max_prop)
+        m, src, dst, thr, x, h, lo, seed=seed, impl=impl, edge_chunk=edge_chunk,
+        max_iters=max_prop, predicate=predicate)
 
 
-def _find_seeds(src, dst, thr, x, n_pad, *, k, n_real, num_regs, seed, estimator,
-                impl, edge_chunk, max_prop, max_casc, rebuild_threshold):
+def _find_seeds(src, dst, h, lo, thr, x, n_pad, *, k, n_real, num_regs, seed,
+                estimator, impl, edge_chunk, max_prop, max_casc,
+                rebuild_threshold, predicate=None):
     m, build_iters = _build_matrix(
-        src, dst, thr, x, n_pad, n_real=n_real, num_regs=num_regs, seed=seed,
-        impl=impl, edge_chunk=edge_chunk, max_prop=max_prop)
+        src, dst, h, lo, thr, x, n_pad, n_real=n_real, num_regs=num_regs,
+        seed=seed, impl=impl, edge_chunk=edge_chunk, max_prop=max_prop,
+        predicate=predicate)
     seeds, gains, scores, rebuilds = _seed_rounds(
-        m, src, dst, thr, x, k=k, n_real=n_real, num_regs=num_regs, seed=seed,
-        estimator=estimator, impl=impl, edge_chunk=edge_chunk, max_prop=max_prop,
-        max_casc=max_casc, rebuild_threshold=rebuild_threshold)
+        m, src, dst, h, lo, thr, x, k=k, n_real=n_real, num_regs=num_regs,
+        seed=seed, estimator=estimator, impl=impl, edge_chunk=edge_chunk,
+        max_prop=max_prop, max_casc=max_casc,
+        rebuild_threshold=rebuild_threshold, predicate=predicate)
     return seeds, gains, scores, rebuilds, build_iters
 
 
 _find_seeds_jit = partial(jax.jit, static_argnames=(
     "k", "n_real", "n_pad", "num_regs", "seed", "estimator", "impl", "edge_chunk",
-    "max_prop", "max_casc", "rebuild_threshold"))(
-    lambda src, dst, thr, x, *, n_pad, **kw: _find_seeds(src, dst, thr, x, n_pad, **kw))
+    "max_prop", "max_casc", "rebuild_threshold", "predicate"))(
+    lambda src, dst, h, lo, thr, x, *, n_pad, **kw: _find_seeds(
+        src, dst, h, lo, thr, x, n_pad, **kw))
 
 _build_matrix_jit = partial(jax.jit, static_argnames=(
     "n_pad", "n_real", "num_regs", "seed", "impl", "edge_chunk", "max_prop",
-    "reg_offset"))(
-    lambda src, dst, thr, x, *, n_pad, **kw: _build_matrix(src, dst, thr, x, n_pad, **kw))
+    "reg_offset", "predicate"))(
+    lambda src, dst, h, lo, thr, x, *, n_pad, **kw: _build_matrix(
+        src, dst, h, lo, thr, x, n_pad, **kw))
 
 _seed_rounds_jit = partial(jax.jit, static_argnames=(
     "k", "n_real", "num_regs", "seed", "estimator", "impl", "edge_chunk",
-    "max_prop", "max_casc", "rebuild_threshold"))(_seed_rounds)
+    "max_prop", "max_casc", "rebuild_threshold", "predicate"))(_seed_rounds)
 
 
 def find_seeds(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
@@ -138,13 +174,14 @@ def find_seeds(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
     (the distributed tests use this to pin identical sample spaces)."""
     cfg = config or DiFuserConfig()
     g, x = normalize_inputs(g, cfg, x)
-    thr = weight_to_threshold(g.weight)
+    src, dst, h, lo, thr = edge_operands(g, cfg)
     seeds, gains, scores, rebuilds, build_iters = _find_seeds_jit(
-        jnp.asarray(g.src), jnp.asarray(g.dst), jnp.asarray(thr), jnp.asarray(x),
+        src, dst, h, lo, thr, jnp.asarray(x),
         n_pad=g.n_pad, k=k, n_real=g.n, num_regs=cfg.num_registers, seed=cfg.seed,
         estimator=cfg.estimator, impl=cfg.impl, edge_chunk=cfg.edge_chunk,
         max_prop=cfg.max_propagate_iters, max_casc=cfg.max_cascade_iters,
-        rebuild_threshold=cfg.rebuild_threshold)
+        rebuild_threshold=cfg.rebuild_threshold,
+        predicate=resolve_model(cfg.model).predicate)
     return InfluenceResult(
         seeds=np.asarray(seeds), est_gains=np.asarray(gains),
         scores=np.asarray(scores), rebuilds=np.asarray(rebuilds),
@@ -188,18 +225,19 @@ def build_sketch_matrix(g: Graph, config: Optional[DiFuserConfig] = None,
     cfg = config or DiFuserConfig()
     if not normalized:
         g, x = normalize_inputs(g, cfg, x)
-    thr = weight_to_threshold(g.weight)
+    src, dst, h, lo, thr = edge_operands(g, cfg)
+    predicate = resolve_model(cfg.model).predicate
     if init_matrix is None:
         m, iters = _build_matrix_jit(
-            jnp.asarray(g.src), jnp.asarray(g.dst), jnp.asarray(thr),
-            jnp.asarray(x), n_pad=g.n_pad, n_real=g.n, num_regs=x.shape[0],
-            seed=cfg.seed, impl=cfg.impl, edge_chunk=cfg.edge_chunk,
-            max_prop=cfg.max_propagate_iters, reg_offset=reg_offset)
+            src, dst, h, lo, thr, jnp.asarray(x), n_pad=g.n_pad, n_real=g.n,
+            num_regs=x.shape[0], seed=cfg.seed, impl=cfg.impl,
+            edge_chunk=cfg.edge_chunk, max_prop=cfg.max_propagate_iters,
+            reg_offset=reg_offset, predicate=predicate)
     else:
         m, iters = propagate_to_fixpoint(
-            init_matrix, jnp.asarray(g.src), jnp.asarray(g.dst),
-            jnp.asarray(thr), jnp.asarray(x), seed=cfg.seed, impl=cfg.impl,
-            edge_chunk=cfg.edge_chunk, max_iters=cfg.max_propagate_iters)
+            init_matrix, src, dst, thr, jnp.asarray(x), h, lo, seed=cfg.seed,
+            impl=cfg.impl, edge_chunk=cfg.edge_chunk,
+            max_iters=cfg.max_propagate_iters, predicate=predicate)
     return m, int(iters), x
 
 
@@ -211,20 +249,21 @@ def find_seeds_warm(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
     program as ``find_seeds``'s, so the returned seed set is byte-identical
     to a cold run; only the build cost is amortized away.
 
-    ``edges``: optional (src, dst, thr) device arrays for an already
+    ``edges``: optional (src, dst, h, lo, thr) device arrays for an already
     dst-sorted ``g`` with ``x`` already normalized — the SketchStore fast
     path, skipping the per-query O(m log m) host sort and re-upload."""
     cfg = config or DiFuserConfig()
     if edges is None:
         g, x = normalize_inputs(g, cfg, x)
-        edges = (jnp.asarray(g.src), jnp.asarray(g.dst),
-                 jnp.asarray(weight_to_threshold(g.weight)))
+        edges = edge_operands(g, cfg)
+    src, dst, h, lo, thr = edges
     seeds, gains, scores, rebuilds = _seed_rounds_jit(
-        matrix, edges[0], edges[1], edges[2],
+        matrix, src, dst, h, lo, thr,
         jnp.asarray(x), k=k, n_real=g.n, num_regs=x.shape[0], seed=cfg.seed,
         estimator=cfg.estimator, impl=cfg.impl, edge_chunk=cfg.edge_chunk,
         max_prop=cfg.max_propagate_iters, max_casc=cfg.max_cascade_iters,
-        rebuild_threshold=cfg.rebuild_threshold)
+        rebuild_threshold=cfg.rebuild_threshold,
+        predicate=resolve_model(cfg.model).predicate)
     return InfluenceResult(
         seeds=np.asarray(seeds), est_gains=np.asarray(gains),
         scores=np.asarray(scores), rebuilds=np.asarray(rebuilds),

@@ -21,9 +21,11 @@ Two partition modes, both SPMD under one ``shard_map``:
 The pod axis (multi-pod mesh) extends the sample space: ``pod × model``
 shards form one flat sim axis (more simulations, same algorithm).
 
-Bucket edges carry precomputed hashes (hash once per edge instead of once
-per sweep — legal because h(u,v) is sample-independent; the fused decision
-``(X ^ h) < thr`` still happens per (edge, register) on device).
+Bucket edges carry the precomputed fused-predicate operands (h, lo, thr) of
+the configured diffusion model (hash once per edge instead of once per
+sweep — legal for *every* registered model because h is sample-independent;
+the fused decision still happens per (edge, register) on device through the
+model's predicate).
 """
 from __future__ import annotations
 
@@ -37,11 +39,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sketch
-from repro.core.difuser import DiFuserConfig, InfluenceResult
+from repro.core.difuser import DiFuserConfig, InfluenceResult, resolve_model
 from repro.core.fasst import partition_samples
-from repro.core.sampling import edge_hash, make_x_vector, weight_to_threshold
+from repro.core.sampling import fused_predicate, make_x_vector
 from repro.core.sketch import VISITED
 from repro.graphs.structs import Graph
+
+# jax API drift guard (single source: utils/jax_compat.py, re-exported here):
+# old containers ship a jax without jax.sharding.AxisType and its
+# mesh/shard_map surface. Tests that need a multi-device mesh skip on this
+# flag instead of erroring.
+from repro.utils.jax_compat import JAX_HAS_AXIS_TYPE  # noqa: F401
 
 # ---------------------------------------------------------------------------
 # Host-side partition build
@@ -68,27 +76,31 @@ class Partition2D:
     p_h: np.ndarray            # uint32[mu_v, mu_s, mu_v, Bp] edge hash
     p_w: np.ndarray            # int32 — local write row
     p_r: np.ndarray            # int32 — row within the read block
-    p_t: np.ndarray            # uint32 — sampling threshold
+    p_t: np.ndarray            # uint32 — sampling threshold / interval width
+    p_l: np.ndarray            # uint32 — interval low endpoint (model zoo)
     # cascade buckets: write row = dst (local id), read row = src (block id)
     c_h: np.ndarray
     c_w: np.ndarray
     c_r: np.ndarray
     c_t: np.ndarray
+    c_l: np.ndarray
     edge_counts: np.ndarray    # int64[mu_v, mu_s] real (unpadded) edges per shard
     comm_bytes_per_sweep: int  # ring traffic per device per sweep (both phases equal)
 
 
 def _bucketize(ids: np.ndarray, w_own: np.ndarray, k: np.ndarray,
                eh: np.ndarray, wrow: np.ndarray, rrow: np.ndarray, thr: np.ndarray,
-               mu_v: int, b_max: int):
+               elo: np.ndarray, mu_v: int, b_max: int):
     """Scatter per-edge data into (mu_v, mu_v, B) padded buckets."""
     h_out = np.zeros((mu_v, mu_v, b_max), dtype=np.uint32)
     w_out = np.zeros((mu_v, mu_v, b_max), dtype=np.int32)
     r_out = np.zeros((mu_v, mu_v, b_max), dtype=np.int32)
     t_out = np.zeros((mu_v, mu_v, b_max), dtype=np.uint32)  # thr=0 padding is inert
+    l_out = np.zeros((mu_v, mu_v, b_max), dtype=np.uint32)
     order = np.lexsort((ids, k, w_own))
     w_s, k_s = w_own[order], k[order]
-    eh_s, wr_s, rr_s, th_s = eh[order], wrow[order], rrow[order], thr[order]
+    eh_s, wr_s, rr_s, th_s, lo_s = (eh[order], wrow[order], rrow[order],
+                                    thr[order], elo[order])
     keys = w_s.astype(np.int64) * mu_v + k_s
     boundaries = np.searchsorted(keys, np.arange(mu_v * mu_v + 1))
     for b in range(mu_v * mu_v):
@@ -101,12 +113,13 @@ def _bucketize(ids: np.ndarray, w_own: np.ndarray, k: np.ndarray,
         w_out[v, kk, :cnt] = wr_s[lo:hi]
         r_out[v, kk, :cnt] = rr_s[lo:hi]
         t_out[v, kk, :cnt] = th_s[lo:hi]
-    return h_out, w_out, r_out, t_out
+        l_out[v, kk, :cnt] = lo_s[lo:hi]
+    return h_out, w_out, r_out, t_out, l_out
 
 
 def build_partition_2d(g: Graph, x: np.ndarray, mu_v: int, mu_s: int, *,
                        seed: int = 0, method: str = "fasst",
-                       edge_block: int = 256) -> Partition2D:
+                       edge_block: int = 256, model: str = "wc") -> Partition2D:
     """FASST sample-space split × contiguous vertex split, fully bucketed."""
     r = x.shape[0]
     assert r % mu_s == 0
@@ -115,8 +128,9 @@ def build_partition_2d(g: Graph, x: np.ndarray, mu_v: int, mu_s: int, *,
 
     n_pad = g.n_pad + ((-g.n_pad) % mu_v)
     n_loc = n_pad // mu_v
-    eh_all = edge_hash(g.src, g.dst, seed=seed)
-    thr_all = weight_to_threshold(g.weight)
+    mdl = resolve_model(model)
+    ep = mdl.edge_params(g, seed=seed)
+    eh_all, lo_all, thr_all = ep.h, ep.lo, ep.thr
     src = g.src.astype(np.int64)
     dst = g.dst.astype(np.int64)
     own_src = (src // n_loc).astype(np.int32)
@@ -127,7 +141,9 @@ def build_partition_2d(g: Graph, x: np.ndarray, mu_v: int, mu_s: int, *,
 
     p_parts, c_parts, counts = [], [], np.zeros((mu_v, mu_s), dtype=np.int64)
     bp_sizes, bc_sizes = [], []
-    masks = [np.nonzero(_sampled_by_any(eh_all, thr_all, x_shards[s]))[0] for s in range(mu_s)]
+    masks = [np.nonzero(_sampled_by_any(eh_all, thr_all, x_shards[s], lo=lo_all,
+                                        predicate=mdl.predicate))[0]
+             for s in range(mu_s)]
     # compute global max bucket sizes first so every shard pads identically
     for s in range(mu_s):
         ids = masks[s]
@@ -142,14 +158,16 @@ def build_partition_2d(g: Graph, x: np.ndarray, mu_v: int, mu_s: int, *,
 
     for s in range(mu_s):
         ids = masks[s]
-        e_h, e_t = eh_all[ids], thr_all[ids]
+        e_h, e_t, e_l = eh_all[ids], thr_all[ids], lo_all[ids]
         wsrc, wdst = own_src[ids], own_dst[ids]
         kp = (wdst - wsrc) % mu_v
         kc = (wsrc - wdst) % mu_v
         src_loc = (src[ids] % n_loc).astype(np.int32)
         dst_loc = (dst[ids] % n_loc).astype(np.int32)
-        p_parts.append(_bucketize(ids, wsrc, kp, e_h, src_loc, dst_loc, e_t, mu_v, b_max))
-        c_parts.append(_bucketize(ids, wdst, kc, e_h, dst_loc, src_loc, e_t, mu_v, b_max))
+        p_parts.append(_bucketize(ids, wsrc, kp, e_h, src_loc, dst_loc, e_t, e_l,
+                                  mu_v, b_max))
+        c_parts.append(_bucketize(ids, wdst, kc, e_h, dst_loc, src_loc, e_t, e_l,
+                                  mu_v, b_max))
         for v in range(mu_v):
             counts[v, s] = int((wsrc == v).sum())
 
@@ -160,8 +178,10 @@ def build_partition_2d(g: Graph, x: np.ndarray, mu_v: int, mu_s: int, *,
     return Partition2D(
         n=g.n, n_pad=n_pad, n_loc=n_loc, j_loc=j_loc, mu_v=mu_v, mu_s=mu_s,
         x_shards=x_shards,
-        p_h=stack(p_parts, 0), p_w=stack(p_parts, 1), p_r=stack(p_parts, 2), p_t=stack(p_parts, 3),
-        c_h=stack(c_parts, 0), c_w=stack(c_parts, 1), c_r=stack(c_parts, 2), c_t=stack(c_parts, 3),
+        p_h=stack(p_parts, 0), p_w=stack(p_parts, 1), p_r=stack(p_parts, 2),
+        p_t=stack(p_parts, 3), p_l=stack(p_parts, 4),
+        c_h=stack(c_parts, 0), c_w=stack(c_parts, 1), c_r=stack(c_parts, 2),
+        c_t=stack(c_parts, 3), c_l=stack(c_parts, 4),
         edge_counts=counts, comm_bytes_per_sweep=comm)
 
 
@@ -170,16 +190,26 @@ def build_partition_2d(g: Graph, x: np.ndarray, mu_v: int, mu_s: int, *,
 # ---------------------------------------------------------------------------
 
 
-def _bucket_sweep_propagate(acc, block, h, w, r, t, x_loc):
+def _bucket_sweep_propagate(acc, block, h, w, r, t, x_loc, lo=None, predicate=None):
     """Jacobi max-merge for one bucket: acc[w] <- max(acc[w], masked block[r])."""
-    mask = (h[:, None] ^ x_loc[None, :].astype(jnp.uint32)) < t[:, None]
+    if lo is None:
+        lo = jnp.zeros(t.shape, jnp.uint32)
+    if predicate is None:
+        predicate = fused_predicate
+    mask = predicate(h[:, None].astype(jnp.uint32), lo[:, None].astype(jnp.uint32),
+                     t[:, None].astype(jnp.uint32), x_loc[None, :].astype(jnp.uint32))
     vals = block[r]
     contrib = jnp.where(mask, vals, jnp.int8(VISITED))
     return acc.at[w].max(contrib)
 
 
-def _bucket_sweep_cascade(acc_vis, block, h, w, r, t, x_loc):
-    mask = (h[:, None] ^ x_loc[None, :].astype(jnp.uint32)) < t[:, None]
+def _bucket_sweep_cascade(acc_vis, block, h, w, r, t, x_loc, lo=None, predicate=None):
+    if lo is None:
+        lo = jnp.zeros(t.shape, jnp.uint32)
+    if predicate is None:
+        predicate = fused_predicate
+    mask = predicate(h[:, None].astype(jnp.uint32), lo[:, None].astype(jnp.uint32),
+                     t[:, None].astype(jnp.uint32), x_loc[None, :].astype(jnp.uint32))
     newly = jnp.logical_and(mask, block[r] == VISITED).astype(jnp.uint8)
     return acc_vis.at[w].max(newly)
 
@@ -187,22 +217,24 @@ def _bucket_sweep_cascade(acc_vis, block, h, w, r, t, x_loc):
 def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
                          sim_axes: Sequence[str], estimator: str,
                          rebuild_threshold: float, max_prop: int, max_casc: int,
-                         seed: int, schedule: str = "ring", local_sweeps: int = 0):
+                         seed: int, schedule: str = "ring", local_sweeps: int = 0,
+                         predicate=None):
     """Returns the shard_map body running the full Alg. 4 loop."""
     mu_v, mu_s = part.mu_v, part.mu_s
     n_loc, j_loc, n_real = part.n_loc, part.j_loc, part.n
     total_regs = mu_s * j_loc
     all_axes = (vertex_axis, *sim_axes)
+    pred = predicate if predicate is not None else fused_predicate
 
-    def local_sweep(m_loc, bh, bw, br, bt, x_loc, merge):
+    def local_sweep(m_loc, bh, bw, br, bt, bl, x_loc, merge):
         """Sweep only the k=0 bucket (reads own register block; no comm)."""
         init = m_loc if merge is _bucket_sweep_propagate else (m_loc == VISITED).astype(jnp.uint8)
-        acc = merge(init, m_loc, bh[0], bw[0], br[0], bt[0], x_loc)
+        acc = merge(init, m_loc, bh[0], bw[0], br[0], bt[0], x_loc, bl[0], pred)
         if merge is _bucket_sweep_propagate:
             return jnp.where(m_loc == VISITED, m_loc, acc)
         return jnp.where(acc.astype(bool), jnp.int8(VISITED), m_loc)
 
-    def ring_sweep(m_loc, bh, bw, br, bt, x_loc, merge):
+    def ring_sweep(m_loc, bh, bw, br, bt, bl, x_loc, merge):
         """One full sweep: mu_v ring steps over the data axis."""
         init = m_loc if merge is _bucket_sweep_propagate else (m_loc == VISITED).astype(jnp.uint8)
         acc = init
@@ -212,11 +244,13 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
             me = jax.lax.axis_index(vertex_axis)
             for kk in range(mu_v):
                 owner = jax.lax.rem(me + kk, mu_v)
-                acc = merge(acc, blocks[owner], bh[kk], bw[kk], br[kk], bt[kk], x_loc)
+                acc = merge(acc, blocks[owner], bh[kk], bw[kk], br[kk], bt[kk],
+                            x_loc, bl[kk], pred)
         else:
             block = m_loc
             for kk in range(mu_v):
-                acc = merge(acc, block, bh[kk], bw[kk], br[kk], bt[kk], x_loc)
+                acc = merge(acc, block, bh[kk], bw[kk], br[kk], bt[kk], x_loc,
+                            bl[kk], pred)
                 if kk + 1 < mu_v:
                     perm = [(i, (i - 1) % mu_v) for i in range(mu_v)]
                     block = jax.lax.ppermute(block, vertex_axis, perm)
@@ -224,7 +258,7 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
             return jnp.where(m_loc == VISITED, m_loc, acc)
         return jnp.where(acc.astype(bool), jnp.int8(VISITED), m_loc)
 
-    def fixpoint(m_loc, bh, bw, br, bt, x_loc, merge, max_iters):
+    def fixpoint(m_loc, bh, bw, br, bt, bl, x_loc, merge, max_iters):
         def cond(c):
             return jnp.logical_and(c[1], c[2] < max_iters)
 
@@ -234,15 +268,15 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
             # a ring exchange (edges FASST-placed mostly intra-shard, so a
             # few local sweeps kill most of the frontier; §Perf difuser)
             for _ in range(local_sweeps):
-                m_cur = local_sweep(m_cur, bh, bw, br, bt, x_loc, merge)
-            m_new = ring_sweep(m_cur, bh, bw, br, bt, x_loc, merge)
+                m_cur = local_sweep(m_cur, bh, bw, br, bt, bl, x_loc, merge)
+            m_new = ring_sweep(m_cur, bh, bw, br, bt, bl, x_loc, merge)
             changed = jax.lax.psum(jnp.any(m_new != m_cur).astype(jnp.int32), all_axes) > 0
             return m_new, changed, it + 1
 
         m_out, _, iters = jax.lax.while_loop(cond, body, (m_loc, jnp.bool_(True), jnp.int32(0)))
         return m_out, iters
 
-    def body(x_loc, ph, pw, pr, pt, ch, cw, cr, ct):
+    def body(x_loc, ph, pw, pr, pt, pl, ch, cw, cr, ct, cl):
         # local shard coordinates; sim axes flatten row-major (pod major)
         vi = jax.lax.axis_index(vertex_axis)
         si = jnp.int32(0)
@@ -255,8 +289,8 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
         rows = row0 + jnp.arange(n_loc, dtype=jnp.int32)
         valid_row = rows < n_real
 
-        ph, pw, pr, pt = ph[0, 0], pw[0, 0], pr[0, 0], pt[0, 0]
-        ch, cw, cr, ct = ch[0, 0], cw[0, 0], cr[0, 0], ct[0, 0]
+        ph, pw, pr, pt, pl = ph[0, 0], pw[0, 0], pr[0, 0], pt[0, 0], pl[0, 0]
+        ch, cw, cr, ct, cl = ch[0, 0], cw[0, 0], cr[0, 0], ct[0, 0], cl[0, 0]
         x_loc = x_loc[0]
 
         # ---- fill + initial propagate (Alg. 4 lines 3-6) ----
@@ -269,7 +303,7 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
         def refill(m_cur):
             return jnp.where(m_cur == VISITED, m_cur, fresh.astype(jnp.int8))
 
-        m_loc, build_iters = fixpoint(m_loc, ph, pw, pr, pt, x_loc,
+        m_loc, build_iters = fixpoint(m_loc, ph, pw, pr, pt, pl, x_loc,
                                       _bucket_sweep_propagate, max_prop)
 
         # ---- K seed rounds ----
@@ -293,7 +327,8 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
             gain = bests[win]
             # commit + cascade
             m_cur = jnp.where((rows == s_global)[:, None], jnp.int8(VISITED), m_cur)
-            m_cur, _ = fixpoint(m_cur, ch, cw, cr, ct, x_loc, _bucket_sweep_cascade, max_casc)
+            m_cur, _ = fixpoint(m_cur, ch, cw, cr, ct, cl, x_loc,
+                                _bucket_sweep_cascade, max_casc)
             visited = jnp.sum(jnp.logical_and(m_cur == VISITED, valid_row[:, None]).astype(jnp.int32))
             visited = jax.lax.psum(visited, all_axes).astype(jnp.float32)
             new_score = visited / jnp.float32(total_regs)
@@ -301,7 +336,8 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
 
             def rebuild(mm):
                 mm = refill(mm)
-                mm, _ = fixpoint(mm, ph, pw, pr, pt, x_loc, _bucket_sweep_propagate, max_prop)
+                mm, _ = fixpoint(mm, ph, pw, pr, pt, pl, x_loc,
+                                 _bucket_sweep_propagate, max_prop)
                 return mm, new_score
 
             def keep(mm):
@@ -350,25 +386,28 @@ def find_seeds_distributed(g: Graph, k: int, mesh, config: Optional[DistributedC
         x = make_x_vector(cfg.num_registers, seed=cfg.seed)
     g = g.sorted_by_dst()
     part = build_partition_2d(g, x, mu_v, mu_s, seed=cfg.seed,
-                              method="fasst" if cfg.fasst else "naive")
+                              method="fasst" if cfg.fasst else "naive",
+                              model=cfg.model)
 
     maker = _make_distributed_fn(
         part, k=k, vertex_axis=cfg.vertex_axis, sim_axes=tuple(cfg.sim_axes),
         estimator=cfg.estimator, rebuild_threshold=cfg.rebuild_threshold,
         max_prop=cfg.max_propagate_iters, max_casc=cfg.max_cascade_iters,
-        seed=cfg.seed, schedule=cfg.schedule, local_sweeps=cfg.local_sweeps)
+        seed=cfg.seed, schedule=cfg.schedule, local_sweeps=cfg.local_sweeps,
+        predicate=resolve_model(cfg.model).predicate)
     body = maker(mesh)
 
     sim_spec = cfg.sim_axes if len(cfg.sim_axes) > 1 else cfg.sim_axes[0]
     bucket_spec = P(cfg.vertex_axis, sim_spec, None, None)
-    in_specs = (P(sim_spec, None),) + (bucket_spec,) * 8
+    in_specs = (P(sim_spec, None),) + (bucket_spec,) * 10
     out_specs = (P(), P(), P(), P(), P())
 
     fn = jax.jit(jax.shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False))
     # reshape x_shards so sim axes shard dim 0: (mu_s, j_loc)
     args = [jnp.asarray(part.x_shards)]
-    for a in (part.p_h, part.p_w, part.p_r, part.p_t, part.c_h, part.c_w, part.c_r, part.c_t):
+    for a in (part.p_h, part.p_w, part.p_r, part.p_t, part.p_l,
+              part.c_h, part.c_w, part.c_r, part.c_t, part.c_l):
         args.append(jnp.asarray(a))
     seeds, gains, scores, rebuilds, build_iters = fn(*args)
     res = InfluenceResult(

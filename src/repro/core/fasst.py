@@ -74,34 +74,51 @@ def partition_samples(x: np.ndarray, mu: int, *, method: str = "fasst") -> tuple
 
 
 def _sampled_by_any(edge_h: np.ndarray, thr: np.ndarray, x_chunk: np.ndarray,
-                    chunk_edges: int = 1 << 16) -> np.ndarray:
-    """bool[m]: edge sampled by at least one X value in x_chunk."""
+                    chunk_edges: int = 1 << 16, *, lo: np.ndarray | None = None,
+                    predicate=None) -> np.ndarray:
+    """bool[m]: edge live under at least one X value in x_chunk.
+
+    ``lo``/``predicate`` are the diffusion-model hook (repro.diffusion);
+    omitted, the legacy threshold compare is used."""
+    from repro.core.sampling import fused_predicate
+
+    if predicate is None:
+        predicate = fused_predicate
+    if lo is None:
+        lo = np.zeros_like(thr, dtype=np.uint32)
     m = edge_h.shape[0]
     out = np.zeros(m, dtype=bool)
-    for lo in range(0, m, chunk_edges):
-        hi = min(lo + chunk_edges, m)
-        h = edge_h[lo:hi, None]
-        out[lo:hi] = ((h ^ x_chunk[None, :]) < thr[lo:hi, None]).any(axis=1)
+    for a in range(0, m, chunk_edges):
+        b = min(a + chunk_edges, m)
+        out[a:b] = predicate(edge_h[a:b, None], lo[a:b, None], thr[a:b, None],
+                             x_chunk[None, :]).any(axis=1)
     return out
 
 
 def build_partition(g: Graph, x: np.ndarray, mu: int, *, method: str = "fasst",
-                    seed: int = 0, edge_block: int = 256) -> SamplePartition:
+                    seed: int = 0, edge_block: int = 256,
+                    model: str = "wc") -> SamplePartition:
     """Build per-shard device-local edge lists (paper §4, lines 1-3 of setup).
 
     Shards get exactly the edges at least one of their samples uses; the
     lists are padded to a common length (multiple of ``edge_block``) with a
     sentinel edge id pointing at the inert padding edge, so shard_map sees
     equal shapes. The common length *is* the paper's Table-7 metric.
+    ``model`` selects the diffusion model whose fused predicate decides
+    membership (default ``wc`` — the legacy threshold compare).
     """
+    from repro.diffusion import resolve as _resolve_model
+
     x_shards, perm = partition_samples(x, mu, method=method)
-    eh = edge_hash(g.src, g.dst, seed=seed)
-    thr = weight_to_threshold(g.weight)
+    mdl = _resolve_model(model)
+    ep = mdl.edge_params(g, seed=seed)
+    eh, lo, thr = ep.h, ep.lo, ep.thr
     # the last padded edge is inert (thr == 0): use it as the pad target
     sentinel_edge = g.m - 1
     assert thr[sentinel_edge] == 0, "graph must carry at least one padding edge"
 
-    masks = [_sampled_by_any(eh, thr, x_shards[t]) for t in range(mu)]
+    masks = [_sampled_by_any(eh, thr, x_shards[t], lo=lo, predicate=mdl.predicate)
+             for t in range(mu)]
     counts = np.array([int(msk.sum()) for msk in masks], dtype=np.int64)
     e_max = int(counts.max()) if counts.size else 0
     e_max = max(e_max, 1)

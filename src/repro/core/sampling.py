@@ -61,6 +61,51 @@ def register_hash(vertex: Array, reg: Array, seed: int = 0) -> Array:
     return mix32(mix32(u * xp.uint32(_GOLD) + xp.uint32(seed ^ 0x5BD1E995)) ^ (j * xp.uint32(_M2)))
 
 
+def vertex_hash(vertex: Array, seed: int = 0) -> Array:
+    """h(v): 32-bit hash of a single vertex — the per-destination hash the LT
+    live-edge sampler uses (every in-edge of v shares it, so one uniform draw
+    decides which in-edge, if any, is live)."""
+    xp = _xp(vertex)
+    v = vertex.astype(xp.uint32)
+    return mix32(mix32(v * xp.uint32(_GOLD) + xp.uint32(seed ^ 0x165667B1)) ^ xp.uint32(0x27D4EB2F))
+
+
+def fused_predicate(h: Array, lo: Array, width: Array, x: Array) -> Array:
+    """The universal hash-fused edge-activation predicate of the model zoo:
+
+        live(e, r)  <=>  ((X_r ^ h_e) - lo_e) mod 2^32  <  width_e
+
+    one XOR + one subtract + one unsigned compare per (edge, sample), for
+    every registered diffusion model:
+
+      * threshold models (ic / wc / dic): lo = 0, width = w_eff * 2^32 —
+        bit-identical to the paper's ``(X ^ h) < w * 2^32`` (§2.2, eq. (2));
+      * interval models (lt) use the same operand layout but sample through
+        ``remix_interval_predicate`` below — the raw XOR form here leaves
+        cross-vertex selections too correlated for sound joint reachability.
+
+    All operands must be uint32 (wraparound subtraction is the point);
+    works identically for numpy and jnp, scalar or broadcast shapes, and is
+    Pallas-kernel-safe (pure VPU ops).
+    """
+    return ((h ^ x) - lo) < width
+
+
+def remix_interval_predicate(h: Array, lo: Array, width: Array, x: Array) -> Array:
+    """Interval predicate with an avalanche remix of the per-(vertex, sample)
+    uniform:  live  <=>  (mix32(X_r ^ h_v) - lo_e) mod 2^32 < width_e.
+
+    The LT live-edge sampler needs joint path probabilities, not just
+    marginals: the raw XOR ``X_r ^ h_v`` leaves interval membership across
+    *different* vertices of one sample too correlated (the XOR of two such
+    uniforms is the constant h_u ^ h_v), which measurably suppresses
+    reachability. One extra fmix32 (shifts + multiplies, VPU-friendly,
+    Pallas-safe) decorrelates vertices while keeping exclusivity: all
+    in-edges of v still share one uniform per sample, so at most one fires.
+    """
+    return (mix32(h ^ x) - lo) < width
+
+
 def weight_to_threshold(w: np.ndarray) -> np.ndarray:
     """Map probability w in [0,1] to a uint32 compare threshold w * 2^32."""
     thr = np.minimum(np.round(np.float64(w) * 4294967296.0), np.float64(UINT32_MAX))

@@ -7,6 +7,10 @@ count is bounded by the max diameter of the sampled graphs — for the
 power-law graphs the paper targets this is small; ``max_iters`` caps the
 pathological case (paper §6 concedes the same limitation for road-type
 networks).
+
+The optional (h, lo, predicate) triple is the diffusion-model hook threaded
+down to kernels/ops.py; omitted, the legacy weighted-cascade sampling is
+reproduced bit-for-bit.
 """
 from __future__ import annotations
 
@@ -18,9 +22,11 @@ import jax.numpy as jnp
 from repro.kernels import ops
 
 
-@partial(jax.jit, static_argnames=("seed", "impl", "edge_chunk", "max_iters"))
-def propagate_to_fixpoint(m, src, dst, thr, x, *, seed: int = 0, impl: str = "ref",
-                          edge_chunk: int = 2048, max_iters: int = 64):
+@partial(jax.jit, static_argnames=("seed", "impl", "edge_chunk", "max_iters",
+                                   "predicate"))
+def propagate_to_fixpoint(m, src, dst, thr, x, h=None, lo=None, *, seed: int = 0,
+                          impl: str = "ref", edge_chunk: int = 2048,
+                          max_iters: int = 64, predicate=None):
     """Run SIMULATE sweeps until convergence. Returns (m, iters_used)."""
 
     def cond(carry):
@@ -30,7 +36,8 @@ def propagate_to_fixpoint(m, src, dst, thr, x, *, seed: int = 0, impl: str = "re
     def body(carry):
         m_cur, _, it = carry
         m_new = ops.propagate_sweep(m_cur, src, dst, thr, x, seed=seed, impl=impl,
-                                    edge_chunk=edge_chunk)
+                                    edge_chunk=edge_chunk, h=h, lo=lo,
+                                    predicate=predicate)
         changed = jnp.any(m_new != m_cur)
         return m_new, changed, it + 1
 

@@ -1,0 +1,18 @@
+"""Diffusion model zoo — pluggable hash-fused samplers (ic / wc / lt / dic).
+
+``resolve("wc")`` etc. returns a stateless model object exposing the fused
+device predicate and the host-side preprocessing that lowers the model to
+per-edge ``(h, lo, width)`` uint32 operands. See diffusion/models.py and
+docs/diffusion.md.
+"""
+from repro.diffusion.models import (DEFAULT_MODEL, DiffusionModel, EdgeParams,
+                                    available_models, register_model, resolve)
+
+__all__ = [
+    "DEFAULT_MODEL",
+    "DiffusionModel",
+    "EdgeParams",
+    "available_models",
+    "register_model",
+    "resolve",
+]

@@ -1,0 +1,7 @@
+"""Leaf constants for the diffusion model zoo (no imports, so modules on
+either side of the repro.core <-> repro.diffusion package-init cycle —
+core/difuser.py and diffusion/models.py — can share one source of truth)."""
+
+# the backward-compatible default model everywhere: the repo's historical
+# weighted-cascade sampling
+DEFAULT_MODEL = "wc"

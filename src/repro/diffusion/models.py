@@ -1,0 +1,365 @@
+"""Diffusion model zoo: pluggable hash-fused samplers.
+
+The paper's pipeline (§2.2, Alg. 4) hardcodes one diffusion setting — edges
+sampled by the fused ``(X ^ h(u,v)) < w * 2^32`` compare. The IM literature
+it builds on (Göktürk & Kaya, arXiv:2105.04023 / arXiv:2008.03095) evaluates
+across independent-cascade, weighted-cascade, and Linear Threshold models.
+This registry makes the model a first-class, pluggable choice while keeping
+the paper's core property: sampling stays one hash + one compare per
+(edge, sample), with no stored samples and no RNG state.
+
+Every model is two pure pieces:
+
+  * **host preprocessing** (``edge_params``): numpy, runs once per graph —
+    folds the model's probability structure into three per-edge uint32
+    arrays ``(h, lo, width)``;
+  * **fused predicate** (``predicate``): the device-side decision
+    ``((X_r ^ h_e) - lo_e) < width_e`` (sampling.fused_predicate), shared by
+    the jnp oracles, the Pallas kernels, and the distributed bucket sweeps.
+
+``h`` is sample-independent for every model (it never depends on X_r), so
+the distributed runtime's precomputed bucket hashes stay legal regardless of
+the model — the partition builder just calls ``edge_params`` instead of
+hashing inline.
+
+Registered models:
+
+  * ``ic``  — independent cascade with one uniform probability p on every
+              edge (spec ``ic`` or ``ic:<p>``, default p = 0.1).
+  * ``wc``  — weighted cascade: per-edge probabilities taken from the
+              graph's weight array (the repo's historical behaviour; the
+              canonical WC instance sets w_uv = 1/indeg(v) via
+              graphs.generators.make_wc_weights). Default model everywhere.
+  * ``lt``  — Linear Threshold via hash-based live-edge sampling: each
+              vertex v partitions [0, 2^32) into cumulative in-weight
+              intervals (b_uv = w_uv / max(1, sum_in w)), a per-(v, sample)
+              uniform ``X_r ^ vertex_hash(v)`` lands in at most one
+              interval, so v activates at most one in-edge per sample
+              (Kempe et al.'s live-edge equivalence).
+  * ``dic`` — decaying IC: each edge carries a deterministic transmission
+              latency d_uv in [0, 1) (hash-derived) and its probability
+              decays exponentially, w_eff = w_uv * exp(-lambda * d_uv)
+              (spec ``dic`` or ``dic:<lambda>``, default lambda = 1.0).
+
+The Monte-Carlo referee (baselines.mc_oracle) consumes the same model
+objects through ``live_edge_probability`` / ``mc_live_mask`` but draws its
+randomness from numpy PRNGs — independent of the XOR-hash scheme, as the
+paper's §5.1 oracle demands.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+from repro.core.sampling import (edge_hash, fused_predicate,
+                                 remix_interval_predicate, vertex_hash,
+                                 weight_to_threshold)
+from repro.diffusion.constants import DEFAULT_MODEL  # noqa: F401 (re-export)
+from repro.graphs.structs import Graph
+
+# salt for the dic latency hash — distinct from the sampling hash so the
+# latency attribute and the sampling decision are independent
+_DELAY_SALT = 0x5D1C0FFE
+
+_TWO32 = 4294967296.0
+_U32_MAX = np.uint64(0xFFFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeParams:
+    """Device-ready per-edge operands of the fused predicate (numpy, aligned
+    with the graph's current edge order, padding edges inert by width = 0)."""
+
+    h: np.ndarray       # uint32[m] sample-independent edge hash
+    lo: np.ndarray      # uint32[m] interval low endpoint (0 for threshold models)
+    thr: np.ndarray     # uint32[m] interval width / sampling threshold
+
+
+def _real_edge_mask(g: Graph) -> np.ndarray:
+    mask = np.zeros(g.m, dtype=bool)
+    mask[: g.m_real] = True
+    return mask
+
+
+class DiffusionModel:
+    """Base class: a stateless hash-fused edge-activation predicate plus its
+    host-side preprocessing. Subclasses override ``edge_params`` and either
+    ``live_edge_probability`` (threshold-style models) or ``mc_live_mask``
+    (anything with correlated edge draws, e.g. LT)."""
+
+    name: str = ""
+    spec: str = ""
+
+    # the device-side hook every kernel calls; staticmethod so all models
+    # sharing the interval form also share one jit cache entry
+    predicate = staticmethod(fused_predicate)
+
+    # whether the per-edge activation law depends only on the edge itself
+    # (not the rest of the graph). True for ic / wc / dic; False for lt,
+    # where every in-edge's interval is re-normalized by its siblings.
+    # This is the soundness condition for BOTH service/delta.py fast paths:
+    # insertions can only grow live-edge sets (monotone repair is sound) and
+    # removal staleness keeps the matrix a sound over-approximation. A
+    # context-sensitive model must rebuild on any delta.
+    context_free_edges: bool = True
+
+    # -- host preprocessing -------------------------------------------------
+
+    def edge_params(self, g: Graph, *, seed: int = 0) -> EdgeParams:
+        raise NotImplementedError
+
+    # -- Monte-Carlo referee hooks -----------------------------------------
+
+    def live_edge_probability(self, g: Graph) -> np.ndarray:
+        """float64[m] independent per-edge live probability (threshold
+        models). Models with correlated draws override ``mc_sampler``."""
+        raise NotImplementedError
+
+    def mc_sampler(self, g: Graph) -> Callable[[np.random.Generator], np.ndarray]:
+        """One-time host preprocessing for Monte-Carlo simulation: returns a
+        closure drawing bool[m] live-edge samples in the graph's edge order,
+        so per-sim cost is just the RNG draw + compare (the oracle runs
+        hundreds of sims against one graph)."""
+        p = self.live_edge_probability(g)
+        return lambda rng: rng.random(g.m) < p
+
+    def mc_live_mask(self, g: Graph, rng: np.random.Generator) -> np.ndarray:
+        """bool[m] one live-edge sample (one-shot convenience over
+        ``mc_sampler``)."""
+        return self.mc_sampler(g)(rng)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"{type(self).__name__}({self.spec!r})"
+
+
+class WeightedCascade(DiffusionModel):
+    """``wc`` — the repo's historical setting: thresholds straight from the
+    graph's weight array (degree-normalized when the graph was built with
+    the ``wc`` weight setting). ``lo = 0`` makes the interval predicate
+    collapse to the legacy ``(X ^ h) < thr`` compare bit-for-bit."""
+
+    name = "wc"
+
+    def __init__(self, spec: str = "wc"):
+        self.spec = spec
+
+    def edge_params(self, g: Graph, *, seed: int = 0) -> EdgeParams:
+        h = edge_hash(g.src, g.dst, seed=seed)
+        return EdgeParams(h=h, lo=np.zeros(g.m, dtype=np.uint32),
+                          thr=weight_to_threshold(g.weight))
+
+    def live_edge_probability(self, g: Graph) -> np.ndarray:
+        p = np.asarray(g.weight, dtype=np.float64).copy()
+        p[g.m_real:] = 0.0
+        return p
+
+
+class UniformIC(DiffusionModel):
+    """``ic[:p]`` — independent cascade with one uniform probability on every
+    real edge, ignoring the graph's per-edge weights."""
+
+    name = "ic"
+
+    def __init__(self, spec: str = "ic", p: float = 0.1):
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(f"ic probability must be in [0, 1], got {p}")
+        self.spec = spec
+        self.p = float(p)
+
+    def edge_params(self, g: Graph, *, seed: int = 0) -> EdgeParams:
+        h = edge_hash(g.src, g.dst, seed=seed)
+        w = np.where(_real_edge_mask(g), np.float32(self.p), np.float32(0.0))
+        return EdgeParams(h=h, lo=np.zeros(g.m, dtype=np.uint32),
+                          thr=weight_to_threshold(w))
+
+    def live_edge_probability(self, g: Graph) -> np.ndarray:
+        return np.where(_real_edge_mask(g), self.p, 0.0)
+
+
+class DecayingIC(DiffusionModel):
+    """``dic[:lambda]`` — IC with per-edge exponential time-decay: every edge
+    carries a deterministic transmission latency d_uv in [0, 1) derived from
+    a salted edge hash (an edge *attribute*, not sampling randomness), and
+    its activation probability decays as w_eff = w_uv * exp(-lambda * d_uv).
+    Host preprocessing folds the decay into the threshold, so the device
+    predicate is the plain threshold compare."""
+
+    name = "dic"
+
+    def __init__(self, spec: str = "dic", decay: float = 1.0):
+        if decay < 0.0:
+            raise ValueError(f"dic decay must be >= 0, got {decay}")
+        self.spec = spec
+        self.decay = float(decay)
+
+    def edge_delay(self, g: Graph) -> np.ndarray:
+        """float64[m] deterministic per-edge latency in [0, 1)."""
+        h = edge_hash(g.src, g.dst, seed=_DELAY_SALT)
+        return h.astype(np.float64) / _TWO32
+
+    def live_edge_probability(self, g: Graph) -> np.ndarray:
+        w = np.asarray(g.weight, dtype=np.float64).copy()
+        w[g.m_real:] = 0.0
+        return w * np.exp(-self.decay * self.edge_delay(g))
+
+    def edge_params(self, g: Graph, *, seed: int = 0) -> EdgeParams:
+        h = edge_hash(g.src, g.dst, seed=seed)
+        w_eff = self.live_edge_probability(g).astype(np.float32)
+        return EdgeParams(h=h, lo=np.zeros(g.m, dtype=np.uint32),
+                          thr=weight_to_threshold(w_eff))
+
+
+class LinearThreshold(DiffusionModel):
+    """``lt`` — Linear Threshold by hash-based live-edge sampling.
+
+    Kempe et al.: LT is distribution-equal to reachability over live-edge
+    graphs where each vertex v independently selects at most one in-edge,
+    edge (u, v) with probability b_uv (sum_u b_uv <= 1). We take
+    b_uv = w_uv / max(1, sum_in w(v)) and realize the selection without
+    storing samples: v's in-edges partition [0, 2^32) into consecutive
+    intervals of width b_uv * 2^32 (cumulative in-weight order), and the
+    per-(v, sample) uniform ``mix32(X_r ^ vertex_hash(v))`` is shared by all
+    in-edges of v — it lands in at most one interval, so at most one in-edge
+    fires. Still one hash + one compare per (edge, sample); the extra
+    avalanche decorrelates different vertices' selections within a sample
+    (see sampling.remix_interval_predicate)."""
+
+    name = "lt"
+    predicate = staticmethod(remix_interval_predicate)
+    # any in-edge add/remove re-normalizes its dst's whole interval
+    # partition, so old live-edge sets are neither subsets nor supersets of
+    # new ones — every delta must rebuild
+    context_free_edges = False
+
+    def __init__(self, spec: str = "lt"):
+        self.spec = spec
+
+    def _interval_fractions(self, g: Graph) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-edge [lo, hi) fractions of the dst vertex's unit interval
+        (float64, exact cumulative partition; padding edges get [x, x))."""
+        w = np.clip(np.asarray(g.weight, dtype=np.float64), 0.0, 1.0)
+        w[g.m_real:] = 0.0
+        dst = g.dst.astype(np.int64)
+        total_in = np.zeros(g.n_pad, dtype=np.float64)
+        np.add.at(total_in, dst, w)
+        b = w / np.maximum(total_in, 1.0)[dst]
+        # grouped cumulative sum: stable sort by dst keeps the graph's edge
+        # order within each in-edge run, cumsum, subtract each run's base
+        order = np.argsort(dst, kind="stable")
+        b_s = b[order]
+        cum_hi = np.cumsum(b_s)
+        cum_lo = cum_hi - b_s
+        dst_s = dst[order]
+        run_start = np.concatenate([[True], dst_s[1:] != dst_s[:-1]])
+        base = np.maximum.accumulate(np.where(run_start, cum_lo, -np.inf))
+        lo_s = cum_lo - base
+        hi_s = cum_hi - base
+        lo = np.empty_like(lo_s)
+        hi = np.empty_like(hi_s)
+        lo[order] = lo_s
+        hi[order] = hi_s
+        return lo, hi
+
+    def edge_params(self, g: Graph, *, seed: int = 0) -> EdgeParams:
+        lo_f, hi_f = self._interval_fractions(g)
+        # round the cumulative *endpoints* so intervals stay disjoint and
+        # exactly tile the rounded partition
+        lo_u64 = np.minimum(np.round(lo_f * _TWO32), np.float64(_TWO32)).astype(np.uint64)
+        hi_u64 = np.minimum(np.round(hi_f * _TWO32), np.float64(_TWO32)).astype(np.uint64)
+        width = hi_u64 - lo_u64
+        # a full-interval edge (b == 1) would need width 2^32; clamp to
+        # 2^32 - 1 (miss probability 2^-32 per sample)
+        width = np.minimum(width, _U32_MAX)
+        lo = np.minimum(lo_u64, _U32_MAX).astype(np.uint32)
+        return EdgeParams(h=vertex_hash(g.dst, seed=seed), lo=lo,
+                          thr=width.astype(np.uint32))
+
+    def mc_sampler(self, g: Graph) -> "Callable[[np.random.Generator], np.ndarray]":
+        lo_f, hi_f = self._interval_fractions(g)
+        dst = g.dst.astype(np.int64)
+
+        def sample(rng: np.random.Generator) -> np.ndarray:
+            t = rng.random(g.n_pad)[dst]
+            return (lo_f <= t) & (t < hi_f)
+
+        return sample
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+# name -> factory(spec, param_str_or_None) — the extension point future
+# scenario PRs plug new models into
+_REGISTRY: Dict[str, Callable[[str, str], DiffusionModel]] = {}
+_RESOLVED: Dict[str, DiffusionModel] = {}
+
+
+def register_model(name: str, factory: Callable[[str, str], DiffusionModel]) -> None:
+    """Register a model family under ``name``. ``factory(spec, param)``
+    receives the full spec string and the optional ``:<param>`` suffix
+    (None when absent) and returns a model instance."""
+    if name in _REGISTRY:
+        raise ValueError(f"diffusion model {name!r} already registered")
+    _REGISTRY[name] = factory
+    _RESOLVED.clear()
+
+
+def available_models() -> Tuple[str, ...]:
+    """Registered model family names (registration order)."""
+    return tuple(_REGISTRY)
+
+
+def resolve(spec: str) -> DiffusionModel:
+    """Resolve a model spec string (``name`` or ``name:param``) to its
+    instance. Instances are stateless and cached per spec."""
+    if not isinstance(spec, str) or not spec:
+        raise TypeError(f"diffusion model spec must be a non-empty str, got {spec!r}")
+    hit = _RESOLVED.get(spec)
+    if hit is not None:
+        return hit
+    name, sep, param = spec.partition(":")
+    factory = _REGISTRY.get(name)
+    if factory is None:
+        raise KeyError(
+            f"unknown diffusion model {name!r}; registered: {sorted(_REGISTRY)}")
+    model = factory(spec, param if sep else None)
+    _RESOLVED[spec] = model
+    return model
+
+
+def _float_param(param, default: float, what: str) -> float:
+    if param is None:
+        return default
+    try:
+        return float(param)
+    except ValueError as e:
+        raise ValueError(f"bad {what} parameter {param!r}") from e
+
+
+def _no_param(param, name: str) -> None:
+    # reject silently-ignored suffixes: "wc:0.5" would otherwise fork a
+    # second store key with byte-identical sampling
+    if param is not None:
+        raise ValueError(f"diffusion model {name!r} takes no parameter, "
+                         f"got {param!r}")
+
+
+def _make_wc(spec, param):
+    _no_param(param, "wc")
+    return WeightedCascade(spec)
+
+
+def _make_lt(spec, param):
+    _no_param(param, "lt")
+    return LinearThreshold(spec)
+
+
+register_model("wc", _make_wc)
+register_model("ic", lambda spec, param: UniformIC(
+    spec, _float_param(param, 0.1, "ic probability")))
+register_model("lt", _make_lt)
+register_model("dic", lambda spec, param: DecayingIC(
+    spec, _float_param(param, 1.0, "dic decay")))

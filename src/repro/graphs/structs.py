@@ -219,6 +219,10 @@ class CSR:
     indptr: np.ndarray  # int64[n + 1]
     indices: np.ndarray  # int32[m_real]
     weight: np.ndarray  # float32[m_real]
+    # permutation from the source Graph's real-edge order to CSR order —
+    # per-edge data sampled in graph order maps over via data[order]
+    # (baselines.mc_oracle relies on this staying in lockstep with indices)
+    order: Optional[np.ndarray] = None  # int64[m_real]
 
     @staticmethod
     def from_graph(g: Graph) -> "CSR":
@@ -229,7 +233,8 @@ class CSR:
         src_s, dst_s, w_s = src[order], dst[order], w[order]
         counts = np.bincount(src_s, minlength=g.n)
         indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
-        return CSR(n=g.n, indptr=indptr, indices=dst_s.astype(INT), weight=w_s)
+        return CSR(n=g.n, indptr=indptr, indices=dst_s.astype(INT), weight=w_s,
+                   order=order)
 
     def neighbors(self, u: int) -> np.ndarray:
         return self.indices[self.indptr[u] : self.indptr[u + 1]]

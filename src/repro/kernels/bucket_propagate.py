@@ -1,12 +1,13 @@
 """Pallas kernel: bucketed SIMULATE sweep for the distributed 2-D runtime.
 
 The distributed partition (core/distributed.py) pre-buckets edges by
-(write-owner, ring step) and precomputes the per-edge hash (hash once
-instead of once per sweep). At each ring step the device merges its local
-accumulator rows with rows of the *remote* register block that just
-arrived. This kernel is that merge:
+(write-owner, ring step) and precomputes the per-edge predicate operands
+(hash once instead of once per sweep — legal for every registered diffusion
+model because h is sample-independent). At each ring step the device merges
+its local accumulator rows with rows of the *remote* register block that
+just arrived. This kernel is that merge:
 
-    acc[w[i], j] <- max(acc[w[i], j], block[r[i], j])   if (h[i]^X_j) < t[i]
+    acc[w[i], j] <- max(acc[w[i], j], block[r[i], j])   if pred(h[i], lo[i], t[i], X_j)
 
 Same Jacobi/TPU-lane layout as sketch_propagate (registers ride the 128
 lanes; gathers/stores are dynamic row slices; no atomics because max-merge
@@ -21,13 +22,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.sampling import fused_predicate
 from repro.kernels.common import EDGE_BLOCK, REG_TILE, pick_block
 
 VISITED = -1
 
 
-def _bucket_kernel(h_ref, w_ref, r_ref, t_ref, x_ref, block_ref, acc_ref, out_ref,
-                   *, edge_block: int):
+def _bucket_kernel(h_ref, w_ref, r_ref, t_ref, lo_ref, x_ref, block_ref, acc_ref,
+                   out_ref, *, edge_block: int, predicate):
     eb = pl.program_id(1)
 
     @pl.when(eb == 0)
@@ -38,10 +40,11 @@ def _bucket_kernel(h_ref, w_ref, r_ref, t_ref, x_ref, block_ref, acc_ref, out_re
     w = w_ref[...]
     r = r_ref[...]
     t = t_ref[...].astype(jnp.uint32)
+    lo = lo_ref[...].astype(jnp.uint32)
     x = x_ref[...].astype(jnp.uint32)
 
     def body(i, _):
-        mask = (h[i] ^ x) < t[i]
+        mask = predicate(h[i], lo[i], t[i], x)
         pulled = pl.load(block_ref, (r[i], slice(None)))
         contrib = jnp.where(mask, pulled, jnp.full_like(pulled, VISITED))
         cur = pl.load(out_ref, (w[i], slice(None)))
@@ -52,20 +55,26 @@ def _bucket_kernel(h_ref, w_ref, r_ref, t_ref, x_ref, block_ref, acc_ref, out_re
     jax.lax.fori_loop(0, edge_block, body, 0)
 
 
-@partial(jax.jit, static_argnames=("edge_block", "reg_tile", "interpret"))
-def bucket_propagate_pallas(acc, block, h, w, r, t, x, *,
+@partial(jax.jit, static_argnames=("edge_block", "reg_tile", "interpret",
+                                   "predicate"))
+def bucket_propagate_pallas(acc, block, h, w, r, t, x, lo=None, *,
                             edge_block: int = EDGE_BLOCK, reg_tile: int = REG_TILE,
-                            interpret: bool = True):
-    """acc/block: int8[n_loc, J_loc]; h/w/r/t: (B,) bucket arrays; x: (J_loc,)."""
+                            interpret: bool = True, predicate=None):
+    """acc/block: int8[n_loc, J_loc]; h/w/r/t/lo: (B,) bucket arrays; x: (J_loc,)."""
+    if lo is None:
+        lo = jnp.zeros(t.shape, jnp.uint32)
+    if predicate is None:
+        predicate = fused_predicate
     n_loc, j_loc = acc.shape
     n_edges = h.shape[0]
     reg_tile = pick_block(j_loc, reg_tile)
     edge_block = pick_block(n_edges, edge_block)
     grid = (j_loc // reg_tile, n_edges // edge_block)
     return pl.pallas_call(
-        partial(_bucket_kernel, edge_block=edge_block),
+        partial(_bucket_kernel, edge_block=edge_block, predicate=predicate),
         grid=grid,
         in_specs=[
+            pl.BlockSpec((edge_block,), lambda j, e: (e,)),
             pl.BlockSpec((edge_block,), lambda j, e: (e,)),
             pl.BlockSpec((edge_block,), lambda j, e: (e,)),
             pl.BlockSpec((edge_block,), lambda j, e: (e,)),
@@ -77,4 +86,4 @@ def bucket_propagate_pallas(acc, block, h, w, r, t, x, *,
         out_specs=pl.BlockSpec((n_loc, reg_tile), lambda j, e: (0, j)),
         out_shape=jax.ShapeDtypeStruct((n_loc, j_loc), jnp.int8),
         interpret=interpret,
-    )(h, w, r, t, x, block, acc)
+    )(h, w, r, t, lo, x, block, acc)

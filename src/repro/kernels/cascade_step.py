@@ -1,6 +1,6 @@
 """Pallas kernel: one CASCADE sweep (paper Alg. 3).
 
-Propagates visitedness forward: for every edge (u, v) sampled in sim j with
+Propagates visitedness forward: for every edge (u, v) live in sim j with
 ``M[u, j] == VISITED``, mark ``M[v, j] <- VISITED``.
 
 The paper's unified frontier queue + warp-ballot dedup is a GPU-occupancy
@@ -11,6 +11,8 @@ exit the queue provided: it stops as soon as a sweep changes nothing.
 
 Same schedule as sketch_propagate (register tile major, edge blocks minor,
 register panes VMEM-resident); Jacobi semantics, bit-exact vs ref.py.
+Same diffusion-model hook as sketch_propagate: per-edge (h, lo) operands
+plus a static ``predicate`` (default: the universal interval form).
 """
 from __future__ import annotations
 
@@ -20,13 +22,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import EDGE_BLOCK, REG_TILE, kedge_hash, pick_block
+from repro.core.sampling import edge_hash, fused_predicate
+from repro.kernels.common import EDGE_BLOCK, REG_TILE, pick_block
 
 VISITED = -1  # python literal: weak-typed inside kernels (no captured consts)
 
 
-def _cascade_kernel(src_ref, dst_ref, thr_ref, x_ref, m_ref, out_ref, *,
-                    edge_block: int, seed: int):
+def _cascade_kernel(src_ref, dst_ref, h_ref, lo_ref, thr_ref, x_ref, m_ref,
+                    out_ref, *, edge_block: int, predicate):
     eb = pl.program_id(1)
 
     @pl.when(eb == 0)
@@ -35,14 +38,15 @@ def _cascade_kernel(src_ref, dst_ref, thr_ref, x_ref, m_ref, out_ref, *,
 
     src = src_ref[...]
     dst = dst_ref[...]
+    h = h_ref[...].astype(jnp.uint32)
+    lo = lo_ref[...].astype(jnp.uint32)
     thr = thr_ref[...].astype(jnp.uint32)
     x = x_ref[...].astype(jnp.uint32)
-    h = kedge_hash(src, dst, seed)
 
     def body(i, _):
         u = src[i]
         v = dst[i]
-        mask = (h[i] ^ x) < thr[i]
+        mask = predicate(h[i], lo[i], thr[i], x)
         vis_u = pl.load(m_ref, (u, slice(None))) == VISITED  # Jacobi read
         newly = jnp.logical_and(mask, vis_u)
         cur = pl.load(out_ref, (v, slice(None)))
@@ -52,10 +56,17 @@ def _cascade_kernel(src_ref, dst_ref, thr_ref, x_ref, m_ref, out_ref, *,
     jax.lax.fori_loop(0, edge_block, body, 0)
 
 
-@partial(jax.jit, static_argnames=("seed", "edge_block", "reg_tile", "interpret"))
-def cascade_sweep_pallas(m, src, dst, thr, x, *, seed: int = 0,
+@partial(jax.jit, static_argnames=("seed", "edge_block", "reg_tile", "interpret",
+                                   "predicate"))
+def cascade_sweep_pallas(m, src, dst, thr, x, h=None, lo=None, *, seed: int = 0,
                          edge_block: int = EDGE_BLOCK, reg_tile: int = REG_TILE,
-                         interpret: bool = True):
+                         interpret: bool = True, predicate=None):
+    if h is None:
+        h = edge_hash(src, dst, seed=seed)
+    if lo is None:
+        lo = jnp.zeros(thr.shape, jnp.uint32)
+    if predicate is None:
+        predicate = fused_predicate
     n_pad, num_regs = m.shape
     num_edges = src.shape[0]
     reg_tile = pick_block(num_regs, reg_tile)
@@ -63,9 +74,11 @@ def cascade_sweep_pallas(m, src, dst, thr, x, *, seed: int = 0,
     assert num_edges % edge_block == 0 and num_regs % reg_tile == 0
     grid = (num_regs // reg_tile, num_edges // edge_block)
     return pl.pallas_call(
-        partial(_cascade_kernel, edge_block=edge_block, seed=seed),
+        partial(_cascade_kernel, edge_block=edge_block, predicate=predicate),
         grid=grid,
         in_specs=[
+            pl.BlockSpec((edge_block,), lambda r, e: (e,)),
+            pl.BlockSpec((edge_block,), lambda r, e: (e,)),
             pl.BlockSpec((edge_block,), lambda r, e: (e,)),
             pl.BlockSpec((edge_block,), lambda r, e: (e,)),
             pl.BlockSpec((edge_block,), lambda r, e: (e,)),
@@ -75,4 +88,4 @@ def cascade_sweep_pallas(m, src, dst, thr, x, *, seed: int = 0,
         out_specs=pl.BlockSpec((n_pad, reg_tile), lambda r, e: (0, r)),
         out_shape=jax.ShapeDtypeStruct((n_pad, num_regs), jnp.int8),
         interpret=interpret,
-    )(src, dst, thr, x, m)
+    )(src, dst, h, lo, thr, x, m)

@@ -40,13 +40,6 @@ def kmix32(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
-def kedge_hash(src: jnp.ndarray, dst: jnp.ndarray, seed: int) -> jnp.ndarray:
-    u = src.astype(jnp.uint32)
-    v = dst.astype(jnp.uint32)
-    h = kmix32(u * jnp.uint32(_GOLD) + jnp.uint32(seed))
-    return kmix32(h ^ (v * jnp.uint32(_M1) + jnp.uint32(0x27D4EB2F)))
-
-
 def kregister_hash(vertex: jnp.ndarray, reg: jnp.ndarray, seed: int) -> jnp.ndarray:
     u = vertex.astype(jnp.uint32)
     j = reg.astype(jnp.uint32)

@@ -1,16 +1,19 @@
 """Pallas kernel: hash-based fused edge sampling (paper §2.2, eq. (2)).
 
-Produces the (E, R) membership mask ``(X_r ^ h(u,v)) < thr_e`` in tiles.
-This is the purely data-parallel hot loop of DiFuseR — one XOR + one
-unsigned compare per (edge, sample) — and maps 1:1 onto the TPU VPU:
-the sample/register axis rides the 128-wide lane dimension, edges ride
-sublanes. No MXU, no reductions, no control flow.
+Produces the (E, R) membership mask ``predicate(h_e, lo_e, thr_e, X_r)`` in
+tiles — default predicate ``(X_r ^ h(u,v)) < thr_e``, the interval form for
+the diffusion model zoo. This is the purely data-parallel hot loop of
+DiFuseR — one XOR + subtract + one unsigned compare per (edge, sample) —
+and maps 1:1 onto the TPU VPU: the sample/register axis rides the 128-wide
+lane dimension, edges ride sublanes. No MXU, no reductions, no control flow.
 
 TPU tiling:
   grid = (E / EDGE_BLOCK, R / REG_TILE)
-  VMEM per step: src/dst/thr 3 x EDGE_BLOCK x 4 B, x REG_TILE x 4 B,
-  out EDGE_BLOCK x REG_TILE x 1 B  ->  ~70 KiB at (512, 128): trivially
-  VMEM-resident; the grid is compute-bound on the VPU as intended.
+  VMEM per step: per-edge operands 3 x EDGE_BLOCK x 4 B (h/lo/thr — src/dst
+  are consumed host-side by the hash precompute and never enter the kernel),
+  x REG_TILE x 4 B, out EDGE_BLOCK x REG_TILE x 1 B  ->  ~71 KiB at
+  (512, 128): trivially VMEM-resident; the grid is compute-bound on the VPU
+  as intended.
 """
 from __future__ import annotations
 
@@ -20,30 +23,37 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import EDGE_BLOCK, REG_TILE, kedge_hash, pick_block
+from repro.core.sampling import edge_hash, fused_predicate
+from repro.kernels.common import EDGE_BLOCK, REG_TILE, pick_block
 
 
-def _fused_sample_kernel(src_ref, dst_ref, thr_ref, x_ref, out_ref, *, seed: int):
-    src = src_ref[...]
-    dst = dst_ref[...]
+def _fused_sample_kernel(h_ref, lo_ref, thr_ref, x_ref, out_ref, *, predicate):
+    h = h_ref[...].astype(jnp.uint32)
+    lo = lo_ref[...].astype(jnp.uint32)
     thr = thr_ref[...].astype(jnp.uint32)
     x = x_ref[...].astype(jnp.uint32)
-    h = kedge_hash(src, dst, seed)  # (E_BLK,)
-    mask = (h[:, None] ^ x[None, :]) < thr[:, None]  # (E_BLK, R_TILE)
+    mask = predicate(h[:, None], lo[:, None], thr[:, None], x[None, :])
     out_ref[...] = mask.astype(jnp.uint8)
 
 
-@partial(jax.jit, static_argnames=("seed", "edge_block", "reg_tile", "interpret"))
-def fused_sample_pallas(src, dst, thr, x, *, seed: int = 0,
+@partial(jax.jit, static_argnames=("seed", "edge_block", "reg_tile", "interpret",
+                                   "predicate"))
+def fused_sample_pallas(src, dst, thr, x, h=None, lo=None, *, seed: int = 0,
                         edge_block: int = EDGE_BLOCK, reg_tile: int = REG_TILE,
-                        interpret: bool = True):
+                        interpret: bool = True, predicate=None):
+    if h is None:
+        h = edge_hash(src, dst, seed=seed)
+    if lo is None:
+        lo = jnp.zeros(thr.shape, jnp.uint32)
+    if predicate is None:
+        predicate = fused_predicate
     num_edges = src.shape[0]
     num_regs = x.shape[0]
     edge_block = pick_block(num_edges, edge_block)
     reg_tile = pick_block(num_regs, reg_tile)
     grid = (num_edges // edge_block, num_regs // reg_tile)
     return pl.pallas_call(
-        partial(_fused_sample_kernel, seed=seed),
+        partial(_fused_sample_kernel, predicate=predicate),
         grid=grid,
         in_specs=[
             pl.BlockSpec((edge_block,), lambda e, r: (e,)),
@@ -54,4 +64,4 @@ def fused_sample_pallas(src, dst, thr, x, *, seed: int = 0,
         out_specs=pl.BlockSpec((edge_block, reg_tile), lambda e, r: (e, r)),
         out_shape=jax.ShapeDtypeStruct((num_edges, num_regs), jnp.uint8),
         interpret=interpret,
-    )(src, dst, thr, x)
+    )(h, lo, thr, x)

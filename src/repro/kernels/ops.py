@@ -8,6 +8,12 @@
                 ``interpret=False``.
 
 All wrappers take the padded fixed-shape arrays produced by repro.graphs.
+
+Diffusion-model hook (shared by both backends): optional per-edge ``h``
+(sample-independent hash) and ``lo`` (interval low endpoint) operands plus a
+static ``predicate`` callable. Omitting them reproduces the legacy
+weighted-cascade behaviour bit-for-bit — h is then hashed from (src, dst,
+seed) on the fly and the predicate is the threshold compare.
 """
 from __future__ import annotations
 
@@ -24,10 +30,13 @@ from repro.kernels.sketch_propagate import propagate_sweep_pallas
 _INTERPRET = True  # flipped to False on real TPU deployments
 
 
-def fused_sample(src, dst, thr, x, *, seed: int = 0, impl: str = "ref"):
+def fused_sample(src, dst, thr, x, *, seed: int = 0, impl: str = "ref",
+                 h=None, lo=None, predicate=None):
     if impl == "ref":
-        return _ref.fused_sample_ref(src, dst, thr, x, seed=seed)
-    return fused_sample_pallas(src, dst, thr, x, seed=seed, interpret=_INTERPRET)
+        return _ref.fused_sample_ref(src, dst, thr, x, h, lo, seed=seed,
+                                     predicate=predicate)
+    return fused_sample_pallas(src, dst, thr, x, h, lo, seed=seed,
+                               predicate=predicate, interpret=_INTERPRET)
 
 
 def sketch_fill(m, *, reg_offset: int = 0, seed: int = 0, impl: str = "ref"):
@@ -37,17 +46,23 @@ def sketch_fill(m, *, reg_offset: int = 0, seed: int = 0, impl: str = "ref"):
 
 
 def propagate_sweep(m, src, dst, thr, x, *, seed: int = 0, impl: str = "ref",
-                    edge_chunk: int = 2048):
+                    edge_chunk: int = 2048, h=None, lo=None, predicate=None):
     if impl == "ref":
-        return _ref.propagate_sweep_ref(m, src, dst, thr, x, seed=seed, edge_chunk=pick_block(src.shape[0], edge_chunk))
-    return propagate_sweep_pallas(m, src, dst, thr, x, seed=seed, interpret=_INTERPRET)
+        return _ref.propagate_sweep_ref(
+            m, src, dst, thr, x, h, lo, seed=seed, predicate=predicate,
+            edge_chunk=pick_block(src.shape[0], edge_chunk))
+    return propagate_sweep_pallas(m, src, dst, thr, x, h, lo, seed=seed,
+                                  predicate=predicate, interpret=_INTERPRET)
 
 
 def cascade_sweep(m, src, dst, thr, x, *, seed: int = 0, impl: str = "ref",
-                  edge_chunk: int = 2048):
+                  edge_chunk: int = 2048, h=None, lo=None, predicate=None):
     if impl == "ref":
-        return _ref.cascade_sweep_ref(m, src, dst, thr, x, seed=seed, edge_chunk=pick_block(src.shape[0], edge_chunk))
-    return cascade_sweep_pallas(m, src, dst, thr, x, seed=seed, interpret=_INTERPRET)
+        return _ref.cascade_sweep_ref(
+            m, src, dst, thr, x, h, lo, seed=seed, predicate=predicate,
+            edge_chunk=pick_block(src.shape[0], edge_chunk))
+    return cascade_sweep_pallas(m, src, dst, thr, x, h, lo, seed=seed,
+                                predicate=predicate, interpret=_INTERPRET)
 
 
 def cardinality_stats(m, *, impl: str = "ref"):

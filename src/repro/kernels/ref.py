@@ -9,6 +9,13 @@ Sweep semantics are Jacobi: every sweep gathers from the *input* register
 matrix and scatter-reduces into a fresh accumulator. This makes the result
 independent of edge order, so ref, Pallas, and all distributed schedules
 agree bit-for-bit at every sweep (not only at the fixpoint).
+
+Diffusion-model hook: every sweep takes optional per-edge ``h`` (precomputed
+sample-independent hash) and ``lo`` (interval low endpoint) operands plus a
+static ``predicate`` callable (default: sampling.fused_predicate, the
+universal interval form). When ``h``/``lo`` are omitted the legacy
+weighted-cascade behaviour is reproduced bit-for-bit: h = edge_hash(src,
+dst, seed), lo = 0, and the predicate collapses to ``(X ^ h) < thr``.
 """
 from __future__ import annotations
 
@@ -17,16 +24,34 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.sampling import edge_hash
+from repro.core.sampling import edge_hash, fused_predicate
 from repro.core.sketch import C_HARMONIC, VISITED
 
 
+def _edge_args(src, dst, thr, h, lo, predicate, seed):
+    """Canonicalize the model hook: default hash/offset/predicate give the
+    legacy threshold compare."""
+    if h is None:
+        h = edge_hash(src, dst, seed=seed)
+    if lo is None:
+        lo = jnp.zeros(thr.shape, jnp.uint32)
+    if predicate is None:
+        predicate = fused_predicate
+    return h, lo, predicate
+
+
+def _edge_mask(h, lo, thr, x, predicate):
+    """(E,) per-edge operands × (R,) X -> (E, R) bool live mask."""
+    return predicate(h[:, None].astype(jnp.uint32), lo[:, None].astype(jnp.uint32),
+                     thr[:, None].astype(jnp.uint32), x[None, :].astype(jnp.uint32))
+
+
 def fused_sample_ref(src: jnp.ndarray, dst: jnp.ndarray, thr: jnp.ndarray,
-                     x: jnp.ndarray, *, seed: int = 0) -> jnp.ndarray:
+                     x: jnp.ndarray, h=None, lo=None, *, seed: int = 0,
+                     predicate=None) -> jnp.ndarray:
     """(E,) edges × (R,) X -> (E, R) uint8 membership mask (paper eq. (2))."""
-    h = edge_hash(src, dst, seed=seed)
-    mask = (h[:, None] ^ x[None, :].astype(jnp.uint32)) < thr[:, None].astype(jnp.uint32)
-    return mask.astype(jnp.uint8)
+    h, lo, predicate = _edge_args(src, dst, thr, h, lo, predicate, seed)
+    return _edge_mask(h, lo, thr, x, predicate).astype(jnp.uint8)
 
 
 def sketch_fill_ref(m: jnp.ndarray, *, reg_offset: int = 0, seed: int = 0) -> jnp.ndarray:
@@ -44,28 +69,25 @@ def sketch_fill_ref(m: jnp.ndarray, *, reg_offset: int = 0, seed: int = 0) -> jn
     return jnp.where(m == VISITED, m, fresh)
 
 
-@partial(jax.jit, static_argnames=("edge_chunk", "seed"))
+@partial(jax.jit, static_argnames=("edge_chunk", "seed", "predicate"))
 def propagate_sweep_ref(m: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
-                        thr: jnp.ndarray, x: jnp.ndarray, *,
-                        edge_chunk: int = 2048, seed: int = 0) -> jnp.ndarray:
+                        thr: jnp.ndarray, x: jnp.ndarray, h=None, lo=None, *,
+                        edge_chunk: int = 2048, seed: int = 0,
+                        predicate=None) -> jnp.ndarray:
     """One SIMULATE sweep (paper Alg. 2): pull-based sketch max-merge.
 
-    For every edge (u, v) sampled in sim j, M[u, j] <- max(M[u, j], M[v, j]).
+    For every edge (u, v) live in sim j, M[u, j] <- max(M[u, j], M[v, j]).
     Visited registers are sticky. Jacobi: gathers read the input ``m``.
     """
+    h, lo, predicate = _edge_args(src, dst, thr, h, lo, predicate, seed)
     num_edges = src.shape[0]
     assert num_edges % edge_chunk == 0, (num_edges, edge_chunk)
     n_chunks = num_edges // edge_chunk
-    xs = (
-        src.reshape(n_chunks, edge_chunk),
-        dst.reshape(n_chunks, edge_chunk),
-        thr.reshape(n_chunks, edge_chunk),
-    )
+    xs = tuple(a.reshape(n_chunks, edge_chunk) for a in (src, dst, h, lo, thr))
 
     def body(acc, chunk):
-        s, d, t = chunk
-        h = edge_hash(s, d, seed=seed)
-        mask = (h[:, None] ^ x[None, :].astype(jnp.uint32)) < t[:, None].astype(jnp.uint32)
+        s, d, hh, ll, t = chunk
+        mask = _edge_mask(hh, ll, t, x, predicate)
         vals = m[d]  # (chunk, J) — pull from out-neighbors (Jacobi: reads input m)
         contrib = jnp.where(mask, vals, jnp.int8(VISITED))
         acc = acc.at[s].max(contrib)
@@ -75,29 +97,26 @@ def propagate_sweep_ref(m: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
     return jnp.where(m == VISITED, m, acc)
 
 
-@partial(jax.jit, static_argnames=("edge_chunk", "seed"))
+@partial(jax.jit, static_argnames=("edge_chunk", "seed", "predicate"))
 def cascade_sweep_ref(m: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
-                      thr: jnp.ndarray, x: jnp.ndarray, *,
-                      edge_chunk: int = 2048, seed: int = 0) -> jnp.ndarray:
+                      thr: jnp.ndarray, x: jnp.ndarray, h=None, lo=None, *,
+                      edge_chunk: int = 2048, seed: int = 0,
+                      predicate=None) -> jnp.ndarray:
     """One CASCADE sweep (paper Alg. 3): propagate visitedness forward.
 
-    For every edge (u, v) sampled in sim j with M[u, j] == VISITED,
-    mark M[v, j] <- VISITED. Jacobi semantics as above.
+    For every edge (u, v) live in sim j with M[u, j] == VISITED, mark
+    M[v, j] <- VISITED. Jacobi semantics as above.
     """
+    h, lo, predicate = _edge_args(src, dst, thr, h, lo, predicate, seed)
     num_edges = src.shape[0]
     assert num_edges % edge_chunk == 0
     n_chunks = num_edges // edge_chunk
-    xs = (
-        src.reshape(n_chunks, edge_chunk),
-        dst.reshape(n_chunks, edge_chunk),
-        thr.reshape(n_chunks, edge_chunk),
-    )
+    xs = tuple(a.reshape(n_chunks, edge_chunk) for a in (src, dst, h, lo, thr))
     vis = m == VISITED
 
     def body(acc, chunk):
-        s, d, t = chunk
-        h = edge_hash(s, d, seed=seed)
-        mask = (h[:, None] ^ x[None, :].astype(jnp.uint32)) < t[:, None].astype(jnp.uint32)
+        s, d, hh, ll, t = chunk
+        mask = _edge_mask(hh, ll, t, x, predicate)
         newly = jnp.logical_and(mask, vis[s]).astype(jnp.uint8)
         acc = acc.at[d].max(newly)
         return acc, None

@@ -1,8 +1,9 @@
 """Pallas kernel: one SIMULATE sweep (paper Alg. 2) — the core hot loop.
 
 Pull-based sketch max-merge with sampling fused into the traversal:
-for every edge (u, v) and register j with (X_j ^ h(u,v)) < thr_uv,
-``M[u, j] <- max(M[u, j], M[v, j])``, with VISITED (-1) sticky.
+for every edge (u, v) and register j whose fused predicate fires
+(default ``(X_j ^ h(u,v)) < thr_uv``), ``M[u, j] <- max(M[u, j], M[v, j])``,
+with VISITED (-1) sticky.
 
 TPU adaptation of the CUDA kernel (see DESIGN.md §2):
   * registers ride the 128-lane dimension — one vector op covers 128
@@ -23,6 +24,11 @@ partition (core/distributed.py), not by this kernel.
 
 Jacobi semantics: gathers read the input pane, maxes accumulate into the
 output pane — bit-identical to kernels/ref.py for any edge order.
+
+Diffusion-model hook: the per-edge hash ``h`` and interval offset ``lo``
+arrive as operands (hash once per build instead of once per sweep), and the
+activation decision is a static ``predicate`` callable — default
+sampling.fused_predicate, pure VPU ops, legal inside the kernel body.
 """
 from __future__ import annotations
 
@@ -32,13 +38,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import EDGE_BLOCK, REG_TILE, kedge_hash, pick_block
+from repro.core.sampling import edge_hash, fused_predicate
+from repro.kernels.common import EDGE_BLOCK, REG_TILE, pick_block
 
 VISITED = -1  # python literal: weak-typed inside kernels (no captured consts)
 
 
-def _propagate_kernel(src_ref, dst_ref, thr_ref, x_ref, m_ref, out_ref, *,
-                      edge_block: int, seed: int):
+def _propagate_kernel(src_ref, dst_ref, h_ref, lo_ref, thr_ref, x_ref, m_ref,
+                      out_ref, *, edge_block: int, predicate):
     eb = pl.program_id(1)
 
     @pl.when(eb == 0)
@@ -47,14 +54,15 @@ def _propagate_kernel(src_ref, dst_ref, thr_ref, x_ref, m_ref, out_ref, *,
 
     src = src_ref[...]
     dst = dst_ref[...]
+    h = h_ref[...].astype(jnp.uint32)
+    lo = lo_ref[...].astype(jnp.uint32)
     thr = thr_ref[...].astype(jnp.uint32)
     x = x_ref[...].astype(jnp.uint32)
-    h = kedge_hash(src, dst, seed)  # (E_BLK,)
 
     def body(i, _):
         u = src[i]
         v = dst[i]
-        mask = (h[i] ^ x) < thr[i]  # (R_TILE,) — fused sampling, one XOR+cmp
+        mask = predicate(h[i], lo[i], thr[i], x)  # (R_TILE,) fused sampling
         pulled = pl.load(m_ref, (v, slice(None)))  # Jacobi gather of v's tile
         contrib = jnp.where(mask, pulled, jnp.full_like(pulled, VISITED))
         cur = pl.load(out_ref, (u, slice(None)))
@@ -66,10 +74,17 @@ def _propagate_kernel(src_ref, dst_ref, thr_ref, x_ref, m_ref, out_ref, *,
     jax.lax.fori_loop(0, edge_block, body, 0)
 
 
-@partial(jax.jit, static_argnames=("seed", "edge_block", "reg_tile", "interpret"))
-def propagate_sweep_pallas(m, src, dst, thr, x, *, seed: int = 0,
+@partial(jax.jit, static_argnames=("seed", "edge_block", "reg_tile", "interpret",
+                                   "predicate"))
+def propagate_sweep_pallas(m, src, dst, thr, x, h=None, lo=None, *, seed: int = 0,
                            edge_block: int = EDGE_BLOCK, reg_tile: int = REG_TILE,
-                           interpret: bool = True):
+                           interpret: bool = True, predicate=None):
+    if h is None:
+        h = edge_hash(src, dst, seed=seed)
+    if lo is None:
+        lo = jnp.zeros(thr.shape, jnp.uint32)
+    if predicate is None:
+        predicate = fused_predicate
     n_pad, num_regs = m.shape
     num_edges = src.shape[0]
     reg_tile = pick_block(num_regs, reg_tile)
@@ -77,9 +92,11 @@ def propagate_sweep_pallas(m, src, dst, thr, x, *, seed: int = 0,
     assert num_edges % edge_block == 0 and num_regs % reg_tile == 0
     grid = (num_regs // reg_tile, num_edges // edge_block)
     return pl.pallas_call(
-        partial(_propagate_kernel, edge_block=edge_block, seed=seed),
+        partial(_propagate_kernel, edge_block=edge_block, predicate=predicate),
         grid=grid,
         in_specs=[
+            pl.BlockSpec((edge_block,), lambda r, e: (e,)),
+            pl.BlockSpec((edge_block,), lambda r, e: (e,)),
             pl.BlockSpec((edge_block,), lambda r, e: (e,)),
             pl.BlockSpec((edge_block,), lambda r, e: (e,)),
             pl.BlockSpec((edge_block,), lambda r, e: (e,)),
@@ -89,4 +106,4 @@ def propagate_sweep_pallas(m, src, dst, thr, x, *, seed: int = 0,
         out_specs=pl.BlockSpec((n_pad, reg_tile), lambda r, e: (0, r)),
         out_shape=jax.ShapeDtypeStruct((n_pad, num_regs), jnp.int8),
         interpret=interpret,
-    )(src, dst, thr, x, m)
+    )(src, dst, h, lo, thr, x, m)

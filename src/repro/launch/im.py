@@ -38,6 +38,9 @@ def run(argv=None) -> dict:
     ap.add_argument("--graph", default="rmat:12", help="rmat:<scale>|er:<n>|ba:<n>|snap:<path>")
     ap.add_argument("--setting", default="0.1",
                     help="0.005|0.01|0.1|N0.05|U0.1|wc (paper §5)")
+    ap.add_argument("--model", default="wc",
+                    help="diffusion model spec: wc|ic[:p]|lt|dic[:lambda] "
+                         "(repro.diffusion registry)")
     ap.add_argument("--k", type=int, default=50)
     ap.add_argument("--registers", type=int, default=1024)
     ap.add_argument("--devices", type=int, default=1)
@@ -67,12 +70,13 @@ def run(argv=None) -> dict:
         mu_v = 2 if args.devices % 2 == 0 else 1
         mesh = make_mesh((mu_v, args.devices // mu_v), ("data", "model"))
         cfg = DistributedConfig(num_registers=args.registers, seed=args.seed,
-                                schedule=args.schedule, fasst=not args.no_fasst)
+                                schedule=args.schedule, fasst=not args.no_fasst,
+                                model=args.model)
         res, part = find_seeds_distributed(g, args.k, mesh, cfg)
         out["max_shard_edges"] = int(part.edge_counts.max())
     else:
         cfg = DiFuserConfig(num_registers=args.registers, seed=args.seed,
-                            sort_x=not args.no_fasst)
+                            sort_x=not args.no_fasst, model=args.model)
         res = find_seeds(g, args.k, cfg)
     dt = time.time() - t0
     out.update(time_s=round(dt, 2), seeds=res.seeds.tolist(),
@@ -81,7 +85,8 @@ def run(argv=None) -> dict:
           f"rebuilds={int(res.rebuilds.sum())}/{args.k}")
 
     if args.validate:
-        oracle = influence_score(g, res.seeds, num_sims=100, rng_seed=args.seed + 99)
+        oracle = influence_score(g, res.seeds, num_sims=100, rng_seed=args.seed + 99,
+                                 model=args.model)
         out["oracle_score"] = oracle
         print(f"oracle(difuser seeds) = {oracle:.1f}")
     if args.ris:

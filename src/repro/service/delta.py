@@ -10,7 +10,7 @@ converge in frontier-depth iterations instead of graph-diameter ones.
 
 Edge removals cannot un-merge registers, so they accrue *staleness*: the
 matrix keeps over-estimating until the removed fraction crosses
-``rebuild_threshold`` (the Alg. 4 line-22 lazy-rebuild idea lifted to the
+``staleness_threshold`` (the Alg. 4 line-22 lazy-rebuild idea lifted to the
 store), at which point a full pristine rebuild runs. Below the threshold the
 entry is only marked stale — TopKSeeds' lazy-rebuild check (queries.py)
 rebuilds on first exact-query demand and writes the matrix back.
@@ -23,8 +23,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sampling import weight_to_threshold
 from repro.core.simulate import propagate_to_fixpoint
+from repro.diffusion import resolve as resolve_model
 from repro.graphs.structs import (Graph, GraphDelta, edge_pair_keys,
                                   pad_to_multiple)
 from repro.kernels import ops
@@ -45,10 +45,14 @@ class DeltaReport:
     time_s: float
 
 
-def _touched_edge_arrays(new_g: Graph, delta: GraphDelta, edge_block: int = 256):
-    """Slice the *new* graph's padded edge arrays down to the edges whose
-    (src, dst) pair appears in the delta's additions — their final compound
-    weights included (an added duplicate raises the pair's threshold)."""
+def _touched_edge_arrays(new_g: Graph, delta: GraphDelta, ep,
+                         edge_block: int = 256):
+    """Slice the *new* graph's padded edge arrays (and its model's
+    fused-predicate operands ``ep``, computed against the full graph so
+    context-dependent params stay right) down to the edges whose (src, dst)
+    pair appears in the delta's additions — their final compound
+    probabilities included (an added duplicate raises the pair's
+    threshold)."""
     hit = np.isin(
         edge_pair_keys(new_g.src[: new_g.m_real], new_g.dst[: new_g.m_real],
                        new_g.n_pad),
@@ -58,22 +62,29 @@ def _touched_edge_arrays(new_g: Graph, delta: GraphDelta, edge_block: int = 256)
     if src.size == 0:
         # every added edge vanished in from_edges (self-loops): nothing touched
         return None
-    w = new_g.weight[: new_g.m_real][hit]
     sentinel = np.int32(new_g.n_pad - 1)
-    src = pad_to_multiple(src, edge_block, sentinel)
-    dst = pad_to_multiple(dst, edge_block, sentinel)
-    w = pad_to_multiple(w, edge_block, np.float32(0.0))
-    return src, dst, weight_to_threshold(w)
+    zero = np.uint32(0)  # thr=0 padding is inert under every predicate
+    return (pad_to_multiple(src, edge_block, sentinel),
+            pad_to_multiple(dst, edge_block, sentinel),
+            pad_to_multiple(ep.h[: new_g.m_real][hit], edge_block, zero),
+            pad_to_multiple(ep.lo[: new_g.m_real][hit], edge_block, zero),
+            pad_to_multiple(ep.thr[: new_g.m_real][hit], edge_block, zero))
 
 
 def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
-                *, rebuild_threshold: float = 0.1) -> DeltaReport:
+                *, staleness_threshold: float = 0.1) -> DeltaReport:
     """Apply edge insertions/removals to a resident entry, repairing or
     invalidating its matrix as cheaply as soundness allows.
 
     The entry's graph is always updated; its StoreKey is kept (the key names
     the *lineage* — the graph the index was registered under — so engine
     handles stay valid across deltas).
+
+    ``staleness_threshold``: removed-edge fraction beyond which a removal
+    triggers an immediate pristine rebuild instead of marking the entry
+    stale. Deliberately distinct from ``DiFuserConfig.rebuild_threshold``
+    (Alg. 4's per-round score epsilon) — the two knobs govern different
+    mechanisms.
     """
     t0 = time.perf_counter()
     entry = store.entry(key)
@@ -94,17 +105,26 @@ def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
     rebuilt = False
     repair_sweeps = 0
     banks_touched = 0
+    # lt-style models: any in-edge add/remove re-normalizes the destination's
+    # interval partition, so the old fixpoint is neither a lower bound
+    # (insertions) nor a sound over-approximation (removals) — both fast
+    # paths are unsound and a pristine rebuild runs instead
+    context_free = resolve_model(entry.cfg.model).context_free_edges
 
     if removed:
         entry.staleness_frac += removed / max(m_before, 1)
-        if entry.staleness_frac > rebuild_threshold:
+        if not context_free or entry.staleness_frac > staleness_threshold:
             store.rebuild(key)   # clears stale/staleness, bumps version
             rebuilt = True
         else:
             entry.stale = True
 
     if delta.num_added and not rebuilt:
-        repair_sweeps, banks_touched = _repair_insertions(entry, new_g, delta)
+        if context_free:
+            repair_sweeps, banks_touched = _repair_insertions(entry, new_g, delta)
+        else:
+            store.rebuild(key)
+            rebuilt = True
 
     entry = store.entry(key)
     return DeltaReport(added=delta.num_added, removed=removed,
@@ -121,14 +141,20 @@ def _repair_insertions(entry: StoreEntry, new_g: Graph, delta: GraphDelta):
     over-approximation and the eventual rebuild starts no worse off.
     """
     cfg = entry.cfg
-    touched_arrays = _touched_edge_arrays(new_g, delta)
+    mdl = resolve_model(cfg.model)
+    ep = mdl.edge_params(new_g, seed=cfg.seed)
+    touched_arrays = _touched_edge_arrays(new_g, delta, ep)
     if touched_arrays is None:
         return 0, 0
-    t_src, t_dst, t_thr = touched_arrays
-    t_src_j, t_dst_j, t_thr_j = (jnp.asarray(t_src), jnp.asarray(t_dst),
-                                 jnp.asarray(t_thr))
+    t_src, t_dst, t_h, t_lo, t_thr = (jnp.asarray(a) for a in touched_arrays)
     full_src, full_dst = jnp.asarray(new_g.src), jnp.asarray(new_g.dst)
-    full_thr = jnp.asarray(weight_to_threshold(new_g.weight))
+    full_h, full_lo, full_thr = (jnp.asarray(ep.h), jnp.asarray(ep.lo),
+                                 jnp.asarray(ep.thr))
+    # warm the serving-path cache with the operands just computed — the next
+    # TopKSeeds would otherwise redo the O(m) model preprocessing + upload
+    # for the identical graph/cfg (apply_delta already bumped the version)
+    entry._edges_cache = (entry.version,
+                          (full_src, full_dst, full_h, full_lo, full_thr))
 
     j_loc = entry.regs_per_bank
     total_sweeps = 0
@@ -137,17 +163,18 @@ def _repair_insertions(entry: StoreEntry, new_g: Graph, delta: GraphDelta):
     for b, m_b in enumerate(entry.banks):
         x_b = jnp.asarray(entry.x[b * j_loc:(b + 1) * j_loc])
         # frontier probe: one sweep over just the touched edges
-        m_probe = ops.propagate_sweep(m_b, t_src_j, t_dst_j, t_thr_j, x_b,
+        m_probe = ops.propagate_sweep(m_b, t_src, t_dst, t_thr, x_b,
                                       seed=cfg.seed, impl=cfg.impl,
-                                      edge_chunk=cfg.edge_chunk)
+                                      edge_chunk=cfg.edge_chunk, h=t_h, lo=t_lo,
+                                      predicate=mdl.predicate)
         if not bool(jnp.any(m_probe != m_b)):
             new_banks.append(m_b)   # no sample in this bank uses the new edges
             continue
         touched += 1
         m_fix, iters = propagate_to_fixpoint(
-            m_probe, full_src, full_dst, full_thr, x_b, seed=cfg.seed,
-            impl=cfg.impl, edge_chunk=cfg.edge_chunk,
-            max_iters=cfg.max_propagate_iters)
+            m_probe, full_src, full_dst, full_thr, x_b, full_h, full_lo,
+            seed=cfg.seed, impl=cfg.impl, edge_chunk=cfg.edge_chunk,
+            max_iters=cfg.max_propagate_iters, predicate=mdl.predicate)
         total_sweeps += int(iters) + 1
         new_banks.append(m_fix)
     entry.banks = new_banks

@@ -86,9 +86,22 @@ class InfluenceEngine:
         return self.store.get_or_build(g, config).key
 
     def submit(self, key: StoreKey, query: Q.Query) -> int:
-        """Enqueue a query; returns its request index in the next ``run``."""
+        """Enqueue a query; returns its request index in the next ``run``.
+
+        Unknown keys are rejected here, before enqueueing — a bad key
+        surfacing as KeyError mid-``run`` would drop the whole already-
+        swapped-out batch, valid requests included."""
+        if key not in self.store:
+            raise KeyError(f"store key not registered with this engine: {key}")
         self._pending.append(Request(key=key, query=query))
         return len(self._pending) - 1
+
+    def clear_topk_memo(self) -> None:
+        """Drop all memoized top-k results (they re-execute on next demand).
+        Benchmarks use this to measure genuine warm serving instead of
+        0-cost memo hits; deltas/rebuilds invalidate per-entry via the
+        version token and don't need it."""
+        self._topk_memo.clear()
 
     # ------------------------------------------------------------------
     # Execution
@@ -99,6 +112,13 @@ class InfluenceEngine:
         returned in request order."""
         if requests is None:
             requests, self._pending = self._pending, []
+        else:
+            # explicitly-passed lists skipped submit()'s guard: reject bad
+            # keys up front, before any group executes and gets discarded
+            for req in requests:
+                if req.key not in self.store:
+                    raise KeyError(
+                        f"store key not registered with this engine: {req.key}")
         results: list[Optional[QueryResult]] = [None] * len(requests)
 
         groups: dict[tuple, list[int]] = {}

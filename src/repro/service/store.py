@@ -25,8 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.difuser import (DiFuserConfig, build_sketch_matrix,
-                                normalize_inputs, normalize_x)
-from repro.core.sampling import weight_to_threshold
+                                edge_operands, normalize_inputs, normalize_x)
+from repro.diffusion import DEFAULT_MODEL
 from repro.graphs.structs import Graph
 
 
@@ -34,7 +34,9 @@ from repro.graphs.structs import Graph
 class StoreKey:
     """Identity of one cached index: graph content + the full diffusion
     setting (every DiFuserConfig field that affects results — two configs
-    differing in any of them must not share a matrix)."""
+    differing in any of them must not share a matrix). ``model`` is the
+    diffusion model spec, so one engine serves mixed-model traffic against
+    the same graph through distinct keys."""
 
     graph_key: str
     num_registers: int
@@ -46,6 +48,7 @@ class StoreKey:
     max_propagate_iters: int
     max_cascade_iters: int
     edge_chunk: int
+    model: str = DEFAULT_MODEL
 
     @staticmethod
     def for_graph(g: Graph, cfg: DiFuserConfig) -> "StoreKey":
@@ -54,7 +57,7 @@ class StoreKey:
                         sort_x=cfg.sort_x, rebuild_threshold=cfg.rebuild_threshold,
                         max_propagate_iters=cfg.max_propagate_iters,
                         max_cascade_iters=cfg.max_cascade_iters,
-                        edge_chunk=cfg.edge_chunk)
+                        edge_chunk=cfg.edge_chunk, model=cfg.model)
 
 
 @dataclasses.dataclass
@@ -73,7 +76,7 @@ class StoreEntry:
     staleness_frac: float = 0.0  # removed-edge fraction since last rebuild
     rebuilds: int = 0
     _matrix_cache: Optional[tuple] = None  # (version, concatenated matrix)
-    _edges_cache: Optional[tuple] = None   # (version, (src, dst, thr) device)
+    _edges_cache: Optional[tuple] = None   # (version, (src, dst, h, lo, thr) device)
 
     @property
     def num_banks(self) -> int:
@@ -98,14 +101,13 @@ class StoreEntry:
         return self._matrix_cache[1]
 
     def device_edges(self) -> tuple:
-        """Device-resident (src, dst, thr) of the serving graph, cached
-        against ``version`` — warm TopKSeeds skips the per-query host sort
-        and re-upload (the graph only changes via deltas, which bump it)."""
+        """Device-resident (src, dst, h, lo, thr) fused-predicate operands of
+        the serving graph under the entry's diffusion model, cached against
+        ``version`` — warm TopKSeeds skips the per-query host sort, model
+        preprocessing, and re-upload (the graph only changes via deltas,
+        which bump it)."""
         if self._edges_cache is None or self._edges_cache[0] != self.version:
-            g = self.graph
-            self._edges_cache = (self.version, (
-                jnp.asarray(g.src), jnp.asarray(g.dst),
-                jnp.asarray(weight_to_threshold(g.weight))))
+            self._edges_cache = (self.version, edge_operands(self.graph, self.cfg))
         return self._edges_cache[1]
 
     def set_matrix(self, m: jnp.ndarray) -> None:
@@ -224,6 +226,7 @@ class SketchStore:
             graph_key=np.str_(e.key.graph_key),
             num_registers=e.cfg.num_registers, seed=e.cfg.seed,
             estimator=np.str_(e.cfg.estimator), impl=np.str_(e.cfg.impl),
+            model=np.str_(e.cfg.model),
             sort_x=e.cfg.sort_x,
             rebuild_threshold=e.cfg.rebuild_threshold,
             max_propagate_iters=e.cfg.max_propagate_iters,
@@ -233,11 +236,16 @@ class SketchStore:
             stale=e.stale, staleness_frac=e.staleness_frac)
 
     def load(self, path: str) -> StoreEntry:
-        """Restore an entry saved by ``save`` (skipping the build fixpoint)."""
+        """Restore an entry saved by ``save`` (skipping the build fixpoint).
+
+        Snapshots from before the diffusion-model zoo carry no ``model``
+        field; they are re-keyed on load under the backward-compatible
+        default (``wc`` — exactly the sampling they were built with)."""
         z = np.load(self._npz_path(path))
         cfg = DiFuserConfig(
             num_registers=int(z["num_registers"]), seed=int(z["seed"]),
             estimator=str(z["estimator"]), impl=str(z["impl"]),
+            model=str(z["model"]) if "model" in getattr(z, "files", ()) else DEFAULT_MODEL,
             sort_x=bool(z["sort_x"]),
             rebuild_threshold=float(z["rebuild_threshold"]),
             max_propagate_iters=int(z["max_propagate_iters"]),

@@ -1,0 +1,13 @@
+"""jax API drift guards (leaf module — import this from anywhere without
+pulling heavy packages in).
+
+Old containers ship a jax without ``jax.sharding.AxisType`` (and the
+mesh/shard_map surface that goes with it). ``core.distributed`` re-exports
+the flag for tests; ``launch.mesh`` uses it to build version-appropriate
+mesh kwargs. Drop this module when the container's jax is bumped.
+"""
+from __future__ import annotations
+
+import jax
+
+JAX_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")

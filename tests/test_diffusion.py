@@ -1,0 +1,367 @@
+"""Diffusion model zoo: registry semantics, wc backward compatibility,
+LT live-edge exclusivity, per-model quality vs the Monte-Carlo oracle,
+distributed bucketization, delta soundness, and mixed-model serving."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import influence_score, sample_live_mask
+from repro.core.difuser import DiFuserConfig, find_seeds
+from repro.core.sampling import (edge_hash, fused_predicate, make_x_vector,
+                                 weight_to_threshold)
+from repro.diffusion import available_models, resolve
+from repro.graphs import erdos_renyi_graph, rmat_graph
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_four_models():
+    assert set(available_models()) >= {"ic", "wc", "lt", "dic"}
+
+
+def test_resolve_parses_params_and_caches():
+    assert resolve("ic").p == 0.1
+    assert resolve("ic:0.25").p == 0.25
+    assert resolve("dic").decay == 1.0
+    assert resolve("dic:0.5").decay == 0.5
+    assert resolve("wc") is resolve("wc")  # stateless instances are cached
+
+
+def test_resolve_rejects_unknown_and_bad_specs():
+    with pytest.raises(KeyError):
+        resolve("lice")
+    with pytest.raises(ValueError):
+        resolve("ic:nope")
+    with pytest.raises(ValueError):
+        resolve("ic:1.5")
+    with pytest.raises(TypeError):
+        resolve("")
+    # parameterless models reject suffixes instead of silently ignoring them
+    # (a tolerated "wc:0.5" would fork a duplicate store key)
+    with pytest.raises(ValueError):
+        resolve("wc:0.5")
+    with pytest.raises(ValueError):
+        resolve("lt:banana")
+
+
+# ---------------------------------------------------------------------------
+# wc backward compatibility (acceptance: byte-identical to pre-PR find_seeds)
+# ---------------------------------------------------------------------------
+
+# captured from the pre-zoo tree at this graph/config (see CHANGES.md):
+# rmat_graph(8, edge_factor=8, seed=3, setting="w1"),
+# DiFuserConfig(num_registers=256, seed=0), k=8
+GOLDEN_SEEDS = [2, 32, 24, 65, 128, 219, 135, 129]
+GOLDEN_SCORES = [67.72265625, 69.0234375, 70.34375, 71.66015625,
+                 72.9375, 73.9375, 74.9375, 75.9375]
+
+
+def test_wc_find_seeds_byte_identical_to_pre_zoo_golden():
+    g = rmat_graph(8, edge_factor=8, seed=3, setting="w1")
+    res = find_seeds(g, 8, DiFuserConfig(num_registers=256, seed=0))
+    assert res.seeds.tolist() == GOLDEN_SEEDS
+    assert res.scores.tolist() == GOLDEN_SCORES
+
+
+def test_wc_edge_params_match_legacy_formulas(small_graph):
+    ep = resolve("wc").edge_params(small_graph, seed=5)
+    np.testing.assert_array_equal(ep.h, edge_hash(small_graph.src,
+                                                  small_graph.dst, seed=5))
+    np.testing.assert_array_equal(ep.thr, weight_to_threshold(small_graph.weight))
+    assert not ep.lo.any()
+    # the interval predicate with lo = 0 IS the legacy compare
+    x = make_x_vector(64, seed=9)
+    legacy = (ep.h[:, None] ^ x[None, :]) < ep.thr[:, None]
+    np.testing.assert_array_equal(
+        fused_predicate(ep.h[:, None], ep.lo[:, None], ep.thr[:, None],
+                        x[None, :]), legacy)
+
+
+def test_default_config_model_is_wc():
+    assert DiFuserConfig().model == "wc"
+
+
+# ---------------------------------------------------------------------------
+# Model preprocessing semantics
+# ---------------------------------------------------------------------------
+
+
+def test_ic_uniform_probability_ignores_weights(small_graph):
+    ep = resolve("ic:0.25").edge_params(small_graph, seed=0)
+    thr = np.asarray(ep.thr)
+    expect = weight_to_threshold(np.full(2, 0.25, np.float32))[0]
+    assert (thr[: small_graph.m_real] == expect).all()
+    assert (thr[small_graph.m_real:] == 0).all()  # padding stays inert
+
+
+def test_dic_decay_zero_equals_wc_thresholds(small_graph):
+    dic0 = resolve("dic:0.0").edge_params(small_graph, seed=0)
+    wc = resolve("wc").edge_params(small_graph, seed=0)
+    np.testing.assert_array_equal(dic0.thr, wc.thr)
+    np.testing.assert_array_equal(dic0.h, wc.h)
+    # positive decay strictly shrinks every real edge's threshold
+    dic2 = resolve("dic:2.0").edge_params(small_graph, seed=0)
+    real = slice(0, small_graph.m_real)
+    assert (dic2.thr[real] <= wc.thr[real]).all()
+    assert (dic2.thr[real] < wc.thr[real]).any()
+
+
+def test_lt_at_most_one_in_edge_per_sample(small_graph):
+    mdl = resolve("lt")
+    ep = mdl.edge_params(small_graph, seed=4)
+    x = make_x_vector(512, seed=3)
+    mask = mdl.predicate(ep.h[:, None], ep.lo[:, None], ep.thr[:, None],
+                         x[None, :])
+    live = np.zeros((small_graph.n_pad, 512), dtype=np.int32)
+    np.add.at(live, small_graph.dst[: small_graph.m_real],
+              mask[: small_graph.m_real].astype(np.int32))
+    assert live.max() <= 1
+    # padding edges never fire
+    assert not mask[small_graph.m_real:].any()
+    # fused marginals match the model's interval widths (hash uniformity)
+    lo_f, hi_f = mdl._interval_fractions(small_graph)
+    b = (hi_f - lo_f)[: small_graph.m_real]
+    got = mask[: small_graph.m_real].mean()
+    assert abs(got - b.mean()) < 0.01, (got, b.mean())
+
+
+def test_lt_mc_mask_exclusive_and_matched(small_graph):
+    rng = np.random.default_rng(0)
+    live = np.zeros(small_graph.n_pad, dtype=np.int32)
+    for _ in range(20):
+        m = sample_live_mask(small_graph, "lt", rng)
+        per = np.zeros(small_graph.n_pad, dtype=np.int32)
+        np.add.at(per, small_graph.dst[: small_graph.m_real], m.astype(np.int32))
+        assert per.max() <= 1
+        live += per
+    assert live[: small_graph.n].sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# Quality vs the per-model Monte-Carlo oracle
+# (acceptance: top-k spread within 5% of the mc_oracle estimate)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", ["ic:0.1", "lt", "dic:1.0"])
+def test_model_topk_spread_within_5pct_of_oracle(spec):
+    g = erdos_renyi_graph(400, avg_degree=20, seed=7, setting="w1")
+    res = find_seeds(g, 4, DiFuserConfig(num_registers=2048, seed=1, model=spec))
+    oracle = influence_score(g, res.seeds, num_sims=500, rng_seed=11, model=spec)
+    rel = abs(float(res.scores[-1]) - oracle) / max(oracle, 1.0)
+    assert rel < 0.05, (spec, float(res.scores[-1]), oracle, rel)
+
+
+def test_lt_pallas_matches_ref_end_to_end():
+    g = erdos_renyi_graph(200, avg_degree=10, seed=3, setting="w1")
+    ref = find_seeds(g, 3, DiFuserConfig(num_registers=128, seed=2, model="lt"))
+    pal = find_seeds(g, 3, DiFuserConfig(num_registers=128, seed=2, model="lt",
+                                         impl="pallas"))
+    np.testing.assert_array_equal(ref.seeds, pal.seeds)
+    np.testing.assert_allclose(ref.scores, pal.scores, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Distributed bucketization (serial ring emulation — no mesh needed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", ["wc", "lt"])
+def test_bucketized_sweep_matches_single_device(spec):
+    """One full 2-D-partition propagate sweep, emulated serially over the
+    (mu_v, mu_s) shard grid with the runtime's jnp bucket merge, must be
+    bit-identical to the single-device sweep — for threshold AND interval
+    models (the lo arrays ride the buckets)."""
+    from repro.core.difuser import edge_operands
+    from repro.core.distributed import (_bucket_sweep_propagate,
+                                        build_partition_2d)
+    from repro.kernels import ops
+
+    mu_v, mu_s = 2, 2
+    g = rmat_graph(7, edge_factor=6, seed=9, setting="w1").sorted_by_dst()
+    cfg = DiFuserConfig(num_registers=128, seed=3, model=spec)
+    x = np.sort(make_x_vector(128, seed=3))
+    part = build_partition_2d(g, x, mu_v, mu_s, seed=3, model=spec)
+    mdl = resolve(spec)
+
+    n_pad, j, j_loc, n_loc = part.n_pad, 128, part.j_loc, part.n_loc
+    m0 = ops.sketch_fill(jnp.zeros((n_pad, j), jnp.int8), seed=3)
+    m0 = jnp.where((jnp.arange(n_pad) >= g.n)[:, None], jnp.int8(-1), m0)
+
+    # single-device reference sweep (model operands, full edge list)
+    src, dst, h, lo, thr = edge_operands(g, cfg)
+    ref = ops.propagate_sweep(m0, src, dst, thr, jnp.asarray(x), seed=3,
+                              h=h, lo=lo, predicate=mdl.predicate)
+
+    # serial emulation of the ring schedule over all (v, s) shards
+    out = np.array(m0)
+    for v in range(mu_v):
+        rows = slice(v * n_loc, (v + 1) * n_loc)
+        for s in range(mu_s):
+            cols = slice(s * j_loc, (s + 1) * j_loc)
+            acc = jnp.asarray(np.array(m0)[rows, cols])
+            m_vs = acc
+            for kk in range(mu_v):
+                owner = (v + kk) % mu_v
+                block = jnp.asarray(
+                    np.array(m0)[owner * n_loc:(owner + 1) * n_loc, cols])
+                acc = _bucket_sweep_propagate(
+                    acc, block, jnp.asarray(part.p_h[v, s, kk]),
+                    jnp.asarray(part.p_w[v, s, kk]),
+                    jnp.asarray(part.p_r[v, s, kk]),
+                    jnp.asarray(part.p_t[v, s, kk]),
+                    jnp.asarray(part.x_shards[s]),
+                    jnp.asarray(part.p_l[v, s, kk]), mdl.predicate)
+            out[rows, cols] = np.where(np.array(m_vs) == -1, np.array(m_vs),
+                                       np.array(acc))
+    np.testing.assert_array_equal(out[: g.n_pad], np.array(ref)[: g.n_pad])
+
+
+# ---------------------------------------------------------------------------
+# Service layer: mixed-model serving, persistence, delta soundness
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_model_engine_serves_distinct_keys(small_graph):
+    from repro.service import InfluenceEngine, SpreadEstimate, TopKSeeds
+
+    engine = InfluenceEngine()
+    specs = ("wc", "ic:0.1", "lt", "dic:1.0")
+    keys = {}
+    for spec in specs:
+        cfg = DiFuserConfig(num_registers=128, seed=0, model=spec)
+        keys[spec] = engine.register(small_graph, cfg)
+    assert len(set(keys.values())) == len(specs)
+    assert keys["wc"].model == "wc" and keys["lt"].model == "lt"
+
+    for spec in specs:
+        engine.submit(keys[spec], TopKSeeds(4))
+        engine.submit(keys[spec], SpreadEstimate([1, 2, 3]))
+    results = engine.run()
+    assert len(results) == 2 * len(specs)
+    # warm top-k through each model's store entry == that model's cold run
+    for i, spec in enumerate(specs):
+        cold = find_seeds(small_graph, 4,
+                          DiFuserConfig(num_registers=128, seed=0, model=spec))
+        np.testing.assert_array_equal(results[2 * i].value.seeds, cold.seeds)
+    # the models genuinely disagree somewhere (distinct indexes, not aliases)
+    seed_sets = {tuple(results[2 * i].value.seeds.tolist())
+                 for i in range(len(specs))}
+    assert len(seed_sets) > 1
+
+
+def test_engine_rejects_unregistered_key_at_submit(small_graph):
+    """A typo'd/unregistered key must fail at submit — not as a KeyError
+    mid-run that drops the whole already-dequeued batch."""
+    import dataclasses
+
+    from repro.service import InfluenceEngine, TopKSeeds
+
+    engine = InfluenceEngine()
+    key = engine.register(small_graph, DiFuserConfig(num_registers=64, seed=0))
+    engine.submit(key, TopKSeeds(2))
+    bogus = dataclasses.replace(key, model="ic:0.1")  # never registered
+    with pytest.raises(KeyError):
+        engine.submit(bogus, TopKSeeds(2))
+    results = engine.run()  # the valid request survives
+    assert len(results) == 1 and results[0].value.seeds.shape == (2,)
+
+
+def test_store_npz_roundtrip_carries_model(tmp_path, small_graph):
+    from repro.service import SketchStore
+
+    cfg = DiFuserConfig(num_registers=64, seed=1, model="dic:0.5")
+    store = SketchStore()
+    entry = store.get_or_build(small_graph, cfg)
+    p = str(tmp_path / "idx")
+    store.save(p, entry.key)
+    fresh = SketchStore()
+    loaded = fresh.load(p)
+    assert loaded.cfg.model == "dic:0.5"
+    assert loaded.key == entry.key
+    np.testing.assert_array_equal(np.asarray(loaded.matrix),
+                                  np.asarray(entry.matrix))
+
+
+def test_store_legacy_npz_rekeyed_as_wc(tmp_path, small_graph):
+    """Snapshots written before the model zoo carry no ``model`` field and
+    must load re-keyed under the backward-compatible wc default."""
+    from repro.service import SketchStore
+
+    cfg = DiFuserConfig(num_registers=64, seed=1)
+    store = SketchStore()
+    entry = store.get_or_build(small_graph, cfg)
+    p = str(tmp_path / "idx.npz")
+    store.save(p, entry.key)
+    z = dict(np.load(p))
+    del z["model"]  # simulate a pre-zoo snapshot
+    np.savez_compressed(p, **z)
+    loaded = SketchStore().load(p)
+    assert loaded.cfg.model == "wc"
+    assert loaded.key == entry.key
+
+
+def test_delta_insertions_rebuild_for_lt(small_graph):
+    """lt insertions re-normalize sibling intervals — the monotone repair is
+    unsound, so apply_delta must take the rebuild path (and stay on the
+    repair path for wc)."""
+    from repro.graphs.structs import GraphDelta
+    from repro.service import SketchStore, apply_delta
+
+    rng = np.random.default_rng(2)
+    delta = GraphDelta.make(add=(rng.integers(0, small_graph.n, 16),
+                                 rng.integers(0, small_graph.n, 16)))
+    for spec, expect_rebuild in (("lt", True), ("wc", False)):
+        store = SketchStore()
+        cfg = DiFuserConfig(num_registers=64, seed=0, model=spec)
+        entry = store.get_or_build(small_graph, cfg)
+        report = apply_delta(store, entry.key, delta)
+        assert report.rebuilt is expect_rebuild, spec
+        # post-delta index == pristine rebuild of the post-delta graph
+        post = store.entry(entry.key)
+        ref_store = SketchStore()
+        ref = ref_store.get_or_build(post.graph, cfg)
+        np.testing.assert_array_equal(np.asarray(post.matrix),
+                                      np.asarray(ref.matrix))
+
+
+def test_delta_removals_rebuild_for_lt(small_graph):
+    """lt removals widen sibling intervals, so the stale matrix is not even
+    a sound over-approximation — any removal must rebuild immediately
+    (wc keeps the cheap staleness path below the threshold)."""
+    from repro.graphs.structs import GraphDelta
+    from repro.service import SketchStore, apply_delta
+
+    rem = (small_graph.src[:4].astype(np.int64),
+           small_graph.dst[:4].astype(np.int64))
+    delta = GraphDelta.make(remove=rem)
+    for spec, expect_rebuild in (("lt", True), ("wc", False)):
+        store = SketchStore()
+        cfg = DiFuserConfig(num_registers=64, seed=0, model=spec)
+        entry = store.get_or_build(small_graph, cfg)
+        report = apply_delta(store, entry.key, delta)
+        assert report.removed > 0
+        assert report.rebuilt is expect_rebuild, spec
+        post = store.entry(entry.key)
+        if expect_rebuild:
+            assert not post.stale
+            ref = SketchStore().get_or_build(post.graph, cfg)
+            np.testing.assert_array_equal(np.asarray(post.matrix),
+                                          np.asarray(ref.matrix))
+        else:
+            assert post.stale  # wc: sound over-estimate until lazy rebuild
+
+
+def test_workload_presets_cover_every_model():
+    from repro.configs.difuser_workloads import PRESETS
+
+    zoo_models = {PRESETS[n].model.partition(":")[0]
+                  for n in PRESETS if n.startswith("zoo-")}
+    assert zoo_models == {"ic", "wc", "lt", "dic"}
+    # non-zoo presets keep the backward-compatible default
+    assert PRESETS["livejournal-like"].model == "wc"

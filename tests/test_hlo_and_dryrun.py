@@ -100,6 +100,11 @@ print(json.dumps(out))
 
 @pytest.fixture(scope="module")
 def mini_dryrun():
+    from repro.core.distributed import JAX_HAS_AXIS_TYPE
+
+    if not JAX_HAS_AXIS_TYPE:
+        pytest.skip("jax.sharding.AxisType missing (old jax) — mesh/shard_map "
+                    "API drift; dry-run cannot build its mesh")
     env = dict(os.environ, PYTHONPATH="src")
     env.pop("XLA_FLAGS", None)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

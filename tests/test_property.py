@@ -92,6 +92,53 @@ def test_threshold_in_range(w):
     assert 0 <= int(thr[0]) <= 0xFFFFFFFF
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=0, max_value=2**32 - 1),
+       st.integers(min_value=0, max_value=2**32 - 1),
+       st.integers(min_value=0, max_value=2**32 - 1))
+def test_fused_predicate_lo_zero_is_legacy_compare(h, thr, x):
+    """The model zoo's universal interval predicate with lo = 0 is
+    bit-identical to the paper's threshold compare (X ^ h) < thr — the wc
+    backward-compatibility contract at the predicate level."""
+    from repro.core.sampling import fused_predicate
+
+    hv = np.array([h], dtype=np.uint32)
+    tv = np.array([thr], dtype=np.uint32)
+    xv = np.array([x], dtype=np.uint32)
+    lo = np.zeros(1, dtype=np.uint32)
+    legacy = (hv ^ xv) < tv
+    np.testing.assert_array_equal(fused_predicate(hv, lo, tv, xv), legacy)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(min_value=0, max_value=15),
+                          st.integers(min_value=0, max_value=15),
+                          st.floats(min_value=0.0, max_value=1.0,
+                                    allow_nan=False, width=32)),
+                min_size=1, max_size=40))
+def test_wc_registry_bit_identical_to_legacy_path(edges):
+    """``wc`` through the diffusion registry lowers to exactly the legacy
+    per-edge operands: h = edge_hash(src, dst, seed), lo = 0,
+    thr = weight_to_threshold(weight) — so every wc sample decision (and
+    hence every wc seed set) is byte-identical to the pre-zoo path."""
+    from repro.core.sampling import fused_predicate, make_x_vector, sample_mask
+    from repro.diffusion import resolve
+    from repro.graphs.structs import Graph
+
+    src, dst, w = (np.array(c) for c in zip(*edges))
+    g = Graph.from_edges(16, src, dst, w.astype(np.float32), edge_block=8)
+    ep = resolve("wc").edge_params(g, seed=3)
+    legacy_h = edge_hash(g.src, g.dst, seed=3)
+    legacy_thr = weight_to_threshold(g.weight)
+    np.testing.assert_array_equal(ep.h, legacy_h)
+    np.testing.assert_array_equal(ep.thr, legacy_thr)
+    assert not ep.lo.any()
+    x = make_x_vector(16, seed=1)
+    np.testing.assert_array_equal(
+        fused_predicate(ep.h[:, None], ep.lo[:, None], ep.thr[:, None], x[None, :]),
+        sample_mask(legacy_h, legacy_thr, x))
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.lists(st.integers(min_value=0, max_value=2**32 - 1),
                 min_size=8, max_size=64, unique=True))

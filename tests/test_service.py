@@ -160,7 +160,7 @@ def test_delta_removal_threshold_triggers_full_rebuild(served):
     rem = (np.asarray(entry.graph.src[: m // 2]),
            np.asarray(entry.graph.dst[: m // 2]))
     report = apply_delta(store, key, GraphDelta.make(remove=rem),
-                         rebuild_threshold=0.1)
+                         staleness_threshold=0.1)
     assert report.rebuilt and not report.stale
     fresh = SketchStore().get_or_build(store.entry(key).graph, cfg,
                                        store.entry(key).x)
