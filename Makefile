@@ -23,4 +23,4 @@ bench-smoke:
 
 lint:
 	python -m compileall -q src tests benchmarks examples scripts
-	python -c "import importlib; [importlib.import_module(m) for m in ('repro', 'repro.core.difuser', 'repro.diffusion', 'repro.diffusion.models', 'repro.service', 'repro.service.engine', 'repro.launch.serve_im', 'benchmarks.model_zoo')]; print('imports ok')"
+	python -c "import importlib; [importlib.import_module(m) for m in ('repro', 'repro.core.difuser', 'repro.diffusion', 'repro.diffusion.models', 'repro.partition', 'repro.partition.serial', 'repro.service', 'repro.service.engine', 'repro.launch.serve_im', 'benchmarks.model_zoo', 'benchmarks.partition_balance')]; print('imports ok')"

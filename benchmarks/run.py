@@ -17,11 +17,16 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true", help="smaller graphs (CI)")
     args = ap.parse_args()
 
-    from benchmarks import (kernels_micro, model_zoo, roofline_report,
-                            service_throughput, table8_scaling, table9_comm,
+    from benchmarks import (kernels_micro, model_zoo, partition_balance,
+                            roofline_report, service_throughput,
+                            table8_scaling, table9_comm,
                             table34_quality_speed, table567_fasst)
 
     jobs = {
+        "partition": lambda: partition_balance.main(
+            scale=9 if args.fast else 11,
+            registers=128 if args.fast else 256,
+            k=2 if args.fast else 4),
         "service": lambda: service_throughput.main(
             scale=11 if args.fast else 14,
             num_queries=50 if args.fast else 200),

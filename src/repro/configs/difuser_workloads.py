@@ -9,6 +9,11 @@ SNAP-scale shapes (n up to 2^26, m up to 2^31) through lower()+compile().
 ``model`` selects a diffusion model from the repro.diffusion registry
 (wc | ic[:p] | lt | dic[:lambda]); the ``zoo-*`` presets cover one workload
 per registered model for the model-zoo benchmark (benchmarks/model_zoo.py).
+
+``partition`` selects the vertex-assignment strategy of the 2-D distributed
+partition (repro.partition registry: block | degree | edge | random); the
+``balance-*`` presets pin the skewed-RMAT regime the planner benchmark
+(benchmarks/partition_balance.py) measures.
 """
 import dataclasses
 
@@ -21,6 +26,7 @@ class IMWorkload:
     k: int = 50
     registers: int = 1024
     model: str = "wc"   # diffusion model spec (repro.diffusion registry)
+    partition: str = "block"  # vertex-assignment strategy (repro.partition)
 
 
 PRESETS = {
@@ -39,4 +45,10 @@ PRESETS = {
                          model="lt"),
     "zoo-dic": IMWorkload("zoo-dic", "rmat:11", "0.1", k=16, registers=512,
                           model="dic:1.0"),
+    # load-balanced 2-D partition: skewed Kronecker ids, hub-clustered — the
+    # regime where block assignment straggles and the planners pay off
+    "balance-degree": IMWorkload("balance-degree", "rmat-skew:11", "0.1",
+                                 k=16, registers=512, partition="degree"),
+    "balance-edge": IMWorkload("balance-edge", "rmat-skew:11", "0.1",
+                               k=16, registers=512, partition="edge"),
 }

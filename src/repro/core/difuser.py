@@ -209,7 +209,8 @@ def normalize_inputs(g: Graph, config: Optional[DiFuserConfig] = None,
 
 def build_sketch_matrix(g: Graph, config: Optional[DiFuserConfig] = None,
                         x: Optional[np.ndarray] = None, *, reg_offset: int = 0,
-                        init_matrix=None, normalized: bool = False):
+                        init_matrix=None, normalized: bool = False,
+                        edges=None):
     """Run Alg. 4 lines 3-6 once: fill + propagate-to-fixpoint.
 
     Returns ``(matrix int8[n_pad, J], build_iters, x_used)`` where ``matrix``
@@ -221,11 +222,14 @@ def build_sketch_matrix(g: Graph, config: Optional[DiFuserConfig] = None,
     of a fresh fill — the monotone-insertion repair path (service.delta).
     ``normalized=True`` skips the host canonicalization when the caller
     already holds a dst-sorted graph and sorted x (per-bank store builds).
+    ``edges``: optional precomputed ``(src, dst, h, lo, thr)`` device
+    operands for the (already normalized) graph — multi-bank builds pass
+    them so the O(m) model preprocessing runs once, not once per bank.
     """
     cfg = config or DiFuserConfig()
     if not normalized:
         g, x = normalize_inputs(g, cfg, x)
-    src, dst, h, lo, thr = edge_operands(g, cfg)
+    src, dst, h, lo, thr = edges if edges is not None else edge_operands(g, cfg)
     predicate = resolve_model(cfg.model).predicate
     if init_matrix is None:
         m, iters = _build_matrix_jit(

@@ -18,6 +18,17 @@ Two partition modes, both SPMD under one ``shard_map``:
   Compute overlaps communication; peak memory is two (n/P, J/S) blocks; the
   selection reduce shrinks from O(n) to O(n/P) + P scalars.
 
+The host-side partition build lives in :mod:`repro.partition`: a
+``PartitionPlan`` (``DistributedConfig.partition`` selects the strategy —
+``block`` is the historical contiguous split, ``degree``/``edge`` balance
+the per-shard work via a vertex relabeling permutation) feeds
+``build_partition_2d``, which emits per-ring-step bucket arrays. The body
+here stays plan-agnostic: it sweeps whatever buckets it is handed, and the
+``owned_ids`` array (local row -> original vertex id) keeps register
+hashes, validity masks, and the reported seeds in original-id space — so
+seed sets are bit-identical across planners, and "un-permuting" on exit is
+free.
+
 The pod axis (multi-pod mesh) extends the sample space: ``pod × model``
 shards form one flat sim axis (more simulations, same algorithm).
 
@@ -31,7 +42,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Optional, Sequence
 
 import jax
@@ -40,150 +50,20 @@ import numpy as np
 
 from repro.core import sketch
 from repro.core.difuser import DiFuserConfig, InfluenceResult, resolve_model
-from repro.core.fasst import partition_samples
-from repro.core.sampling import fused_predicate, make_x_vector
+from repro.core.sampling import fused_predicate
+from repro.core.sampling import make_x_vector
 from repro.core.sketch import VISITED
 from repro.graphs.structs import Graph
+# host-side partition build moved to repro.partition; re-exported here for
+# backward compatibility (tests and dryrun historically imported from core)
+from repro.partition import (Partition2D, build_partition_2d,  # noqa: F401
+                             plan_partition, sample_edge_sets)
 
 # jax API drift guard (single source: utils/jax_compat.py, re-exported here):
 # old containers ship a jax without jax.sharding.AxisType and its
 # mesh/shard_map surface. Tests that need a multi-device mesh skip on this
 # flag instead of erroring.
 from repro.utils.jax_compat import JAX_HAS_AXIS_TYPE  # noqa: F401
-
-# ---------------------------------------------------------------------------
-# Host-side partition build
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class Partition2D:
-    """Everything the shard_map body consumes, already bucketed + padded.
-
-    Bucket arrays have shape (mu_v, mu_s, mu_v, B): [write-owner shard,
-    sim shard, ring step k, slot]. At ring step k, vertex-shard v reads the
-    register block of shard (v + k) % mu_v.
-    """
-
-    n: int
-    n_pad: int                 # padded so mu_v | n_pad
-    n_loc: int
-    j_loc: int
-    mu_v: int
-    mu_s: int
-    x_shards: np.ndarray       # uint32[mu_s, j_loc] (FASST-sorted chunks)
-    # propagate buckets: write row = src (local id), read row = dst (block id)
-    p_h: np.ndarray            # uint32[mu_v, mu_s, mu_v, Bp] edge hash
-    p_w: np.ndarray            # int32 — local write row
-    p_r: np.ndarray            # int32 — row within the read block
-    p_t: np.ndarray            # uint32 — sampling threshold / interval width
-    p_l: np.ndarray            # uint32 — interval low endpoint (model zoo)
-    # cascade buckets: write row = dst (local id), read row = src (block id)
-    c_h: np.ndarray
-    c_w: np.ndarray
-    c_r: np.ndarray
-    c_t: np.ndarray
-    c_l: np.ndarray
-    edge_counts: np.ndarray    # int64[mu_v, mu_s] real (unpadded) edges per shard
-    comm_bytes_per_sweep: int  # ring traffic per device per sweep (both phases equal)
-
-
-def _bucketize(ids: np.ndarray, w_own: np.ndarray, k: np.ndarray,
-               eh: np.ndarray, wrow: np.ndarray, rrow: np.ndarray, thr: np.ndarray,
-               elo: np.ndarray, mu_v: int, b_max: int):
-    """Scatter per-edge data into (mu_v, mu_v, B) padded buckets."""
-    h_out = np.zeros((mu_v, mu_v, b_max), dtype=np.uint32)
-    w_out = np.zeros((mu_v, mu_v, b_max), dtype=np.int32)
-    r_out = np.zeros((mu_v, mu_v, b_max), dtype=np.int32)
-    t_out = np.zeros((mu_v, mu_v, b_max), dtype=np.uint32)  # thr=0 padding is inert
-    l_out = np.zeros((mu_v, mu_v, b_max), dtype=np.uint32)
-    order = np.lexsort((ids, k, w_own))
-    w_s, k_s = w_own[order], k[order]
-    eh_s, wr_s, rr_s, th_s, lo_s = (eh[order], wrow[order], rrow[order],
-                                    thr[order], elo[order])
-    keys = w_s.astype(np.int64) * mu_v + k_s
-    boundaries = np.searchsorted(keys, np.arange(mu_v * mu_v + 1))
-    for b in range(mu_v * mu_v):
-        lo, hi = boundaries[b], boundaries[b + 1]
-        if hi == lo:
-            continue
-        v, kk = divmod(b, mu_v)
-        cnt = hi - lo
-        h_out[v, kk, :cnt] = eh_s[lo:hi]
-        w_out[v, kk, :cnt] = wr_s[lo:hi]
-        r_out[v, kk, :cnt] = rr_s[lo:hi]
-        t_out[v, kk, :cnt] = th_s[lo:hi]
-        l_out[v, kk, :cnt] = lo_s[lo:hi]
-    return h_out, w_out, r_out, t_out, l_out
-
-
-def build_partition_2d(g: Graph, x: np.ndarray, mu_v: int, mu_s: int, *,
-                       seed: int = 0, method: str = "fasst",
-                       edge_block: int = 256, model: str = "wc") -> Partition2D:
-    """FASST sample-space split × contiguous vertex split, fully bucketed."""
-    r = x.shape[0]
-    assert r % mu_s == 0
-    x_shards, _ = partition_samples(x, mu_s, method=method)
-    j_loc = r // mu_s
-
-    n_pad = g.n_pad + ((-g.n_pad) % mu_v)
-    n_loc = n_pad // mu_v
-    mdl = resolve_model(model)
-    ep = mdl.edge_params(g, seed=seed)
-    eh_all, lo_all, thr_all = ep.h, ep.lo, ep.thr
-    src = g.src.astype(np.int64)
-    dst = g.dst.astype(np.int64)
-    own_src = (src // n_loc).astype(np.int32)
-    own_dst = (dst // n_loc).astype(np.int32)
-
-    # per sim-shard sampled-by-any masks (FASST device-local edge sets)
-    from repro.core.fasst import _sampled_by_any
-
-    p_parts, c_parts, counts = [], [], np.zeros((mu_v, mu_s), dtype=np.int64)
-    bp_sizes, bc_sizes = [], []
-    masks = [np.nonzero(_sampled_by_any(eh_all, thr_all, x_shards[s], lo=lo_all,
-                                        predicate=mdl.predicate))[0]
-             for s in range(mu_s)]
-    # compute global max bucket sizes first so every shard pads identically
-    for s in range(mu_s):
-        ids = masks[s]
-        kp = (own_dst[ids] - own_src[ids]) % mu_v
-        kc = (own_src[ids] - own_dst[ids]) % mu_v
-        bp = np.bincount(own_src[ids].astype(np.int64) * mu_v + kp, minlength=mu_v * mu_v)
-        bc = np.bincount(own_dst[ids].astype(np.int64) * mu_v + kc, minlength=mu_v * mu_v)
-        bp_sizes.append(bp.max() if bp.size else 0)
-        bc_sizes.append(bc.max() if bc.size else 0)
-    b_max = int(max(max(bp_sizes), max(bc_sizes), 1))
-    b_max += (-b_max) % edge_block
-
-    for s in range(mu_s):
-        ids = masks[s]
-        e_h, e_t, e_l = eh_all[ids], thr_all[ids], lo_all[ids]
-        wsrc, wdst = own_src[ids], own_dst[ids]
-        kp = (wdst - wsrc) % mu_v
-        kc = (wsrc - wdst) % mu_v
-        src_loc = (src[ids] % n_loc).astype(np.int32)
-        dst_loc = (dst[ids] % n_loc).astype(np.int32)
-        p_parts.append(_bucketize(ids, wsrc, kp, e_h, src_loc, dst_loc, e_t, e_l,
-                                  mu_v, b_max))
-        c_parts.append(_bucketize(ids, wdst, kc, e_h, dst_loc, src_loc, e_t, e_l,
-                                  mu_v, b_max))
-        for v in range(mu_v):
-            counts[v, s] = int((wsrc == v).sum())
-
-    def stack(parts, i):
-        return np.stack([p[i] for p in parts], axis=1)  # -> (mu_v, mu_s, mu_v, B)
-
-    comm = (mu_v - 1) * n_loc * j_loc  # int8 register block ring traffic / sweep
-    return Partition2D(
-        n=g.n, n_pad=n_pad, n_loc=n_loc, j_loc=j_loc, mu_v=mu_v, mu_s=mu_s,
-        x_shards=x_shards,
-        p_h=stack(p_parts, 0), p_w=stack(p_parts, 1), p_r=stack(p_parts, 2),
-        p_t=stack(p_parts, 3), p_l=stack(p_parts, 4),
-        c_h=stack(c_parts, 0), c_w=stack(c_parts, 1), c_r=stack(c_parts, 2),
-        c_t=stack(c_parts, 3), c_l=stack(c_parts, 4),
-        edge_counts=counts, comm_bytes_per_sweep=comm)
-
 
 # ---------------------------------------------------------------------------
 # Device-side shard_map body
@@ -219,7 +99,12 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
                          rebuild_threshold: float, max_prop: int, max_casc: int,
                          seed: int, schedule: str = "ring", local_sweeps: int = 0,
                          predicate=None):
-    """Returns the shard_map body running the full Alg. 4 loop."""
+    """Returns the shard_map body running the full Alg. 4 loop.
+
+    Bucket arrays arrive as per-ring-step tuples (``bh[kk]`` is step kk's
+    bucket, possibly width 0 — those steps skip their merge at trace time
+    but still forward the ring block).
+    """
     mu_v, mu_s = part.mu_v, part.mu_s
     n_loc, j_loc, n_real = part.n_loc, part.j_loc, part.n
     total_regs = mu_s * j_loc
@@ -229,7 +114,9 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
     def local_sweep(m_loc, bh, bw, br, bt, bl, x_loc, merge):
         """Sweep only the k=0 bucket (reads own register block; no comm)."""
         init = m_loc if merge is _bucket_sweep_propagate else (m_loc == VISITED).astype(jnp.uint8)
-        acc = merge(init, m_loc, bh[0], bw[0], br[0], bt[0], x_loc, bl[0], pred)
+        acc = init
+        if bh[0].shape[0]:
+            acc = merge(acc, m_loc, bh[0], bw[0], br[0], bt[0], x_loc, bl[0], pred)
         if merge is _bucket_sweep_propagate:
             return jnp.where(m_loc == VISITED, m_loc, acc)
         return jnp.where(acc.astype(bool), jnp.int8(VISITED), m_loc)
@@ -243,14 +130,17 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
             blocks = jax.lax.all_gather(m_loc, vertex_axis)  # (mu_v, n_loc, j_loc)
             me = jax.lax.axis_index(vertex_axis)
             for kk in range(mu_v):
+                if bh[kk].shape[0] == 0:
+                    continue
                 owner = jax.lax.rem(me + kk, mu_v)
                 acc = merge(acc, blocks[owner], bh[kk], bw[kk], br[kk], bt[kk],
                             x_loc, bl[kk], pred)
         else:
             block = m_loc
             for kk in range(mu_v):
-                acc = merge(acc, block, bh[kk], bw[kk], br[kk], bt[kk], x_loc,
-                            bl[kk], pred)
+                if bh[kk].shape[0]:
+                    acc = merge(acc, block, bh[kk], bw[kk], br[kk], bt[kk],
+                                x_loc, bl[kk], pred)
                 if kk + 1 < mu_v:
                     perm = [(i, (i - 1) % mu_v) for i in range(mu_v)]
                     block = jax.lax.ppermute(block, vertex_axis, perm)
@@ -276,28 +166,32 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
         m_out, _, iters = jax.lax.while_loop(cond, body, (m_loc, jnp.bool_(True), jnp.int32(0)))
         return m_out, iters
 
-    def body(x_loc, ph, pw, pr, pt, pl, ch, cw, cr, ct, cl):
+    def body(x_loc, owned, *bufs):
+        # regroup the flat per-step bucket args: 10 fields x mu_v steps
+        def grp(i):
+            return tuple(bufs[i * mu_v + kk][0, 0] for kk in range(mu_v))
+
+        ph, pw, pr, pt, pl = grp(0), grp(1), grp(2), grp(3), grp(4)
+        ch, cw, cr, ct, cl = grp(5), grp(6), grp(7), grp(8), grp(9)
+        x_loc = x_loc[0]
+        owned = owned[0]                 # (n_loc,) original vertex ids
         # local shard coordinates; sim axes flatten row-major (pod major)
-        vi = jax.lax.axis_index(vertex_axis)
         si = jnp.int32(0)
         mult = 1
         for ax in reversed(sim_axes):
             si = si + jax.lax.axis_index(ax) * mult
             mult *= _axis_size(ax)
         reg_offset = si * j_loc
-        row0 = vi * n_loc
-        rows = row0 + jnp.arange(n_loc, dtype=jnp.int32)
-        valid_row = rows < n_real
-
-        ph, pw, pr, pt, pl = ph[0, 0], pw[0, 0], pr[0, 0], pt[0, 0], pl[0, 0]
-        ch, cw, cr, ct, cl = ch[0, 0], cw[0, 0], cr[0, 0], ct[0, 0], cl[0, 0]
-        x_loc = x_loc[0]
+        valid_row = owned < n_real
 
         # ---- fill + initial propagate (Alg. 4 lines 3-6) ----
+        # register hashes key on the ORIGINAL vertex id, so the sketch
+        # content — and everything downstream — is independent of the plan's
+        # relabeling permutation
         j_ids = (jnp.arange(j_loc, dtype=jnp.uint32)[None, :] + reg_offset.astype(jnp.uint32))
         from repro.core.sampling import register_hash
 
-        fresh = jax.lax.clz(register_hash(rows.astype(jnp.uint32)[:, None], j_ids, seed=seed))
+        fresh = jax.lax.clz(register_hash(owned.astype(jnp.uint32)[:, None], j_ids, seed=seed))
         m_loc = jnp.where(valid_row[:, None], fresh.astype(jnp.int8), jnp.int8(VISITED))
 
         def refill(m_cur):
@@ -316,17 +210,20 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
             stats = jax.lax.psum(stats, tuple(sim_axes)) if sim_axes else stats
             est = sketch.estimate_from_sums(stats, total_regs, estimator=estimator)
             est = jnp.where(valid_row, est, -1.0)
-            loc_arg = jnp.argmax(est)
-            loc_best = est[loc_arg]
-            loc_seed = rows[loc_arg]
+            # min-original-id tie-break: under a relabeling plan, ids are
+            # scattered across shards, so plain argmax (lowest local row)
+            # would break bit-identity between planners on est ties
+            loc_best = jnp.max(est)
+            loc_seed = jnp.min(jnp.where(est == loc_best, owned,
+                                         jnp.int32(part.n_pad)))
             # cross-shard argmax: P scalars instead of the paper's O(n) vector
             bests = jax.lax.all_gather(loc_best, vertex_axis)        # (mu_v,)
             seeds_g = jax.lax.all_gather(loc_seed, vertex_axis)      # (mu_v,)
-            win = jnp.argmax(bests)
-            s_global = seeds_g[win]
-            gain = bests[win]
+            gain = jnp.max(bests)
+            s_global = jnp.min(jnp.where(bests == gain, seeds_g,
+                                         jnp.int32(part.n_pad)))
             # commit + cascade
-            m_cur = jnp.where((rows == s_global)[:, None], jnp.int8(VISITED), m_cur)
+            m_cur = jnp.where((owned == s_global)[:, None], jnp.int8(VISITED), m_cur)
             m_cur, _ = fixpoint(m_cur, ch, cw, cr, ct, cl, x_loc,
                                 _bucket_sweep_cascade, max_casc)
             visited = jnp.sum(jnp.logical_and(m_cur == VISITED, valid_row[:, None]).astype(jnp.int32))
@@ -372,11 +269,18 @@ class DistributedConfig(DiFuserConfig):
     schedule: str = "ring"          # "ring" | "allgather"
     fasst: bool = True              # False -> naive sample partition
     local_sweeps: int = 0           # extra comm-free sweeps per exchange
+    partition: str = "block"        # vertex-assignment strategy (repro.partition)
+    pad_mode: str = "step"          # "step" | "global" bucket padding
 
 
 def find_seeds_distributed(g: Graph, k: int, mesh, config: Optional[DistributedConfig] = None,
                            x: Optional[np.ndarray] = None):
-    """Run distributed DiFuseR on ``mesh``. Returns (InfluenceResult, Partition2D)."""
+    """Run distributed DiFuseR on ``mesh``. Returns (InfluenceResult, Partition2D).
+
+    Seeds/estimates come back in original vertex ids for every
+    ``cfg.partition`` strategy (the relabeling is un-permuted on device via
+    ``owned_ids``).
+    """
     from jax.sharding import PartitionSpec as P
 
     cfg = config or DistributedConfig()
@@ -385,9 +289,17 @@ def find_seeds_distributed(g: Graph, k: int, mesh, config: Optional[DistributedC
     if x is None:
         x = make_x_vector(cfg.num_registers, seed=cfg.seed)
     g = g.sorted_by_dst()
-    part = build_partition_2d(g, x, mu_v, mu_s, seed=cfg.seed,
-                              method="fasst" if cfg.fasst else "naive",
-                              model=cfg.model)
+    method = "fasst" if cfg.fasst else "naive"
+    # the O(m * mu_s) sampled-edge preprocessing feeds both the planner and
+    # the bucket build — run it once
+    sampled = sample_edge_sets(g, x, mu_s, seed=cfg.seed, model=cfg.model,
+                               method=method)
+    plan = plan_partition(g, mu_v, mu_s=mu_s, strategy=cfg.partition,
+                          seed=cfg.seed, model=cfg.model, method=method,
+                          sampled=sampled)
+    part = build_partition_2d(g, x, mu_v, mu_s, seed=cfg.seed, method=method,
+                              model=cfg.model, plan=plan, pad_mode=cfg.pad_mode,
+                              sampled=sampled)
 
     maker = _make_distributed_fn(
         part, k=k, vertex_axis=cfg.vertex_axis, sim_axes=tuple(cfg.sim_axes),
@@ -398,17 +310,19 @@ def find_seeds_distributed(g: Graph, k: int, mesh, config: Optional[DistributedC
     body = maker(mesh)
 
     sim_spec = cfg.sim_axes if len(cfg.sim_axes) > 1 else cfg.sim_axes[0]
-    bucket_spec = P(cfg.vertex_axis, sim_spec, None, None)
-    in_specs = (P(sim_spec, None),) + (bucket_spec,) * 10
+    bucket_spec = P(cfg.vertex_axis, sim_spec, None)
+    n_buckets = 10 * part.mu_v
+    in_specs = (P(sim_spec, None), P(cfg.vertex_axis, None)) + (bucket_spec,) * n_buckets
     out_specs = (P(), P(), P(), P(), P())
 
     fn = jax.jit(jax.shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False))
     # reshape x_shards so sim axes shard dim 0: (mu_s, j_loc)
-    args = [jnp.asarray(part.x_shards)]
-    for a in (part.p_h, part.p_w, part.p_r, part.p_t, part.p_l,
-              part.c_h, part.c_w, part.c_r, part.c_t, part.c_l):
-        args.append(jnp.asarray(a))
+    args = [jnp.asarray(part.x_shards), jnp.asarray(part.owned_ids)]
+    for field in (part.p_h, part.p_w, part.p_r, part.p_t, part.p_l,
+                  part.c_h, part.c_w, part.c_r, part.c_t, part.c_l):
+        for step in field:
+            args.append(jnp.asarray(step))
     seeds, gains, scores, rebuilds, build_iters = fn(*args)
     res = InfluenceResult(
         seeds=np.asarray(seeds), est_gains=np.asarray(gains), scores=np.asarray(scores),

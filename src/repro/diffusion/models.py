@@ -42,9 +42,9 @@ Registered models:
               (spec ``dic`` or ``dic:<lambda>``, default lambda = 1.0).
 
 The Monte-Carlo referee (baselines.mc_oracle) consumes the same model
-objects through ``live_edge_probability`` / ``mc_live_mask`` but draws its
-randomness from numpy PRNGs — independent of the XOR-hash scheme, as the
-paper's §5.1 oracle demands.
+objects through ``mc_sampler`` (one-shot convenience:
+``baselines.sample_live_mask``) but draws its randomness from numpy PRNGs —
+independent of the XOR-hash scheme, as the paper's §5.1 oracle demands.
 """
 from __future__ import annotations
 
@@ -86,7 +86,7 @@ def _real_edge_mask(g: Graph) -> np.ndarray:
 class DiffusionModel:
     """Base class: a stateless hash-fused edge-activation predicate plus its
     host-side preprocessing. Subclasses override ``edge_params`` and either
-    ``live_edge_probability`` (threshold-style models) or ``mc_live_mask``
+    ``live_edge_probability`` (threshold-style models) or ``mc_sampler``
     (anything with correlated edge draws, e.g. LT)."""
 
     name: str = ""
@@ -124,11 +124,6 @@ class DiffusionModel:
         hundreds of sims against one graph)."""
         p = self.live_edge_probability(g)
         return lambda rng: rng.random(g.m) < p
-
-    def mc_live_mask(self, g: Graph, rng: np.random.Generator) -> np.ndarray:
-        """bool[m] one live-edge sample (one-shot convenience over
-        ``mc_sampler``)."""
-        return self.mc_sampler(g)(rng)
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"{type(self).__name__}({self.spec!r})"

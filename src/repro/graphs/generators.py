@@ -55,8 +55,14 @@ def rmat_graph(
     setting: str = "w1",
     directed: bool = True,
     edge_block: int = 256,
+    permute_ids: bool = True,
 ) -> Graph:
-    """R-MAT generator (Graph500 parameters). n = 2**scale vertices."""
+    """R-MAT generator (Graph500 parameters). n = 2**scale vertices.
+
+    ``permute_ids=False`` keeps the raw Kronecker ids: degree correlates
+    with the id bit pattern (hubs cluster at low ids), the adversarial
+    regime for contiguous block vertex partitions — real crawls share this
+    id/degree locality, which is what the partition planners are for."""
     n = 1 << scale
     m = n * edge_factor
     rng = np.random.default_rng(seed)
@@ -74,8 +80,10 @@ def rmat_graph(
         src = (src << 1) | right.astype(np.int64)
         dst = (dst << 1) | col.astype(np.int64)
     # permute vertex ids to break the Kronecker correlation with id bits
+    # (advance the rng either way so both variants share an edge topology)
     perm = rng.permutation(n)
-    src, dst = perm[src], perm[dst]
+    if permute_ids:
+        src, dst = perm[src], perm[dst]
     if not directed:
         src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
     w = edge_weights(setting, src.shape[0], seed=seed + 1)

@@ -136,15 +136,21 @@ def lower_im_cell(name: str, mesh, *, k: int = 4, schedule: str = "ring"):
     mu_v = mesh.shape[vertex_axis]
     mu_s = _prod(mesh, sim_axes)
     n_pad = n + ((-n) % mu_v)
+    n_loc = n_pad // mu_v
     j_loc = j // mu_s
     bucket = int(np.ceil(m * dup / (mu_v * mu_s * mu_v) / 256) * 256)
 
     dummy = np.zeros((1,), np.int32)
+    dummy_steps = (dummy,) * mu_v
     part = Partition2D(
-        n=n, n_pad=n_pad, n_loc=n_pad // mu_v, j_loc=j_loc, mu_v=mu_v, mu_s=mu_s,
-        x_shards=dummy, p_h=dummy, p_w=dummy, p_r=dummy, p_t=dummy,
-        c_h=dummy, c_w=dummy, c_r=dummy, c_t=dummy,
-        edge_counts=dummy, comm_bytes_per_sweep=(mu_v - 1) * (n_pad // mu_v) * j_loc)
+        n=n, n_pad=n_pad, n_loc=n_loc, j_loc=j_loc, mu_v=mu_v, mu_s=mu_s,
+        x_shards=dummy, owned_ids=dummy,
+        p_h=dummy_steps, p_w=dummy_steps, p_r=dummy_steps, p_t=dummy_steps,
+        p_l=dummy_steps,
+        c_h=dummy_steps, c_w=dummy_steps, c_r=dummy_steps, c_t=dummy_steps,
+        c_l=dummy_steps,
+        edge_counts=dummy, p_counts=dummy, c_counts=dummy,
+        comm_bytes_per_sweep=(mu_v - 1) * n_loc * j_loc)
 
     maker = _make_distributed_fn(
         part, k=k, vertex_axis=vertex_axis, sim_axes=sim_axes, estimator="hll",
@@ -152,14 +158,16 @@ def lower_im_cell(name: str, mesh, *, k: int = 4, schedule: str = "ring"):
     body = maker(mesh)
 
     sim_spec = sim_axes if len(sim_axes) > 1 else sim_axes[0]
-    bucket_spec = P(vertex_axis, sim_spec, None, None)
-    in_specs = (P(sim_spec, None),) + (bucket_spec,) * 8
+    bucket_spec = P(vertex_axis, sim_spec, None)
+    in_specs = ((P(sim_spec, None), P(vertex_axis, None))
+                + (bucket_spec,) * (10 * mu_v))
     fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=in_specs,
                                out_specs=(P(), P(), P(), P(), P()), check_vma=False))
-    bshape = (mu_v, mu_s, mu_v, bucket)
-    args = [S.sds((mu_s, j_loc), jnp.uint32)]
-    for dt in (jnp.uint32, jnp.int32, jnp.int32, jnp.uint32) * 2:
-        args.append(S.sds(bshape, dt))
+    bshape = (mu_v, mu_s, bucket)
+    args = [S.sds((mu_s, j_loc), jnp.uint32), S.sds((mu_v, n_loc), jnp.int32)]
+    for dt in (jnp.uint32, jnp.int32, jnp.int32, jnp.uint32, jnp.uint32) * 2:
+        for _ in range(mu_v):
+            args.append(S.sds(bshape, dt))
     return fn.lower(*args), part
 
 

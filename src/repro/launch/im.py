@@ -24,6 +24,11 @@ def make_graph(spec: str, setting: str, seed: int):
     kind, _, arg = spec.partition(":")
     if kind == "rmat":
         return rmat_graph(int(arg), setting=setting, seed=seed)
+    if kind == "rmat-skew":
+        # heavier Kronecker tail + raw (unpermuted) ids: hubs cluster at low
+        # ids — the regime the partition planners exist for
+        return rmat_graph(int(arg), edge_factor=8, a=0.65, b=0.15, c=0.15,
+                          setting=setting, seed=seed, permute_ids=False)
     if kind == "er":
         return erdos_renyi_graph(int(arg), setting=setting, seed=seed)
     if kind == "ba":
@@ -45,6 +50,13 @@ def run(argv=None) -> dict:
     ap.add_argument("--registers", type=int, default=1024)
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--schedule", default="ring", choices=["ring", "allgather"])
+    ap.add_argument("--partition", default="block",
+                    help="vertex-assignment strategy for the 2-D partition: "
+                         "block|degree|edge|random (repro.partition registry; "
+                         "seed sets are identical across strategies)")
+    ap.add_argument("--mu-v", type=int, default=0,
+                    help="vertex shards of the (data, model) mesh "
+                         "(0 = historical default: 2 when --devices is even)")
     ap.add_argument("--no-fasst", action="store_true")
     ap.add_argument("--validate", action="store_true", help="score seeds with the MC oracle")
     ap.add_argument("--ris", action="store_true", help="also run the RIS/IMM baseline")
@@ -60,24 +72,37 @@ def run(argv=None) -> dict:
         import jax
 
         from repro.core.distributed import DistributedConfig, find_seeds_distributed
-        from repro.launch.mesh import make_mesh
+        from repro.launch.mesh import make_im_mesh
 
         ndev = len(jax.devices())
         if ndev < args.devices:
             raise SystemExit(
                 f"need {args.devices} devices, found {ndev}: export "
                 f"XLA_FLAGS=--xla_force_host_platform_device_count={args.devices}")
-        mu_v = 2 if args.devices % 2 == 0 else 1
-        mesh = make_mesh((mu_v, args.devices // mu_v), ("data", "model"))
+        mesh = make_im_mesh(args.devices, mu_v=args.mu_v)
         cfg = DistributedConfig(num_registers=args.registers, seed=args.seed,
                                 schedule=args.schedule, fasst=not args.no_fasst,
-                                model=args.model)
+                                model=args.model, partition=args.partition)
         res, part = find_seeds_distributed(g, args.k, mesh, cfg)
         out["max_shard_edges"] = int(part.edge_counts.max())
+        stats = part.stats()
+        out["edge_imbalance"] = stats.edge_imbalance
+        print(f"partition: {stats.describe()}")
     else:
         cfg = DiFuserConfig(num_registers=args.registers, seed=args.seed,
                             sort_x=not args.no_fasst, model=args.model)
         res = find_seeds(g, args.k, cfg)
+        if args.partition != "block":
+            # no mesh on one device, but the planner's cost model still
+            # answers "how would this graph shard" — print it for free
+            from repro.partition import plan_partition
+
+            plan = plan_partition(g.sorted_by_dst(), 8, mu_s=1,
+                                  strategy=args.partition, x=res.x,
+                                  seed=args.seed, model=args.model)
+            out["predicted_edge_imbalance"] = plan.predicted.edge_imbalance
+            print(f"partition plan (hypothetical 8-shard): "
+                  f"{plan.predicted.describe()}")
     dt = time.time() - t0
     out.update(time_s=round(dt, 2), seeds=res.seeds.tolist(),
                difuser_score=float(res.scores[-1]), rebuilds=int(res.rebuilds.sum()))

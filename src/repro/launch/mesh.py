@@ -44,3 +44,16 @@ def make_mesh(shape: tuple, axes: tuple) -> Mesh:
     ndev = math.prod(shape)
     return jax.make_mesh(shape, axes, devices=jax.devices()[:ndev],
                          **_MESH_KW(len(axes)))
+
+
+def make_im_mesh(devices: int, *, mu_v: int = 0) -> Mesh:
+    """(data, model) mesh for the IM drivers: ``mu_v`` vertex shards x
+    ``devices/mu_v`` sample-space shards. ``mu_v=0`` picks the historical
+    default (2-way vertex split when the device count is even) — raise it
+    when the graph outgrows per-device HBM and the partition planner keeps
+    the wider vertex split balanced."""
+    if mu_v <= 0:
+        mu_v = 2 if devices % 2 == 0 else 1
+    if devices % mu_v != 0:
+        raise ValueError(f"--devices {devices} not divisible by mu_v={mu_v}")
+    return make_mesh((mu_v, devices // mu_v), ("data", "model"))

@@ -54,6 +54,13 @@ def run(argv=None) -> dict:
                          "include the model id)")
     ap.add_argument("--registers", type=int, default=512)
     ap.add_argument("--banks", type=int, default=1)
+    ap.add_argument("--partition", default="",
+                    help="attach a vertex-shard plan to the index: "
+                         "block|degree|edge|random (empty = none); the store "
+                         "then serves planned_matrix() row blocks and deltas "
+                         "report the plan shards they touch")
+    ap.add_argument("--plan-shards", type=int, default=8,
+                    help="vertex shards of the attached plan")
     ap.add_argument("--queries", type=int, default=1000)
     ap.add_argument("--topk", type=int, default=10, help="k for TopKSeeds queries")
     ap.add_argument("--max-batch", type=int, default=256)
@@ -78,6 +85,18 @@ def run(argv=None) -> dict:
     entry = store.entry(key)
     print(f"store build: {entry.build_time_s:.2f}s "
           f"({entry.num_banks} bank(s), {entry.build_iters} sweeps)")
+
+    if args.partition:
+        from repro.partition import plan_partition
+
+        plan = plan_partition(entry.graph, args.plan_shards, mu_s=1,
+                              strategy=args.partition, x=entry.x,
+                              seed=args.seed, model=args.model)
+        store.attach_plan(key, plan)
+        pm = entry.planned_matrix()
+        shard_bytes = pm.shape[0] // plan.mu_v * pm.shape[1]
+        print(f"plan attached: {plan.predicted.describe()} "
+              f"({plan.mu_v} row blocks x {shard_bytes} B resident)")
 
     for q in make_workload(g.n, args.queries, k=args.topk, seed=args.seed + 7):
         engine.submit(key, q)

@@ -1,0 +1,202 @@
+"""Serial-ring executor: the 2-D distributed algorithm on one host.
+
+Runs the exact bucketed ring schedule the ``shard_map`` runtime executes —
+fill, ring propagate to fixpoint, K rounds of {select, cascade, score,
+lazy-rebuild} — but serially over the ``(mu_v, mu_s)`` shard grid in numpy.
+Three jobs:
+
+  * **planner invariance tests** — seed sets and spread estimates must be
+    identical across every :mod:`repro.partition.plan` strategy (and any
+    random relabeling), and they must match the single-device ``find_seeds``
+    path; this executor makes that testable without a multi-device mesh
+    (old-jax containers skip the ``shard_map`` suite entirely);
+  * **benchmarks** — ``benchmarks/partition_balance.py`` times real bucket
+    sweeps per planner without device multiplexing noise;
+  * **reference** — a readable spelling of the ring schedule (the
+    ``shard_map`` body in ``core/distributed.py`` is its device twin).
+
+Numerics mirror the device path: int8 registers, float32 estimator sums
+accumulated per sim shard in shard order (the psum), min-original-id
+tie-breaking in selection.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.difuser import DiFuserConfig, InfluenceResult, resolve_model
+from repro.core.sampling import clz32, make_x_vector, register_hash
+from repro.core.sketch import C_HARMONIC, PHI_FM, VISITED
+from repro.graphs.structs import Graph
+from repro.partition.builder import Partition2D, build_partition_2d
+from repro.partition.plan import (PartitionPlan, plan_partition,
+                                  sample_edge_sets)
+
+
+def _est_from_sums_np(stat, cnt, total_regs: int, estimator: str):
+    """numpy float32 mirror of ``sketch.estimate_from_sums``."""
+    frac = cnt / np.float32(total_regs)
+    if estimator == "hll":
+        est = np.float32(C_HARMONIC) * cnt / np.maximum(stat, np.float32(1e-30))
+    elif estimator == "fm_mean":
+        mean = stat / np.maximum(cnt, np.float32(1.0))
+        est = np.exp2(mean) / np.float32(PHI_FM)
+    else:
+        raise ValueError(f"unknown estimator: {estimator}")
+    return np.where(cnt > 0, est * frac, np.float32(0.0))
+
+
+class _RingState:
+    """Shard-grid register state + the bucket sweeps over it."""
+
+    def __init__(self, part: Partition2D, g: Graph, cfg: DiFuserConfig):
+        self.part, self.cfg = part, cfg
+        self.pred = resolve_model(cfg.model).predicate
+        self.owned = part.owned_ids                        # (mu_v, n_loc)
+        self.valid = self.owned < g.n                      # padding rows
+        mu_v, mu_s = part.mu_v, part.mu_s
+        n_loc, j_loc = part.n_loc, part.j_loc
+        fresh = np.empty((mu_v, mu_s, n_loc, j_loc), dtype=np.int8)
+        for v in range(mu_v):
+            for s in range(mu_s):
+                j_ids = np.arange(j_loc, dtype=np.uint32) + np.uint32(s * j_loc)
+                h = register_hash(self.owned[v].astype(np.uint32)[:, None],
+                                  j_ids[None, :], seed=cfg.seed)
+                fresh[v, s] = clz32(h).astype(np.int8)
+        self.fresh = fresh
+        self.m = np.where(self.valid[:, None, :, None], fresh, np.int8(VISITED))
+
+    def _mask(self, kk: int, v: int, s: int, bufs):
+        bh = bufs[0][kk][v, s]
+        bl, bt = bufs[4][kk][v, s], bufs[3][kk][v, s]
+        return self.pred(bh[:, None], bl[:, None], bt[:, None],
+                         self.part.x_shards[s][None, :])
+
+    def sweep_propagate(self) -> bool:
+        p = self.part
+        bufs = (p.p_h, p.p_w, p.p_r, p.p_t, p.p_l)
+        out = self.m.copy()
+        for v in range(p.mu_v):
+            for s in range(p.mu_s):
+                acc = self.m[v, s].copy()
+                for kk in range(p.mu_v):
+                    if bufs[0][kk].shape[-1] == 0:
+                        continue
+                    bw, br = bufs[1][kk][v, s], bufs[2][kk][v, s]
+                    block = self.m[(v + kk) % p.mu_v, s]
+                    contrib = np.where(self._mask(kk, v, s, bufs), block[br],
+                                       np.int8(VISITED))
+                    np.maximum.at(acc, bw, contrib)
+                out[v, s] = np.where(self.m[v, s] == VISITED, self.m[v, s], acc)
+        changed = bool((out != self.m).any())
+        self.m = out
+        return changed
+
+    def sweep_cascade(self) -> bool:
+        p = self.part
+        bufs = (p.c_h, p.c_w, p.c_r, p.c_t, p.c_l)
+        out = self.m.copy()
+        for v in range(p.mu_v):
+            for s in range(p.mu_s):
+                acc = (self.m[v, s] == VISITED).astype(np.uint8)
+                for kk in range(p.mu_v):
+                    if bufs[0][kk].shape[-1] == 0:
+                        continue
+                    bw, br = bufs[1][kk][v, s], bufs[2][kk][v, s]
+                    block = self.m[(v + kk) % p.mu_v, s]
+                    newly = (self._mask(kk, v, s, bufs)
+                             & (block[br] == VISITED)).astype(np.uint8)
+                    np.maximum.at(acc, bw, newly)
+                out[v, s] = np.where(acc.astype(bool), np.int8(VISITED),
+                                     self.m[v, s])
+        changed = bool((out != self.m).any())
+        self.m = out
+        return changed
+
+    def fixpoint(self, sweep, max_iters: int) -> int:
+        it, changed = 0, True
+        while changed and it < max_iters:
+            changed = sweep()
+            it += 1
+        return it
+
+    def select(self, total_regs: int, n_big: int):
+        """Min-original-id tie-broken argmax over finished estimates."""
+        m = self.m
+        vld = m != VISITED
+        stat = np.zeros(m.shape[:1] + m.shape[2:3], dtype=np.float32)
+        cnt = np.zeros_like(stat)
+        for s in range(self.part.mu_s):   # psum over sim shards, shard order
+            mf = m[:, s].astype(np.float32)
+            if self.cfg.estimator == "hll":
+                term = np.where(vld[:, s], np.exp2(-mf), np.float32(0.0))
+            else:
+                term = np.where(vld[:, s], mf, np.float32(0.0))
+            stat += term.sum(axis=-1, dtype=np.float32)
+            cnt += vld[:, s].sum(axis=-1).astype(np.float32)
+        est = _est_from_sums_np(stat, cnt, total_regs, self.cfg.estimator)
+        est = np.where(self.valid, est, np.float32(-1.0))
+        best = est.max()
+        seed_v = int(np.where(est == best, self.owned, n_big).min())
+        return seed_v, np.float32(best)
+
+    def commit(self, seed_v: int) -> None:
+        hit = self.owned == seed_v                        # (mu_v, n_loc)
+        self.m = np.where(hit[:, None, :, None], np.int8(VISITED), self.m)
+
+    def visited_count(self) -> int:
+        return int(((self.m == VISITED) & self.valid[:, None, :, None]).sum())
+
+    def refill(self) -> None:
+        self.m = np.where(self.m == VISITED, self.m, self.fresh)
+
+
+def find_seeds_ring_serial(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
+                           *, mu_v: int = 2, mu_s: int = 2,
+                           strategy: str = "block",
+                           plan: Optional[PartitionPlan] = None,
+                           x: Optional[np.ndarray] = None,
+                           pad_mode: str = "step"):
+    """Run the full ring-scheduled Alg. 4 loop serially.
+
+    Returns ``(InfluenceResult, Partition2D)`` like
+    ``find_seeds_distributed``; seeds are original vertex ids regardless of
+    the plan's relabeling.
+    """
+    cfg = config or DiFuserConfig()
+    g = g.sorted_by_dst()
+    if x is None:
+        x = make_x_vector(cfg.num_registers, seed=cfg.seed)
+    x = np.asarray(x, dtype=np.uint32)
+    sampled = sample_edge_sets(g, x, mu_s, seed=cfg.seed, model=cfg.model)
+    if plan is None:
+        plan = plan_partition(g, mu_v, mu_s=mu_s, strategy=strategy,
+                              seed=cfg.seed, model=cfg.model, sampled=sampled)
+    part = build_partition_2d(g, x, mu_v, mu_s, seed=cfg.seed, model=cfg.model,
+                              plan=plan, pad_mode=pad_mode, sampled=sampled)
+    st = _RingState(part, g, cfg)
+    total_regs = part.mu_s * part.j_loc
+    build_iters = st.fixpoint(st.sweep_propagate, cfg.max_propagate_iters)
+
+    seeds = np.zeros(k, dtype=np.int32)
+    gains = np.zeros(k, dtype=np.float32)
+    scores = np.zeros(k, dtype=np.float32)
+    rebuilds = np.zeros(k, dtype=bool)
+    oldscore = np.float32(0.0)
+    for i in range(k):
+        s_v, gain = st.select(total_regs, part.n_pad)
+        st.commit(s_v)
+        st.fixpoint(st.sweep_cascade, cfg.max_cascade_iters)
+        new_score = np.float32(st.visited_count()) / np.float32(total_regs)
+        rel = (new_score - oldscore) / np.maximum(new_score, np.float32(1e-9))
+        do_rebuild = bool(rel > np.float32(cfg.rebuild_threshold))
+        if do_rebuild:
+            st.refill()
+            st.fixpoint(st.sweep_propagate, cfg.max_propagate_iters)
+            oldscore = new_score
+        seeds[i], gains[i], scores[i], rebuilds[i] = s_v, gain, new_score, do_rebuild
+    res = InfluenceResult(seeds=seeds, est_gains=gains, scores=scores,
+                          rebuilds=rebuilds, propagate_iters=build_iters,
+                          x=np.sort(x))
+    return res, part

@@ -43,6 +43,10 @@ class DeltaReport:
     repair_sweeps: int        # fixpoint sweeps the insertion repair ran
     banks_touched: int        # banks whose frontier sweep found real work
     time_s: float
+    # vertex-shards of the entry's PartitionPlan whose rows the delta's
+    # endpoints land in (empty without a plan) — the invalidation set a
+    # mesh-sharded store bank repairs instead of the whole matrix
+    plan_shards_touched: tuple = ()
 
 
 def _touched_edge_arrays(new_g: Graph, delta: GraphDelta, ep,
@@ -102,6 +106,16 @@ def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
     entry.graph = new_g
     entry.version += 1
 
+    # permute the delta through the entry's plan (if any): which vertex
+    # shards of the planned layout does this delta dirty?
+    plan_shards: tuple = ()
+    if entry.plan is not None:
+        touched_v = np.unique(np.concatenate(
+            [delta.add_src, delta.add_dst, delta.rem_src, delta.rem_dst]))
+        if touched_v.size:
+            plan_shards = tuple(
+                np.unique(entry.plan.owner_of(touched_v)).tolist())
+
     rebuilt = False
     repair_sweeps = 0
     banks_touched = 0
@@ -131,7 +145,8 @@ def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
                        rebuilt=rebuilt, stale=entry.stale,
                        staleness_frac=entry.staleness_frac,
                        repair_sweeps=repair_sweeps, banks_touched=banks_touched,
-                       time_s=time.perf_counter() - t0)
+                       time_s=time.perf_counter() - t0,
+                       plan_shards_touched=plan_shards)
 
 
 def _repair_insertions(entry: StoreEntry, new_g: Graph, delta: GraphDelta):
@@ -153,8 +168,7 @@ def _repair_insertions(entry: StoreEntry, new_g: Graph, delta: GraphDelta):
     # warm the serving-path cache with the operands just computed — the next
     # TopKSeeds would otherwise redo the O(m) model preprocessing + upload
     # for the identical graph/cfg (apply_delta already bumped the version)
-    entry._edges_cache = (entry.version,
-                          (full_src, full_dst, full_h, full_lo, full_thr))
+    entry.prime_edges_cache((full_src, full_dst, full_h, full_lo, full_thr))
 
     j_loc = entry.regs_per_bank
     total_sweeps = 0

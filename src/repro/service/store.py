@@ -28,6 +28,7 @@ from repro.core.difuser import (DiFuserConfig, build_sketch_matrix,
                                 edge_operands, normalize_inputs, normalize_x)
 from repro.diffusion import DEFAULT_MODEL
 from repro.graphs.structs import Graph
+from repro.partition import PartitionPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,8 +76,10 @@ class StoreEntry:
     stale: bool = False          # removals applied but matrix not yet rebuilt
     staleness_frac: float = 0.0  # removed-edge fraction since last rebuild
     rebuilds: int = 0
+    plan: Optional[PartitionPlan] = None   # vertex-shard plan (mesh residency)
     _matrix_cache: Optional[tuple] = None  # (version, concatenated matrix)
     _edges_cache: Optional[tuple] = None   # (version, (src, dst, h, lo, thr) device)
+    _planned_cache: Optional[tuple] = None  # (version, plan-row-order matrix)
 
     @property
     def num_banks(self) -> int:
@@ -107,8 +110,36 @@ class StoreEntry:
         preprocessing, and re-upload (the graph only changes via deltas,
         which bump it)."""
         if self._edges_cache is None or self._edges_cache[0] != self.version:
-            self._edges_cache = (self.version, edge_operands(self.graph, self.cfg))
+            self.prime_edges_cache()
         return self._edges_cache[1]
+
+    def prime_edges_cache(self, edges: Optional[tuple] = None) -> tuple:
+        """Install ``(src, dst, h, lo, thr)`` device operands for the entry's
+        *current* (graph, cfg, version) — the sanctioned way for build/delta
+        paths that just computed the operands to warm the serving cache
+        (``device_edges``) instead of poking the private tuple. With no
+        argument, computes them fresh."""
+        if edges is None:
+            edges = edge_operands(self.graph, self.cfg)
+        self._edges_cache = (self.version, edges)
+        return edges
+
+    def planned_matrix(self) -> jnp.ndarray:
+        """Register matrix with rows in the entry's plan order (shard ``v``
+        of the plan owns contiguous rows ``[v*n_loc, (v+1)*n_loc)``) — the
+        layout a mesh-sharded store bank slices per device. Cached against
+        ``version``; rows past ``n_pad`` of the plan are padding (VISITED
+        everywhere), exactly like the distributed runtime's."""
+        if self.plan is None:
+            raise ValueError("entry has no partition plan attached")
+        if self._planned_cache is None or self._planned_cache[0] != self.version:
+            m = self.matrix
+            n_pad = self.plan.n_pad
+            if m.shape[0] < n_pad:  # plan pads further than the graph did
+                pad = jnp.full((n_pad - m.shape[0], m.shape[1]), jnp.int8(-1))
+                m = jnp.concatenate([m, pad], axis=0)
+            self._planned_cache = (self.version, m[jnp.asarray(self.plan.inv_perm)])
+        return self._planned_cache[1]
 
     def set_matrix(self, m: jnp.ndarray) -> None:
         """Replace the resident matrix, preserving the bank split."""
@@ -168,32 +199,38 @@ class SketchStore:
 
     def _build_entry(self, key: StoreKey, g_norm: Graph, cfg: DiFuserConfig,
                      x_norm: np.ndarray) -> StoreEntry:
-        banks, iters, dt = self._build_banks(g_norm, cfg, x_norm)
-        return StoreEntry(key=key, graph=g_norm, cfg=cfg, x=x_norm, banks=banks,
-                          build_iters=iters, build_time_s=dt)
+        banks, iters, dt, edges = self._build_banks(g_norm, cfg, x_norm)
+        entry = StoreEntry(key=key, graph=g_norm, cfg=cfg, x=x_norm, banks=banks,
+                           build_iters=iters, build_time_s=dt)
+        entry.prime_edges_cache(edges)
+        return entry
 
     def _build_banks(self, g_norm: Graph, cfg: DiFuserConfig, x_norm: np.ndarray):
         j = x_norm.shape[0]
         assert j % self.num_banks == 0, (j, self.num_banks)
         j_loc = j // self.num_banks
         t0 = time.perf_counter()
+        # hoisted out of the bank loop: the O(m) model preprocessing +
+        # device upload is identical for every bank (banks split the sample
+        # space, not the graph)
+        edges = edge_operands(g_norm, cfg)
         banks, iters = [], 0
         for b in range(self.num_banks):
             m_b, it_b, _ = build_sketch_matrix(
                 g_norm, cfg, x_norm[b * j_loc:(b + 1) * j_loc],
-                reg_offset=b * j_loc, normalized=True)
+                reg_offset=b * j_loc, normalized=True, edges=edges)
             banks.append(m_b)
             iters = max(iters, it_b)
         for m_b in banks:
             m_b.block_until_ready()
-        return banks, iters, time.perf_counter() - t0
+        return banks, iters, time.perf_counter() - t0, edges
 
     def rebuild(self, key: StoreKey) -> StoreEntry:
         """Full pristine rebuild from the entry's *current* graph (Alg. 4
         rebuild machinery at the store level: after deltas marked the entry
         stale, or on explicit request). Clears staleness, bumps version."""
         entry = self._entries[key]
-        banks, iters, dt = self._build_banks(entry.graph, entry.cfg, entry.x)
+        banks, iters, dt, edges = self._build_banks(entry.graph, entry.cfg, entry.x)
         entry.banks = banks
         entry.build_iters = iters
         entry.build_time_s = dt
@@ -201,6 +238,22 @@ class SketchStore:
         entry.staleness_frac = 0.0
         entry.version += 1
         entry.rebuilds += 1
+        entry.prime_edges_cache(edges)
+        return entry
+
+    def attach_plan(self, key: StoreKey, plan: PartitionPlan) -> StoreEntry:
+        """Remember a vertex-shard plan on a resident entry.
+
+        The matrix stays in canonical (original-id) row order — queries are
+        untouched — but ``entry.planned_matrix()`` now serves the plan-order
+        layout a mesh-sharded bank would slice, and deltas report which plan
+        shards they touched (``DeltaReport.plan_shards_touched``), the hook
+        distributed delta repair keys on. Plans survive deltas/rebuilds (the
+        vertex set is fixed) and are persisted by ``save``/``load``."""
+        entry = self._entries[key]
+        plan.validate(entry.graph)
+        entry.plan = plan
+        entry._planned_cache = None
         return entry
 
     # ------------------------------------------------------------------
@@ -218,9 +271,15 @@ class SketchStore:
         path = self._npz_path(path)
         e = self._entries[key]
         g = e.graph
+        plan_fields = {}
+        if e.plan is not None:
+            plan_fields = dict(plan_strategy=np.str_(e.plan.strategy),
+                               plan_perm=e.plan.perm,
+                               plan_mu_v=e.plan.mu_v, plan_mu_s=e.plan.mu_s)
         np.savez_compressed(
             path,
             matrix=np.asarray(e.matrix), x=e.x,
+            **plan_fields,
             n=g.n, n_pad=g.n_pad, m_real=g.m_real,
             src=g.src, dst=g.dst, weight=g.weight,
             graph_key=np.str_(e.key.graph_key),
@@ -266,5 +325,9 @@ class SketchStore:
                            build_time_s=0.0, version=int(z["version"]),
                            stale=bool(z["stale"]),
                            staleness_frac=float(z["staleness_frac"]))
+        if "plan_strategy" in getattr(z, "files", ()):
+            entry.plan = PartitionPlan.from_permutation(
+                g.n, int(z["plan_mu_v"]), int(z["plan_mu_s"]),
+                z["plan_perm"], strategy=str(z["plan_strategy"]))
         self._entries[key] = entry
         return entry

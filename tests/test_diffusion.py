@@ -211,12 +211,12 @@ def test_bucketized_sweep_matches_single_device(spec):
                 block = jnp.asarray(
                     np.array(m0)[owner * n_loc:(owner + 1) * n_loc, cols])
                 acc = _bucket_sweep_propagate(
-                    acc, block, jnp.asarray(part.p_h[v, s, kk]),
-                    jnp.asarray(part.p_w[v, s, kk]),
-                    jnp.asarray(part.p_r[v, s, kk]),
-                    jnp.asarray(part.p_t[v, s, kk]),
+                    acc, block, jnp.asarray(part.p_h[kk][v, s]),
+                    jnp.asarray(part.p_w[kk][v, s]),
+                    jnp.asarray(part.p_r[kk][v, s]),
+                    jnp.asarray(part.p_t[kk][v, s]),
                     jnp.asarray(part.x_shards[s]),
-                    jnp.asarray(part.p_l[v, s, kk]), mdl.predicate)
+                    jnp.asarray(part.p_l[kk][v, s]), mdl.predicate)
             out[rows, cols] = np.where(np.array(m_vs) == -1, np.array(m_vs),
                                        np.array(acc))
     np.testing.assert_array_equal(out[: g.n_pad], np.array(ref)[: g.n_pad])

@@ -1,0 +1,326 @@
+"""Partition planner: golden bit-compat, balance, and results-invariance.
+
+The contract under test (ISSUE 3 acceptance):
+
+  * ``block`` + ``pad_mode="global"`` reproduces the pre-planner partition
+    bit-identically (golden copy of the legacy builder below);
+  * ``degree`` / ``edge`` cut the measured max/mean edge imbalance >= 2x on
+    a skewed RMAT graph (the partition_balance benchmark regime);
+  * seed sets and spread estimates are IDENTICAL across all planners and
+    under arbitrary random vertex relabeling, for every registered
+    diffusion model (serial-ring executor — no mesh needed);
+  * the service store remembers plans (persistence included) and deltas
+    permute through them.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.difuser import DiFuserConfig, find_seeds
+from repro.core.sampling import make_x_vector
+from repro.graphs import rmat_graph
+from repro.partition import (PartitionPlan, available_strategies,
+                             build_partition_2d, find_seeds_ring_serial,
+                             plan_partition)
+
+
+def _skewed_graph(scale=9):
+    return rmat_graph(scale, edge_factor=8, a=0.65, b=0.15, c=0.15, seed=71,
+                      setting="w1", permute_ids=False).sorted_by_dst()
+
+
+# ---------------------------------------------------------------------------
+# Golden: the pre-planner host build, copied verbatim (contiguous block
+# assignment, one global b_max). block+global must reproduce it bit-for-bit.
+# ---------------------------------------------------------------------------
+
+
+def _legacy_bucketize(ids, w_own, k, eh, wrow, rrow, thr, elo, mu_v, b_max):
+    h_out = np.zeros((mu_v, mu_v, b_max), dtype=np.uint32)
+    w_out = np.zeros((mu_v, mu_v, b_max), dtype=np.int32)
+    r_out = np.zeros((mu_v, mu_v, b_max), dtype=np.int32)
+    t_out = np.zeros((mu_v, mu_v, b_max), dtype=np.uint32)
+    l_out = np.zeros((mu_v, mu_v, b_max), dtype=np.uint32)
+    order = np.lexsort((ids, k, w_own))
+    w_s, k_s = w_own[order], k[order]
+    eh_s, wr_s, rr_s, th_s, lo_s = (eh[order], wrow[order], rrow[order],
+                                    thr[order], elo[order])
+    keys = w_s.astype(np.int64) * mu_v + k_s
+    boundaries = np.searchsorted(keys, np.arange(mu_v * mu_v + 1))
+    for b in range(mu_v * mu_v):
+        lo, hi = boundaries[b], boundaries[b + 1]
+        if hi == lo:
+            continue
+        v, kk = divmod(b, mu_v)
+        cnt = hi - lo
+        h_out[v, kk, :cnt] = eh_s[lo:hi]
+        w_out[v, kk, :cnt] = wr_s[lo:hi]
+        r_out[v, kk, :cnt] = rr_s[lo:hi]
+        t_out[v, kk, :cnt] = th_s[lo:hi]
+        l_out[v, kk, :cnt] = lo_s[lo:hi]
+    return h_out, w_out, r_out, t_out, l_out
+
+
+def _legacy_build(g, x, mu_v, mu_s, *, seed=0, edge_block=256, model="wc"):
+    from repro.core.difuser import resolve_model
+    from repro.core.fasst import _sampled_by_any, partition_samples
+
+    x_shards, _ = partition_samples(x, mu_s, method="fasst")
+    n_pad = g.n_pad + ((-g.n_pad) % mu_v)
+    n_loc = n_pad // mu_v
+    mdl = resolve_model(model)
+    ep = mdl.edge_params(g, seed=seed)
+    eh_all, lo_all, thr_all = ep.h, ep.lo, ep.thr
+    src = g.src.astype(np.int64)
+    dst = g.dst.astype(np.int64)
+    own_src = (src // n_loc).astype(np.int32)
+    own_dst = (dst // n_loc).astype(np.int32)
+    p_parts, c_parts = [], []
+    bp_sizes, bc_sizes = [], []
+    masks = [np.nonzero(_sampled_by_any(eh_all, thr_all, x_shards[s], lo=lo_all,
+                                        predicate=mdl.predicate))[0]
+             for s in range(mu_s)]
+    for s in range(mu_s):
+        ids = masks[s]
+        kp = (own_dst[ids] - own_src[ids]) % mu_v
+        kc = (own_src[ids] - own_dst[ids]) % mu_v
+        bp = np.bincount(own_src[ids].astype(np.int64) * mu_v + kp, minlength=mu_v * mu_v)
+        bc = np.bincount(own_dst[ids].astype(np.int64) * mu_v + kc, minlength=mu_v * mu_v)
+        bp_sizes.append(bp.max() if bp.size else 0)
+        bc_sizes.append(bc.max() if bc.size else 0)
+    b_max = int(max(max(bp_sizes), max(bc_sizes), 1))
+    b_max += (-b_max) % edge_block
+    for s in range(mu_s):
+        ids = masks[s]
+        e_h, e_t, e_l = eh_all[ids], thr_all[ids], lo_all[ids]
+        wsrc, wdst = own_src[ids], own_dst[ids]
+        kp = (wdst - wsrc) % mu_v
+        kc = (wsrc - wdst) % mu_v
+        src_loc = (src[ids] % n_loc).astype(np.int32)
+        dst_loc = (dst[ids] % n_loc).astype(np.int32)
+        p_parts.append(_legacy_bucketize(ids, wsrc, kp, e_h, src_loc, dst_loc,
+                                         e_t, e_l, mu_v, b_max))
+        c_parts.append(_legacy_bucketize(ids, wdst, kc, e_h, dst_loc, src_loc,
+                                         e_t, e_l, mu_v, b_max))
+
+    def stack(parts, i):
+        return np.stack([p[i] for p in parts], axis=1)  # (mu_v, mu_s, mu_v, B)
+
+    return {name: stack(parts, i)
+            for parts, fields in ((p_parts, ("p_h", "p_w", "p_r", "p_t", "p_l")),
+                                  (c_parts, ("c_h", "c_w", "c_r", "c_t", "c_l")))
+            for i, name in enumerate(fields)}
+
+
+@pytest.mark.parametrize("model", ["wc", "lt"])
+def test_block_global_bit_identical_to_legacy(model):
+    g = rmat_graph(7, edge_factor=6, seed=9, setting="w1").sorted_by_dst()
+    x = make_x_vector(128, seed=3)
+    golden = _legacy_build(g, x, 2, 2, seed=3, model=model)
+    part = build_partition_2d(g, x, 2, 2, seed=3, model=model,
+                              pad_mode="global")
+    assert part.plan.strategy == "block"
+    np.testing.assert_array_equal(part.plan.perm, np.arange(part.n_pad))
+    for name in golden:
+        # new layout: per-step tuple of (mu_v, mu_s, B); stack to legacy 4-D
+        got = np.stack(getattr(part, name), axis=2)
+        np.testing.assert_array_equal(got, golden[name], err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Planner validity + balance
+# ---------------------------------------------------------------------------
+
+
+def test_all_strategies_produce_valid_permutations():
+    g = _skewed_graph(8)
+    x = make_x_vector(128, seed=5)
+    for strat in available_strategies():
+        plan = plan_partition(g, 4, mu_s=2, strategy=strat, x=x, seed=5)
+        assert np.array_equal(np.sort(plan.perm), np.arange(plan.n_pad)), strat
+        assert np.array_equal(plan.perm[plan.inv_perm],
+                              np.arange(plan.n_pad)), strat
+        # every shard owns exactly n_loc rows
+        owners = plan.perm[: g.n] // plan.n_loc
+        assert np.bincount(owners, minlength=4).max() <= plan.n_loc, strat
+        assert plan.owned_ids().shape == (4, plan.n_loc), strat
+
+
+def test_degree_and_edge_cut_block_imbalance_2x():
+    """The ISSUE acceptance bar, at the partition_balance benchmark's fast
+    config: skewed RMAT, mu_v=8 — degree/edge must at least halve block's
+    measured max/mean edge imbalance."""
+    g = _skewed_graph(9)
+    x = make_x_vector(128, seed=7)
+    imb = {}
+    for strat in ("block", "degree", "edge"):
+        plan = plan_partition(g, 8, mu_s=1, strategy=strat, x=x, seed=7)
+        part = build_partition_2d(g, x, 8, 1, seed=7, plan=plan)
+        imb[strat] = part.stats().edge_imbalance
+    assert imb["block"] >= 2.0 * imb["degree"], imb
+    assert imb["block"] >= 2.0 * imb["edge"], imb
+
+
+def test_per_step_padding_wastes_no_more_than_global():
+    g = _skewed_graph(8)
+    x = make_x_vector(128, seed=7)
+    step = build_partition_2d(g, x, 4, 1, seed=7, pad_mode="step")
+    glob = build_partition_2d(g, x, 4, 1, seed=7, pad_mode="global")
+    assert step.stats().pad_waste_frac <= glob.stats().pad_waste_frac
+    # identical real contents: per-step arrays truncate to the same buckets
+    for kk in range(4):
+        for v in range(4):
+            cnt = int(step.p_counts[v, 0, kk])
+            np.testing.assert_array_equal(step.p_h[kk][v, 0][:cnt],
+                                          glob.p_h[kk][v, 0][:cnt])
+            assert not step.p_t[kk][v, 0][cnt:].any()  # padding is inert
+
+
+# ---------------------------------------------------------------------------
+# Results invariance (the load-bearing property): same seeds, same
+# estimates, across every planner and any relabeling, for every model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model", ["wc", "ic:0.1", "lt", "dic:1.0"])
+def test_serial_ring_invariant_across_planners_all_models(model):
+    g = rmat_graph(7, edge_factor=6, seed=9, setting="w1")
+    cfg = DiFuserConfig(num_registers=128, seed=3, model=model)
+    single = find_seeds(g, 3, cfg)
+
+    g_sorted = g.sorted_by_dst()
+    x = np.sort(make_x_vector(128, seed=3)).astype(np.uint32)
+    n_pad = g_sorted.n_pad + ((-g_sorted.n_pad) % 2)
+    rng = np.random.default_rng(42)
+    plans = {strat: plan_partition(g_sorted, 2, mu_s=2, strategy=strat, x=x,
+                                   seed=3, model=model)
+             for strat in ("block", "degree", "edge")}
+    # arbitrary random relabeling — not even a registered strategy
+    plans["relabel"] = PartitionPlan.from_permutation(
+        g.n, 2, 2, rng.permutation(n_pad).astype(np.int32))
+
+    ref = None
+    for name, plan in plans.items():
+        res, _ = find_seeds_ring_serial(g, 3, cfg, mu_v=2, mu_s=2, plan=plan)
+        if ref is None:
+            ref = res
+            # the ring schedule must agree with the single-device run
+            np.testing.assert_array_equal(res.seeds, single.seeds)
+            np.testing.assert_allclose(res.scores, single.scores, rtol=1e-5)
+        else:
+            np.testing.assert_array_equal(res.seeds, ref.seeds, err_msg=name)
+            np.testing.assert_array_equal(res.scores, ref.scores, err_msg=name)
+            np.testing.assert_array_equal(res.est_gains, ref.est_gains,
+                                          err_msg=name)
+            np.testing.assert_array_equal(res.rebuilds, ref.rebuilds,
+                                          err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Service-layer threading: plans on store entries, deltas permute through
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def store_entry():
+    from repro.service import SketchStore
+
+    g = rmat_graph(7, edge_factor=6, seed=4, setting="w1")
+    cfg = DiFuserConfig(num_registers=128, seed=1)
+    store = SketchStore()
+    entry = store.get_or_build(g, cfg)
+    return store, entry
+
+
+def test_store_attach_plan_and_planned_matrix(store_entry):
+    store, entry = store_entry
+    plan = plan_partition(entry.graph, 4, mu_s=1, strategy="degree",
+                          x=entry.x, seed=1)
+    store.attach_plan(entry.key, plan)
+    pm = np.asarray(entry.planned_matrix())
+    m = np.asarray(entry.matrix)
+    assert pm.shape[0] == plan.n_pad
+    # row i of the planned layout is the original row inv_perm[i]
+    pad = np.full((plan.n_pad - m.shape[0], m.shape[1]), -1, dtype=m.dtype)
+    np.testing.assert_array_equal(pm, np.concatenate([m, pad])[plan.inv_perm])
+
+
+def test_store_plan_survives_save_load(store_entry, tmp_path):
+    from repro.service import SketchStore
+
+    store, entry = store_entry
+    plan = plan_partition(entry.graph, 4, mu_s=1, strategy="edge",
+                          x=entry.x, seed=1)
+    store.attach_plan(entry.key, plan)
+    path = str(tmp_path / "idx")
+    store.save(path, entry.key)
+    other = SketchStore()
+    loaded = other.load(path)
+    assert loaded.plan is not None
+    assert loaded.plan.strategy == "edge"
+    np.testing.assert_array_equal(loaded.plan.perm, plan.perm)
+    np.testing.assert_array_equal(np.asarray(loaded.planned_matrix()),
+                                  np.asarray(entry.planned_matrix()))
+
+
+def test_delta_reports_plan_shards_touched(store_entry):
+    from repro.graphs.structs import GraphDelta
+    from repro.service import apply_delta
+
+    store, entry = store_entry
+    plan = plan_partition(entry.graph, 4, mu_s=1, strategy="degree",
+                          x=entry.x, seed=1)
+    store.attach_plan(entry.key, plan)
+    u, v = 3, 97
+    delta = GraphDelta.make(add=([u], [v], [0.9]))
+    report = apply_delta(store, entry.key, delta)
+    expect = tuple(np.unique(plan.owner_of(np.array([u, v]))).tolist())
+    assert report.plan_shards_touched == expect
+    # plan survives the delta; planned_matrix tracks the repaired matrix
+    assert entry.plan is plan
+    pm = np.asarray(entry.planned_matrix())
+    assert pm.shape[0] == plan.n_pad
+
+
+def test_delta_without_plan_reports_empty(store_entry):
+    from repro.graphs.structs import GraphDelta
+    from repro.service import apply_delta
+
+    store, entry = store_entry
+    report = apply_delta(store, entry.key, GraphDelta.make(add=([1], [2], [0.5])))
+    assert report.plan_shards_touched == ()
+
+
+# ---------------------------------------------------------------------------
+# ROADMAP cleanups that ride along
+# ---------------------------------------------------------------------------
+
+
+def test_build_banks_hoists_edge_operands(monkeypatch):
+    """num_banks > 1 must run the O(m) model preprocessing exactly once."""
+    import repro.service.store as store_mod
+
+    calls = {"n": 0}
+    real = store_mod.edge_operands
+
+    def counting(g, cfg):
+        calls["n"] += 1
+        return real(g, cfg)
+
+    monkeypatch.setattr(store_mod, "edge_operands", counting)
+    g = rmat_graph(7, edge_factor=6, seed=4, setting="w1")
+    store = store_mod.SketchStore(num_banks=4)
+    entry = store.get_or_build(g, DiFuserConfig(num_registers=128, seed=1))
+    assert calls["n"] == 1
+    # and the build primed the serving cache: device_edges is free
+    entry.device_edges()
+    assert calls["n"] == 1
+
+
+def test_prime_edges_cache_tracks_version(store_entry):
+    _, entry = store_entry
+    edges = entry.device_edges()
+    assert entry.device_edges() is edges  # cached
+    entry.version += 1
+    assert entry.device_edges() is not edges  # recomputed on version bump
