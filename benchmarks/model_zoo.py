@@ -23,7 +23,8 @@ import json
 from benchmarks.common import emit, timed
 from repro.baselines import influence_score
 from repro.configs.difuser_workloads import PRESETS
-from repro.core.difuser import DiFuserConfig, build_sketch_matrix, find_seeds
+from repro.core.difuser import DiFuserConfig, build_sketch_matrix
+from repro.runtime import RunSpec, run as run_im
 from repro.launch.im import make_graph
 
 ZOO_PRESETS = tuple(name for name in PRESETS if name.startswith("zoo-"))
@@ -46,7 +47,9 @@ def main(scale: int | None = None, *, k: int | None = None,
         (_, build_iters, _), build_us = timed(build_sketch_matrix, g, cfg)
         emit(f"model_zoo.build.{wl.model}", build_us, f"{build_iters}sweeps")
 
-        res, seeds_us = timed(find_seeds, g, kk, cfg)
+        report, seeds_us = timed(
+            run_im, g, kk, RunSpec.from_config(cfg, backend="single"))
+        res = report.result
         emit(f"model_zoo.find_seeds.{wl.model}", seeds_us, f"k={kk}")
 
         oracle = influence_score(g, res.seeds, num_sims=num_sims,

@@ -30,15 +30,15 @@ from benchmarks.common import emit, timed
 from repro.core.difuser import DiFuserConfig
 from repro.core.sampling import make_x_vector
 from repro.graphs import rmat_graph
-from repro.partition import (build_partition_2d, find_seeds_ring_serial,
-                             plan_partition, sample_edge_sets)
+from repro.partition import (build_partition_2d, plan_partition,
+                             sample_edge_sets)
 from repro.partition.serial import _RingState
 
 STRATEGIES = ("block", "degree", "edge")
 
 
 def main(scale: int = 11, registers: int = 256, mu_v: int = 8, mu_s: int = 1,
-         k: int = 4, seed: int = 71) -> None:
+         k: int = 4, seed: int = 71, backend: str = "serial") -> None:
     g = rmat_graph(scale, edge_factor=8, a=0.65, b=0.15, c=0.15, seed=seed,
                    setting="w1", permute_ids=False).sorted_by_dst()
     x = make_x_vector(registers, seed=7)
@@ -82,8 +82,13 @@ def main(scale: int = 11, registers: int = 256, mu_v: int = 8, mu_s: int = 1,
              f"busiest_shard_edges={int(busiest)} "
              f"parallel_speedup_bound={mean * part.mu_v / max(busiest, 1):.2f}x")
 
-        res, _ = find_seeds_ring_serial(g, k, cfg, mu_v=mu_v, mu_s=mu_s,
-                                        plan=plan)
+        # the full Alg. 4 loop through the selected runtime backend (the
+        # seed-invariance-across-planners acceptance check rides on it)
+        from repro.runtime import RunSpec, run as run_im
+
+        spec = RunSpec.from_config(cfg, backend=backend, mu_v=mu_v, mu_s=mu_s,
+                                   partition=strat)
+        res = run_im(g, k, spec, plan=plan).result
         if seeds_ref is None:
             seeds_ref = res.seeds
         elif not np.array_equal(res.seeds, seeds_ref):
@@ -96,8 +101,18 @@ def main(scale: int = 11, registers: int = 256, mu_v: int = 8, mu_s: int = 1,
          f"pad_waste={part_g.stats().pad_waste_frac * 100:.1f}% "
          "(legacy one-b_max padding; compare partition.block.build)")
     emit("partition.seeds_identical", 0.0, f"{int(identical)} "
-         "(serial-ring Alg. 4 seed sets across planners)")
+         f"({backend}-backend Alg. 4 seed sets across planners)")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=11)
+    ap.add_argument("--registers", type=int, default=256)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--backend", default="serial",
+                    help="runtime backend the Alg. 4 invariance runs use "
+                         "(repro.runtime registry)")
+    a = ap.parse_args()
+    main(scale=a.scale, registers=a.registers, k=a.k, backend=a.backend)

@@ -18,11 +18,16 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (kernels_micro, model_zoo, partition_balance,
-                            roofline_report, service_throughput,
+                            roofline_report, runtime_bench, service_throughput,
                             table8_scaling, table9_comm,
                             table34_quality_speed, table567_fasst)
 
     jobs = {
+        "runtime": lambda: runtime_bench.main(
+            scale=9 if args.fast else 10,
+            registers=128 if args.fast else 256,
+            k=4 if args.fast else 8,
+            out_json="BENCH_runtime.json"),
         "partition": lambda: partition_balance.main(
             scale=9 if args.fast else 11,
             registers=128 if args.fast else 256,

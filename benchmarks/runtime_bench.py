@@ -1,0 +1,85 @@
+"""Runtime-backend throughput: seeds/sec per registered backend.
+
+Runs the identical (graph, sketch setting, k) workload through every
+backend the environment can execute (``repro.runtime.available_backends``),
+asserts the seed sets agree (the backend-invariance contract), and reports
+
+  * cold end-to-end time + seeds/sec per backend,
+  * the warm (store-resident) path per backend that can build banks,
+
+optionally dumping the numbers to ``BENCH_runtime.json`` so CI tracks the
+perf trajectory of each execution path (``benchmarks/run.py --fast`` does).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.graphs import rmat_graph
+
+
+def main(scale: int = 10, registers: int = 256, k: int = 8, seed: int = 5,
+         mu_v: int = 2, mu_s: int = 2, out_json: str = "") -> dict:
+    from repro.runtime import (InfluenceSession, RunSpec, available_backends,
+                               get_backend)
+
+    g = rmat_graph(scale, edge_factor=8, seed=seed, setting="w1")
+    base = RunSpec(num_registers=registers, seed=seed, mu_v=mu_v, mu_s=mu_s)
+    record: dict = {"graph": f"rmat:{scale}", "n": int(g.n),
+                    "m": int(g.m_real), "registers": registers, "k": k,
+                    "backends": {}}
+    seeds_ref = None
+    for name, (ok, why) in available_backends().items():
+        if not ok:
+            emit(f"runtime.{name}.cold", 0.0, f"skipped: {why}")
+            record["backends"][name] = {"available": False, "reason": why}
+            continue
+        spec = base.with_(backend=name)
+        ok, why = get_backend(name).supports(g, spec)
+        if not ok:
+            emit(f"runtime.{name}.cold", 0.0, f"skipped: {why}")
+            record["backends"][name] = {"available": False, "reason": why}
+            continue
+        sess = InfluenceSession(g, spec)
+        t0 = time.perf_counter()
+        res = sess.find_seeds(k)
+        cold_s = time.perf_counter() - t0
+        if seeds_ref is None:
+            seeds_ref = res.seeds
+        identical = bool(np.array_equal(res.seeds, seeds_ref))
+        emit(f"runtime.{name}.cold", cold_s * 1e6,
+             f"seeds_per_s={k / cold_s:.2f} identical={int(identical)}")
+        entry = sess.entry()          # bank build through this backend
+        t0 = time.perf_counter()
+        warm = sess.find_seeds_warm(k)
+        warm_s = time.perf_counter() - t0
+        emit(f"runtime.{name}.warm", warm_s * 1e6,
+             f"seeds_per_s={k / warm_s:.2f} build_s={entry.build_time_s:.3f}")
+        record["backends"][name] = {
+            "available": True, "cold_s": cold_s,
+            "seeds_per_s_cold": k / cold_s, "warm_s": warm_s,
+            "seeds_per_s_warm": k / warm_s,
+            "store_build_s": entry.build_time_s,
+            "seeds_identical": identical,
+        }
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(record, f, indent=1)
+        emit("runtime.json", 0.0, out_json)
+    return record
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--registers", type=int, default=256)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--out-json", default="BENCH_runtime.json")
+    args = ap.parse_args()
+    main(scale=args.scale, registers=args.registers, k=args.k,
+         out_json=args.out_json)

@@ -16,7 +16,8 @@ import time
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.difuser import DiFuserConfig, find_seeds
+from repro.core.difuser import DiFuserConfig
+from repro.runtime import RunSpec, run as run_im
 from repro.graphs import rmat_graph
 from repro.launch.serve_im import make_workload
 from repro.service import (InfluenceEngine, SketchStore, TopKSeeds,
@@ -30,7 +31,7 @@ def main(scale: int = 14, *, registers: int = 256, k: int = 10,
 
     # cold: what every query costs without the store (build + rounds)
     t0 = time.perf_counter()
-    cold = find_seeds(g, k, cfg)
+    cold = run_im(g, k, RunSpec.from_config(cfg, backend="single")).result
     cold_s = time.perf_counter() - t0
     emit(f"service.cold_find_seeds.n{g.n}", cold_s * 1e6, cold.propagate_iters)
 

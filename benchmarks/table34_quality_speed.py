@@ -10,7 +10,8 @@ from __future__ import annotations
 
 from benchmarks.common import SETTING_KEYS, SETTINGS, emit, timed
 from repro.baselines import influence_score, ris_find_seeds
-from repro.core.difuser import DiFuserConfig, find_seeds
+from repro.core.difuser import DiFuserConfig
+from repro.runtime import RunSpec, run as run_im
 from repro.graphs import rmat_graph
 
 
@@ -18,7 +19,9 @@ def main(scale: int = 10, k: int = 10, registers: int = 256) -> None:
     for setting in SETTINGS:
         g = rmat_graph(scale, edge_factor=8, seed=31, setting=SETTING_KEYS[setting])
         cfg = DiFuserConfig(num_registers=registers, seed=0)
-        res, dif_us = timed(find_seeds, g, k, cfg)
+        spec = RunSpec.from_config(cfg, backend="single")
+        report, dif_us = timed(run_im, g, k, spec)
+        res = report.result
         (ris_seeds, _), ris_us = timed(ris_find_seeds, g, k, num_rr_sets=3000)
         o_dif = influence_score(g, res.seeds, num_sims=100, rng_seed=77)
         o_ris = influence_score(g, ris_seeds, num_sims=100, rng_seed=77)

@@ -20,7 +20,7 @@ from repro.graphs import rmat_graph
 from repro.partition import build_partition_2d, plan_partition, sample_edge_sets
 
 
-def main(scale: int = 11, registers: int = 1024) -> None:
+def main(scale: int = 11, registers: int = 1024, backend: str = "auto") -> None:
     x = make_x_vector(registers, seed=8)
     for setting in SETTINGS:
         g = rmat_graph(scale, edge_factor=8, seed=51, setting=SETTING_KEYS[setting])
@@ -61,6 +61,29 @@ def main(scale: int = 11, registers: int = 1024) -> None:
              f"modeled_speedup={mean * mu_v / max(busiest, 1):.2f}x "
              f"edge_imb={stats.edge_imbalance:.2f} max_shard_edges={busiest}")
 
+    # ---- measured: the full Alg. 4 loop through the selected runtime
+    # backend (auto = mesh when jax + devices allow, else serial) — no
+    # hand-rolled mesh setup, the backend owns it
+    from repro.runtime import RunSpec, resolve_backend, run as run_im
+
+    k = 4
+    spec = RunSpec(num_registers=min(registers, 256), seed=8,
+                   backend=backend, mu_v=4, mu_s=2, partition="degree")
+    resolved = resolve_backend(spec, g2)
+    report = run_im(g2, k, spec)
+    emit(f"table8.backend.{resolved.name}", report.wall_s * 1e6,
+         f"seeds_per_s={k / max(report.wall_s, 1e-9):.2f} "
+         f"grid={spec.mu_v}x{spec.mu_s} (selected via --backend={backend})")
+
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=11)
+    ap.add_argument("--registers", type=int, default=1024)
+    ap.add_argument("--backend", default="auto",
+                    help="runtime backend for the measured Alg. 4 row "
+                         "(repro.runtime registry)")
+    a = ap.parse_args()
+    main(scale=a.scale, registers=a.registers, backend=a.backend)

@@ -25,7 +25,17 @@ from repro.utils.roofline import HBM_BW, ICI_BW
 SWEEPS_PER_ROUND = 6  # measured propagate+cascade fixpoint sweeps (rmat graphs)
 
 
-def main(scale: int = 11, registers: int = 1024, mu_v: int = 4, mu_s: int = 2) -> None:
+def main(scale: int = 11, registers: int = 1024, mu_v: int = 4, mu_s: int = 2,
+         backend: str = "serial") -> None:
+    # ``backend`` selects the runtime backend whose measured ring structure
+    # (one real bucketed sweep + its Partition2D) grounds the 2-D rows; the
+    # analytic model itself is backend-independent. Resolved (not just
+    # looked up) so "auto" works like the sibling benchmarks' flag.
+    from repro.runtime import RunSpec, resolve_backend
+
+    backend_name = resolve_backend(
+        RunSpec(num_registers=registers, backend=backend,
+                mu_v=mu_v, mu_s=mu_s)).name
     x = make_x_vector(registers, seed=9)
     for setting in SETTINGS:
         g = rmat_graph(scale, edge_factor=8, seed=61, setting=SETTING_KEYS[setting])
@@ -73,9 +83,19 @@ def main(scale: int = 11, registers: int = 1024, mu_v: int = 4, mu_s: int = 2) -
             emit(f"table9.ring2d.{strat}.{setting}", 0.0,
                  f"comm={frac2*100:.1f}% ring_B={ring*ICI_BW:.3g} "
                  f"edge_imb={stats.edge_imbalance:.2f} "
+                 f"backend={backend_name} "
                  f"(2-D mode trades ring traffic for n beyond HBM; "
                  f"planner shrinks the busiest-shard compute term)")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=11)
+    ap.add_argument("--registers", type=int, default=1024)
+    ap.add_argument("--backend", default="serial",
+                    help="runtime backend grounding the 2-D rows "
+                         "(repro.runtime registry)")
+    a = ap.parse_args()
+    main(scale=a.scale, registers=a.registers, backend=a.backend)

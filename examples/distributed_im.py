@@ -18,12 +18,10 @@ import time
 import numpy as np
 
 from repro.baselines import influence_score, ris_find_seeds
-from repro.core.difuser import DiFuserConfig, find_seeds
-from repro.core.distributed import DistributedConfig, find_seeds_distributed
 from repro.core.fasst import build_partition, duplication_histogram, max_shard_fraction
 from repro.core.sampling import make_x_vector
 from repro.graphs import rmat_graph
-from repro.launch.mesh import make_mesh
+from repro.runtime import RunSpec, run as run_im
 
 K, J = 20, 512
 graph = rmat_graph(12, edge_factor=8, seed=7, setting="u01")
@@ -37,18 +35,19 @@ for method in ("naive", "fasst"):
     print(f"{method:6s}: max-shard {max_shard_fraction(graph, part)*100:4.0f}% of edges; "
           f"exactly-1-shard {hist[1]*100:4.0f}%")
 
-# --- distributed run: 2-way vertex x 4-way sample-space mesh ---
-mesh = make_mesh((2, 4), ("data", "model"))
+# --- sharded run: 2-way vertex x 4-way sample-space grid; "auto" picks the
+# shard_map mesh when jax supports it, else the serial-ring twin ---
+spec = RunSpec(num_registers=J, seed=0, schedule="ring", mu_v=2, mu_s=4)
 t0 = time.time()
-dres, dpart = find_seeds_distributed(
-    graph, K, mesh, DistributedConfig(num_registers=J, seed=0, schedule="ring"))
+dreport = run_im(graph, K, spec)
+dres = dreport.result
 t_dist = time.time() - t0
-print(f"\ndistributed (2x4 mesh, ring): {t_dist:.1f}s "
+print(f"\nsharded (2x4 {dreport.backend}, ring): {t_dist:.1f}s "
       f"spread={dres.scores[-1]:.0f} rebuilds={int(dres.rebuilds.sum())}/{K}")
 
 # --- single-device reference: must agree bit-for-bit ---
 t0 = time.time()
-sres = find_seeds(graph, K, DiFuserConfig(num_registers=J, seed=0))
+sres = run_im(graph, K, spec.with_(backend="single")).result
 print(f"single-device:                {time.time()-t0:.1f}s "
       f"spread={sres.scores[-1]:.0f}")
 assert (sres.seeds == dres.seeds).all(), "distributed != single-device!"

@@ -12,7 +12,8 @@ import time
 
 import numpy as np
 
-from repro.core.difuser import DiFuserConfig, find_seeds
+from repro.core.difuser import DiFuserConfig
+from repro.runtime import RunSpec, run as run_im
 from repro.graphs import rmat_graph
 from repro.graphs.structs import GraphDelta
 from repro.launch.serve_im import make_workload
@@ -28,7 +29,7 @@ config = DiFuserConfig(num_registers=512, seed=0, model="wc")
 
 # --- cold baseline: one offline batch answer, full build every call -------
 t0 = time.perf_counter()
-cold = find_seeds(graph, k=10, config=config)
+cold = run_im(graph, 10, RunSpec.from_config(config)).result
 cold_s = time.perf_counter() - t0
 print(f"cold find_seeds:   {cold_s:.2f}s -> seeds {cold.seeds[:5].tolist()}...")
 

@@ -5,16 +5,17 @@
 import numpy as np
 
 from repro.baselines import influence_score
-from repro.core.difuser import DiFuserConfig, find_seeds
+from repro.runtime import InfluenceSession, RunSpec
 from repro.graphs import rmat_graph
 
 # a power-law graph standing in for a social network (n=1024, ~8k edges)
 graph = rmat_graph(10, edge_factor=8, seed=0, setting="w1")
 print(f"graph: n={graph.n:,} vertices, m={graph.m_real:,} edges")
 
-# DiFuseR with J=512 registers (one FM register per Monte-Carlo simulation)
-config = DiFuserConfig(num_registers=512, seed=0)
-result = find_seeds(graph, k=10, config=config)
+# DiFuseR with J=512 registers (one FM register per Monte-Carlo simulation);
+# backend="auto" resolves the execution strategy for this environment
+spec = RunSpec(num_registers=512, seed=0)
+result = InfluenceSession(graph, spec).find_seeds(10)
 
 print(f"seed set:          {result.seeds.tolist()}")
 print(f"estimated spread:  {result.scores[-1]:.1f} vertices")

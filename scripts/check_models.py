@@ -13,7 +13,8 @@ import sys
 
 import numpy as np
 
-from repro.core.difuser import DiFuserConfig, build_sketch_matrix, find_seeds
+from repro.core.difuser import DiFuserConfig, build_sketch_matrix
+from repro.runtime import RunSpec, run as run_im
 from repro.diffusion import available_models, resolve
 from repro.graphs import erdos_renyi_graph
 
@@ -33,7 +34,7 @@ def main() -> int:
             assert iters >= 1, iters
             # at least one register must carry signal (not all VISITED)
             assert int(np.asarray((m != -1).sum())) > 0
-            res = find_seeds(g, 2, cfg)
+            res = run_im(g, 2, RunSpec.from_config(cfg)).result
             assert len(set(res.seeds.tolist())) == 2
             assert np.isfinite(res.scores).all()
             print(f"check_models.{spec}: ok "

@@ -168,10 +168,11 @@ _seed_rounds_jit = partial(jax.jit, static_argnames=(
     "max_prop", "max_casc", "rebuild_threshold", "predicate"))(_seed_rounds)
 
 
-def find_seeds(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
-               x: Optional[np.ndarray] = None) -> InfluenceResult:
-    """Run DiFuseR on a single device. ``x`` overrides the random vector
-    (the distributed tests use this to pin identical sample spaces)."""
+def _find_seeds_single(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
+                       x: Optional[np.ndarray] = None) -> InfluenceResult:
+    """Single-device Alg. 4 driver (the ``single`` runtime backend's body).
+    ``x`` overrides the random vector (the distributed tests use this to pin
+    identical sample spaces)."""
     cfg = config or DiFuserConfig()
     g, x = normalize_inputs(g, cfg, x)
     src, dst, h, lo, thr = edge_operands(g, cfg)
@@ -186,6 +187,25 @@ def find_seeds(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
         seeds=np.asarray(seeds), est_gains=np.asarray(gains),
         scores=np.asarray(scores), rebuilds=np.asarray(rebuilds),
         propagate_iters=int(build_iters), x=np.asarray(x))
+
+
+def find_seeds(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
+               x: Optional[np.ndarray] = None) -> InfluenceResult:
+    """Deprecated entry point — prefer the unified runtime facade::
+
+        from repro.runtime import InfluenceSession, RunSpec
+        InfluenceSession(g, RunSpec.from_config(config)).find_seeds(k)
+
+    Kept as a thin shim through the ``single`` backend; results are
+    bit-identical to the historical direct call (golden-tested)."""
+    from repro.runtime import run, warn_deprecated
+
+    warn_deprecated("repro.core.difuser.find_seeds",
+                    "repro.runtime.InfluenceSession.find_seeds")
+    from repro.runtime.spec import RunSpec
+
+    spec = RunSpec.from_config(config, backend="single")
+    return run(g, k, spec, x=x).result
 
 
 def normalize_x(cfg: DiFuserConfig, x: Optional[np.ndarray]) -> np.ndarray:

@@ -273,13 +273,16 @@ class DistributedConfig(DiFuserConfig):
     pad_mode: str = "step"          # "step" | "global" bucket padding
 
 
-def find_seeds_distributed(g: Graph, k: int, mesh, config: Optional[DistributedConfig] = None,
-                           x: Optional[np.ndarray] = None):
-    """Run distributed DiFuseR on ``mesh``. Returns (InfluenceResult, Partition2D).
+def _find_seeds_distributed(g: Graph, k: int, mesh,
+                            config: Optional[DistributedConfig] = None,
+                            x: Optional[np.ndarray] = None, plan=None):
+    """shard_map Alg. 4 driver (the ``mesh`` runtime backend's body).
+    Returns (InfluenceResult, Partition2D).
 
     Seeds/estimates come back in original vertex ids for every
     ``cfg.partition`` strategy (the relabeling is un-permuted on device via
-    ``owned_ids``).
+    ``owned_ids``). ``plan`` overrides the ``cfg.partition``-derived
+    :class:`PartitionPlan` (results are plan-invariant either way).
     """
     from jax.sharding import PartitionSpec as P
 
@@ -294,9 +297,10 @@ def find_seeds_distributed(g: Graph, k: int, mesh, config: Optional[DistributedC
     # the bucket build — run it once
     sampled = sample_edge_sets(g, x, mu_s, seed=cfg.seed, model=cfg.model,
                                method=method)
-    plan = plan_partition(g, mu_v, mu_s=mu_s, strategy=cfg.partition,
-                          seed=cfg.seed, model=cfg.model, method=method,
-                          sampled=sampled)
+    if plan is None:
+        plan = plan_partition(g, mu_v, mu_s=mu_s, strategy=cfg.partition,
+                              seed=cfg.seed, model=cfg.model, method=method,
+                              sampled=sampled)
     part = build_partition_2d(g, x, mu_v, mu_s, seed=cfg.seed, method=method,
                               model=cfg.model, plan=plan, pad_mode=cfg.pad_mode,
                               sampled=sampled)
@@ -329,3 +333,182 @@ def find_seeds_distributed(g: Graph, k: int, mesh, config: Optional[DistributedC
         rebuilds=np.asarray(rebuilds), propagate_iters=int(build_iters),
         x=np.sort(x) if cfg.fasst else x)
     return res, part
+
+
+def find_seeds_distributed(g: Graph, k: int, mesh,
+                           config: Optional[DistributedConfig] = None,
+                           x: Optional[np.ndarray] = None):
+    """Deprecated entry point — prefer the unified runtime facade::
+
+        from repro.runtime import InfluenceSession, RunSpec
+        InfluenceSession(g, RunSpec.from_config(config), mesh=mesh).find_seeds(k)
+
+    Kept as a thin shim through the ``mesh`` backend; results are
+    bit-identical to the historical direct call (golden-tested). Returns
+    (InfluenceResult, Partition2D) like before."""
+    from repro.runtime import run, warn_deprecated
+    from repro.runtime.spec import RunSpec
+
+    warn_deprecated("repro.core.distributed.find_seeds_distributed",
+                    "repro.runtime.InfluenceSession.find_seeds")
+    spec = RunSpec.from_config(config or DistributedConfig(), backend="mesh")
+    report = run(g, k, spec, x=x, mesh=mesh)
+    return report.result, report.partition
+
+
+# ---------------------------------------------------------------------------
+# Build-only shard_map path (store banks on a mesh)
+# ---------------------------------------------------------------------------
+
+
+def _make_build_matrix_fn(part: Partition2D, *, vertex_axis: str,
+                          sim_axes: Sequence[str], max_prop: int, seed: int,
+                          schedule: str = "ring", local_sweeps: int = 0,
+                          predicate=None, reg_offset: int = 0):
+    """Returns the shard_map body running only Alg. 4 lines 3-6 (fill +
+    propagate-to-fixpoint) and handing back each shard's register block.
+
+    The sweep/fixpoint machinery mirrors ``_make_distributed_fn`` (its
+    device twin is the full loop); ``reg_offset`` offsets the register hash
+    slots so sample-space store banks concatenate bit-identically to one
+    monolithic build (same contract as ``ops.sketch_fill``).
+    """
+    mu_v = part.mu_v
+    j_loc, n_real = part.j_loc, part.n
+    pred = predicate if predicate is not None else fused_predicate
+
+    def ring_sweep(m_loc, bh, bw, br, bt, bl, x_loc):
+        acc = m_loc
+        if schedule == "allgather" and mu_v > 1:
+            blocks = jax.lax.all_gather(m_loc, vertex_axis)
+            me = jax.lax.axis_index(vertex_axis)
+            for kk in range(mu_v):
+                if bh[kk].shape[0] == 0:
+                    continue
+                owner = jax.lax.rem(me + kk, mu_v)
+                acc = _bucket_sweep_propagate(acc, blocks[owner], bh[kk], bw[kk],
+                                              br[kk], bt[kk], x_loc, bl[kk], pred)
+        else:
+            block = m_loc
+            for kk in range(mu_v):
+                if bh[kk].shape[0]:
+                    acc = _bucket_sweep_propagate(acc, block, bh[kk], bw[kk],
+                                                  br[kk], bt[kk], x_loc, bl[kk],
+                                                  pred)
+                if kk + 1 < mu_v:
+                    perm = [(i, (i - 1) % mu_v) for i in range(mu_v)]
+                    block = jax.lax.ppermute(block, vertex_axis, perm)
+        return jnp.where(m_loc == VISITED, m_loc, acc)
+
+    def local_sweep(m_loc, bh, bw, br, bt, bl, x_loc):
+        acc = m_loc
+        if bh[0].shape[0]:
+            acc = _bucket_sweep_propagate(acc, m_loc, bh[0], bw[0], br[0],
+                                          bt[0], x_loc, bl[0], pred)
+        return jnp.where(m_loc == VISITED, m_loc, acc)
+
+    def body(x_loc, owned, *bufs):
+        def grp(i):
+            return tuple(bufs[i * mu_v + kk][0, 0] for kk in range(mu_v))
+
+        ph, pw, pr, pt, pl = grp(0), grp(1), grp(2), grp(3), grp(4)
+        x_loc = x_loc[0]
+        owned = owned[0]
+        all_axes = (vertex_axis, *sim_axes)
+        si = jnp.int32(0)
+        mult = 1
+        for ax in reversed(sim_axes):
+            si = si + jax.lax.axis_index(ax) * mult
+            mult *= _axis_sizes[ax]
+        valid_row = owned < n_real
+        from repro.core.sampling import register_hash
+
+        j_ids = (jnp.arange(j_loc, dtype=jnp.uint32)[None, :]
+                 + (si * j_loc + reg_offset).astype(jnp.uint32))
+        fresh = jax.lax.clz(register_hash(owned.astype(jnp.uint32)[:, None],
+                                          j_ids, seed=seed))
+        m_loc = jnp.where(valid_row[:, None], fresh.astype(jnp.int8),
+                          jnp.int8(VISITED))
+
+        def cond(c):
+            return jnp.logical_and(c[1], c[2] < max_prop)
+
+        def loop_body(c):
+            m_cur, _, it = c
+            for _ in range(local_sweeps):
+                m_cur = local_sweep(m_cur, ph, pw, pr, pt, pl, x_loc)
+            m_new = ring_sweep(m_cur, ph, pw, pr, pt, pl, x_loc)
+            changed = jax.lax.psum(jnp.any(m_new != m_cur).astype(jnp.int32),
+                                   all_axes) > 0
+            return m_new, changed, it + 1
+
+        m_loc, _, iters = jax.lax.while_loop(
+            cond, loop_body, (m_loc, jnp.bool_(True), jnp.int32(0)))
+        return m_loc, iters
+
+    _axis_sizes: dict[str, int] = {}
+
+    def with_sizes(mesh):
+        for ax in (vertex_axis, *sim_axes):
+            _axis_sizes[ax] = mesh.shape[ax]
+        return body
+
+    return with_sizes
+
+
+def build_matrix_distributed(g: Graph, mesh,
+                             config: Optional[DistributedConfig] = None,
+                             x: Optional[np.ndarray] = None, *,
+                             reg_offset: int = 0, plan=None):
+    """Alg. 4 lines 3-6 under shard_map: fill + propagate-to-fixpoint on the
+    2-D partition, gathered back to the canonical layout.
+
+    Expects ``g`` dst-sorted and ``x`` canonical (sorted when FASST) — the
+    normalized inputs the store/backend layer already holds. Returns
+    ``(matrix int8[g.n_pad, len(x)], iters, Partition2D)`` where ``matrix``
+    rows are in original-id order (the plan's relabeling is un-permuted on
+    host), bit-identical to the single-device ``build_sketch_matrix``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    cfg = config or DistributedConfig()
+    mu_v = mesh.shape[cfg.vertex_axis]
+    mu_s = math.prod(mesh.shape[ax] for ax in cfg.sim_axes)
+    if x is None:
+        x = make_x_vector(cfg.num_registers, seed=cfg.seed)
+        if cfg.fasst:
+            x = np.sort(x)
+    x = np.asarray(x, dtype=np.uint32)
+    method = "fasst" if cfg.fasst else "naive"
+    sampled = sample_edge_sets(g, x, mu_s, seed=cfg.seed, model=cfg.model,
+                               method=method)
+    if plan is None:
+        plan = plan_partition(g, mu_v, mu_s=mu_s, strategy=cfg.partition,
+                              seed=cfg.seed, model=cfg.model, method=method,
+                              sampled=sampled)
+    part = build_partition_2d(g, x, mu_v, mu_s, seed=cfg.seed, method=method,
+                              model=cfg.model, plan=plan, pad_mode=cfg.pad_mode,
+                              sampled=sampled)
+    maker = _make_build_matrix_fn(
+        part, vertex_axis=cfg.vertex_axis, sim_axes=tuple(cfg.sim_axes),
+        max_prop=cfg.max_propagate_iters, seed=cfg.seed, schedule=cfg.schedule,
+        local_sweeps=cfg.local_sweeps,
+        predicate=resolve_model(cfg.model).predicate, reg_offset=reg_offset)
+    body = maker(mesh)
+
+    sim_spec = cfg.sim_axes if len(cfg.sim_axes) > 1 else cfg.sim_axes[0]
+    bucket_spec = P(cfg.vertex_axis, sim_spec, None)
+    in_specs = ((P(sim_spec, None), P(cfg.vertex_axis, None))
+                + (bucket_spec,) * (5 * part.mu_v))
+    out_specs = (P(cfg.vertex_axis, sim_spec), P())
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False))
+    args = [jnp.asarray(part.x_shards), jnp.asarray(part.owned_ids)]
+    for field in (part.p_h, part.p_w, part.p_r, part.p_t, part.p_l):
+        for step in field:
+            args.append(jnp.asarray(step))
+    m_planned, iters = fn(*args)
+    # un-permute planned rows back to original-id (canonical) order
+    m_canon = m_planned[jnp.asarray(part.plan.perm[: g.n_pad])]
+    return m_canon, int(iters), part

@@ -1,0 +1,64 @@
+"""Shared CLI surface of the IM launchers.
+
+``launch/im.py`` and ``launch/serve_im.py`` historically copy-pasted the
+``--graph/--setting/--model/--partition/--seed`` group and let the help
+strings drift apart; this module is the single copy. It also owns
+``make_graph`` (the graph-spec parser both drivers and the benchmarks use)
+and the ``--backend`` flag that selects a :mod:`repro.runtime` backend
+instead of hand-rolled mesh setup.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.graphs import barabasi_albert_graph, erdos_renyi_graph, rmat_graph
+from repro.graphs.io import load_snap_edgelist
+
+
+def make_graph(spec: str, setting: str, seed: int):
+    """Parse ``--graph`` specs: rmat:<scale> | rmat-skew:<scale> | er:<n> |
+    ba:<n> | snap:<path>."""
+    kind, _, arg = spec.partition(":")
+    if kind == "rmat":
+        return rmat_graph(int(arg), setting=setting, seed=seed)
+    if kind == "rmat-skew":
+        # heavier Kronecker tail + raw (unpermuted) ids: hubs cluster at low
+        # ids — the regime the partition planners exist for
+        return rmat_graph(int(arg), edge_factor=8, a=0.65, b=0.15, c=0.15,
+                          setting=setting, seed=seed, permute_ids=False)
+    if kind == "er":
+        return erdos_renyi_graph(int(arg), setting=setting, seed=seed)
+    if kind == "ba":
+        return barabasi_albert_graph(int(arg), setting=setting, seed=seed)
+    if kind == "snap":
+        return load_snap_edgelist(arg, setting=setting, seed=seed)
+    raise ValueError(spec)
+
+
+def add_common_im_args(ap: argparse.ArgumentParser, *,
+                       graph_default: str = "rmat:12",
+                       registers_default: int = 1024) -> argparse.ArgumentParser:
+    """The shared ``--graph/--setting/--model/--partition/--seed`` group
+    (plus ``--registers`` and ``--backend``) of every IM driver."""
+    grp = ap.add_argument_group("workload (shared IM driver surface)")
+    grp.add_argument("--graph", default=graph_default,
+                     help="rmat:<scale>|rmat-skew:<scale>|er:<n>|ba:<n>|snap:<path>")
+    grp.add_argument("--setting", default="0.1",
+                     help="0.005|0.01|0.1|N0.05|U0.1|wc (paper §5)")
+    grp.add_argument("--model", default="wc",
+                     help="diffusion model spec: wc|ic[:p]|lt|dic[:lambda] "
+                          "(repro.diffusion registry; wc = backward-"
+                          "compatible default)")
+    grp.add_argument("--partition", default="block",
+                     help="vertex-assignment strategy for the 2-D partition: "
+                          "block|degree|edge|random (repro.partition "
+                          "registry; seed sets are identical across "
+                          "strategies)")
+    grp.add_argument("--registers", type=int, default=registers_default)
+    grp.add_argument("--backend", default="auto",
+                     help="execution backend: auto|single|serial|mesh "
+                          "(repro.runtime registry; 'auto' picks mesh when "
+                          "jax + devices allow a sharded run, else serial, "
+                          "else single)")
+    grp.add_argument("--seed", type=int, default=0)
+    return ap

@@ -1,99 +1,78 @@
 """DiFuseR driver — the paper's workload end-to-end.
 
-    PYTHONPATH=src python -m repro.launch.im --graph rmat:14 --setting 0.1 \
+    PYTHONPATH=src python -m repro im --graph rmat:14 --setting 0.1 \
         --k 50 --registers 1024 --devices 8 --validate
 
---devices > 1 forks the process env with fake XLA devices? No — it expects
-the caller to export XLA_FLAGS=--xla_force_host_platform_device_count=N
-(or run on a real multi-device backend) and builds a (v, s) mesh over them.
+Execution is selected by ``--backend`` (repro.runtime registry):
+``auto`` resolves to the jitted single-device driver for an unsharded run,
+to the ``shard_map`` mesh runtime when ``--devices > 1`` and jax supports
+it (export XLA_FLAGS=--xla_force_host_platform_device_count=N for a host
+mesh), and to the serial-ring executor otherwise — all three return
+bit-identical seed sets.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import numpy as np
-
 from repro.baselines import influence_score, ris_find_seeds
-from repro.core.difuser import DiFuserConfig, find_seeds
-from repro.graphs import barabasi_albert_graph, erdos_renyi_graph, rmat_graph
-from repro.graphs.io import load_snap_edgelist
-
-
-def make_graph(spec: str, setting: str, seed: int):
-    kind, _, arg = spec.partition(":")
-    if kind == "rmat":
-        return rmat_graph(int(arg), setting=setting, seed=seed)
-    if kind == "rmat-skew":
-        # heavier Kronecker tail + raw (unpermuted) ids: hubs cluster at low
-        # ids — the regime the partition planners exist for
-        return rmat_graph(int(arg), edge_factor=8, a=0.65, b=0.15, c=0.15,
-                          setting=setting, seed=seed, permute_ids=False)
-    if kind == "er":
-        return erdos_renyi_graph(int(arg), setting=setting, seed=seed)
-    if kind == "ba":
-        return barabasi_albert_graph(int(arg), setting=setting, seed=seed)
-    if kind == "snap":
-        return load_snap_edgelist(arg, setting=setting, seed=seed)
-    raise ValueError(spec)
+from repro.launch.common import add_common_im_args, make_graph  # noqa: F401
+# make_graph is re-exported: serve_im and the benchmarks import it from here
 
 
 def run(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--graph", default="rmat:12", help="rmat:<scale>|er:<n>|ba:<n>|snap:<path>")
-    ap.add_argument("--setting", default="0.1",
-                    help="0.005|0.01|0.1|N0.05|U0.1|wc (paper §5)")
-    ap.add_argument("--model", default="wc",
-                    help="diffusion model spec: wc|ic[:p]|lt|dic[:lambda] "
-                         "(repro.diffusion registry)")
+    add_common_im_args(ap)
     ap.add_argument("--k", type=int, default=50)
-    ap.add_argument("--registers", type=int, default=1024)
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--schedule", default="ring", choices=["ring", "allgather"])
-    ap.add_argument("--partition", default="block",
-                    help="vertex-assignment strategy for the 2-D partition: "
-                         "block|degree|edge|random (repro.partition registry; "
-                         "seed sets are identical across strategies)")
     ap.add_argument("--mu-v", type=int, default=0,
                     help="vertex shards of the (data, model) mesh "
                          "(0 = historical default: 2 when --devices is even)")
     ap.add_argument("--no-fasst", action="store_true")
     ap.add_argument("--validate", action="store_true", help="score seeds with the MC oracle")
     ap.add_argument("--ris", action="store_true", help="also run the RIS/IMM baseline")
-    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    from repro.runtime import RunSpec, run as run_im
 
     g = make_graph(args.graph, args.setting, args.seed)
     print(f"graph n={g.n:,} m={g.m_real:,}")
     out = {}
 
-    t0 = time.time()
+    # shard grid: --devices keeps its historical meaning (mesh size); an
+    # explicit sharded backend without --devices gets the 2x2 test grid
     if args.devices > 1:
-        import jax
+        mu_v = args.mu_v if args.mu_v > 0 else (2 if args.devices % 2 == 0 else 1)
+        if args.devices % mu_v != 0:
+            raise SystemExit(f"--devices {args.devices} not divisible by mu_v={mu_v}")
+        mu_s = args.devices // mu_v
+    elif args.backend in ("serial", "mesh"):
+        mu_v = args.mu_v if args.mu_v > 0 else 2
+        mu_s = 2
+    else:
+        mu_v = mu_s = 1
 
-        from repro.core.distributed import DistributedConfig, find_seeds_distributed
-        from repro.launch.mesh import make_im_mesh
+    spec = RunSpec(
+        num_registers=args.registers, seed=args.seed, model=args.model,
+        sort_x=not args.no_fasst, fasst=not args.no_fasst,
+        backend=args.backend, mu_v=mu_v, mu_s=mu_s,
+        partition=args.partition, schedule=args.schedule)
 
-        ndev = len(jax.devices())
-        if ndev < args.devices:
-            raise SystemExit(
-                f"need {args.devices} devices, found {ndev}: export "
-                f"XLA_FLAGS=--xla_force_host_platform_device_count={args.devices}")
-        mesh = make_im_mesh(args.devices, mu_v=args.mu_v)
-        cfg = DistributedConfig(num_registers=args.registers, seed=args.seed,
-                                schedule=args.schedule, fasst=not args.no_fasst,
-                                model=args.model, partition=args.partition)
-        res, part = find_seeds_distributed(g, args.k, mesh, cfg)
+    t0 = time.time()
+    report = run_im(g, args.k, spec)
+    res = report.result
+    out["backend"] = report.backend
+    if report.partition is not None:
+        part = report.partition
         out["max_shard_edges"] = int(part.edge_counts.max())
         stats = part.stats()
         out["edge_imbalance"] = stats.edge_imbalance
-        print(f"partition: {stats.describe()}")
+        print(f"backend={report.backend} partition: {stats.describe()}")
     else:
-        cfg = DiFuserConfig(num_registers=args.registers, seed=args.seed,
-                            sort_x=not args.no_fasst, model=args.model)
-        res = find_seeds(g, args.k, cfg)
+        print(f"backend={report.backend}")
         if args.partition != "block":
-            # no mesh on one device, but the planner's cost model still
+            # no shard grid requested, but the planner's cost model still
             # answers "how would this graph shard" — print it for free
             from repro.partition import plan_partition
 

@@ -1,12 +1,14 @@
 """Influence serving driver: one sketch build amortized over a query stream.
 
-    PYTHONPATH=src python -m repro.launch.serve_im --graph rmat:12 \
+    PYTHONPATH=src python -m repro serve --graph rmat:12 \
         --registers 512 --queries 1000 --topk 10
 
-Builds the SketchStore index once (the cold cost), then pushes a mixed
-workload of TopKSeeds / SpreadEstimate / MarginalGain / CoverageProbe
-requests through the batched InfluenceEngine and reports qps, p50/p99, and
-the amortized per-query latency against the cold ``find_seeds`` cost.
+Builds the SketchStore index once (the cold cost) through the ``--backend``
+of choice (repro.runtime — any registered backend can build the banks),
+then pushes a mixed workload of TopKSeeds / SpreadEstimate / MarginalGain /
+CoverageProbe requests through the batched InfluenceEngine and reports qps,
+p50/p99, and the amortized per-query latency against the cold
+``find_seeds`` cost.
 """
 from __future__ import annotations
 
@@ -15,8 +17,7 @@ import time
 
 import numpy as np
 
-from repro.core.difuser import DiFuserConfig, find_seeds
-from repro.launch.im import make_graph
+from repro.launch.common import add_common_im_args, make_graph
 from repro.service import (CoverageProbe, InfluenceEngine, MarginalGain,
                            SketchStore, SpreadEstimate, TopKSeeds,
                            summarize_latencies)
@@ -45,48 +46,48 @@ def make_workload(n: int, num_queries: int, *, k: int, seed: int,
 
 def run(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--graph", default="rmat:12",
-                    help="rmat:<scale>|er:<n>|ba:<n>|snap:<path>")
-    ap.add_argument("--setting", default="0.1")
-    ap.add_argument("--model", default="wc",
-                    help="diffusion model spec: wc|ic[:p]|lt|dic[:lambda] "
-                         "(wc = backward-compatible default; store keys "
-                         "include the model id)")
-    ap.add_argument("--registers", type=int, default=512)
+    add_common_im_args(ap, registers_default=512)
     ap.add_argument("--banks", type=int, default=1)
-    ap.add_argument("--partition", default="",
-                    help="attach a vertex-shard plan to the index: "
-                         "block|degree|edge|random (empty = none); the store "
-                         "then serves planned_matrix() row blocks and deltas "
-                         "report the plan shards they touch")
+    ap.add_argument("--attach-plan", action="store_true",
+                    help="attach a vertex-shard plan of the --partition "
+                         "strategy to the index even for the default "
+                         "'block' (a non-block --partition always attaches "
+                         "one); the store then serves planned_matrix() row "
+                         "blocks and deltas report the plan shards they "
+                         "touch")
     ap.add_argument("--plan-shards", type=int, default=8,
                     help="vertex shards of the attached plan")
     ap.add_argument("--queries", type=int, default=1000)
     ap.add_argument("--topk", type=int, default=10, help="k for TopKSeeds queries")
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--save", default="", help="persist the index npz here")
-    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    from repro.runtime import InfluenceSession, RunSpec
 
     g = make_graph(args.graph, args.setting, args.seed)
     print(f"graph n={g.n:,} m={g.m_real:,} model={args.model}")
-    cfg = DiFuserConfig(num_registers=args.registers, seed=args.seed,
-                        model=args.model)
+    spec = RunSpec(num_registers=args.registers, seed=args.seed,
+                   model=args.model, backend=args.backend,
+                   partition=args.partition if args.partition else "block")
+    sess = InfluenceSession(g, spec,
+                            store=SketchStore(num_banks=args.banks, spec=spec))
 
     # cold reference: what every query would pay without the store
     t0 = time.perf_counter()
-    cold = find_seeds(g, args.topk, cfg)
+    cold = sess.find_seeds(args.topk)
     cold_s = time.perf_counter() - t0
-    print(f"cold find_seeds: {cold_s:.2f}s (build fixpoint {cold.propagate_iters} sweeps)")
+    print(f"cold find_seeds [{sess.last_report.backend}]: {cold_s:.2f}s "
+          f"(build fixpoint {cold.propagate_iters} sweeps)")
 
-    store = SketchStore(num_banks=args.banks)
+    store = sess.store
     engine = InfluenceEngine(store, max_batch=args.max_batch)
-    key = engine.register(g, cfg)
+    key = engine.register(g, spec.difuser_config())
     entry = store.entry(key)
     print(f"store build: {entry.build_time_s:.2f}s "
           f"({entry.num_banks} bank(s), {entry.build_iters} sweeps)")
 
-    if args.partition:
+    if args.attach_plan or args.partition != "block":
         from repro.partition import plan_partition
 
         plan = plan_partition(entry.graph, args.plan_shards, mu_s=1,
@@ -121,7 +122,8 @@ def run(argv=None) -> dict:
     # clobber the wall-clock qps reported here and printed above
     return {**stats, "cold_s": cold_s, "build_s": entry.build_time_s,
             "wall_s": wall_s, "qps": args.queries / wall_s,
-            "amortized_s": amortized, "speedup": speedup}
+            "amortized_s": amortized, "speedup": speedup,
+            "backend": sess.last_report.backend}
 
 
 if __name__ == "__main__":

@@ -48,24 +48,52 @@ def _est_from_sums_np(stat, cnt, total_regs: int, estimator: str):
 
 
 class _RingState:
-    """Shard-grid register state + the bucket sweeps over it."""
+    """Shard-grid register state + the bucket sweeps over it.
 
-    def __init__(self, part: Partition2D, g: Graph, cfg: DiFuserConfig):
+    ``reg_offset`` offsets the register hash slots (sample-space store
+    banks — same contract as ``ops.sketch_fill``); ``matrix`` warm-starts
+    the state from an existing ``(mu_v, mu_s, n_loc, j_loc)`` grid instead
+    of a fresh fill (the shard-restricted delta-repair path).
+    """
+
+    def __init__(self, part: Partition2D, g: Graph, cfg: DiFuserConfig, *,
+                 reg_offset: int = 0, matrix: Optional[np.ndarray] = None):
         self.part, self.cfg = part, cfg
         self.pred = resolve_model(cfg.model).predicate
         self.owned = part.owned_ids                        # (mu_v, n_loc)
         self.valid = self.owned < g.n                      # padding rows
         mu_v, mu_s = part.mu_v, part.mu_s
         n_loc, j_loc = part.n_loc, part.j_loc
-        fresh = np.empty((mu_v, mu_s, n_loc, j_loc), dtype=np.int8)
+        grid_shape = (mu_v, mu_s, n_loc, j_loc)
+        if matrix is not None:
+            # warm start (shard-restricted repair): the O(n_pad * J) fresh
+            # hash fill is only needed by refill(), which the repair path
+            # never calls — skip the dominant cost of a small repair
+            assert matrix.shape == grid_shape, (matrix.shape, grid_shape)
+            self.fresh = None
+            self.m = np.array(matrix, dtype=np.int8)
+            return
+        fresh = np.empty(grid_shape, dtype=np.int8)
         for v in range(mu_v):
             for s in range(mu_s):
-                j_ids = np.arange(j_loc, dtype=np.uint32) + np.uint32(s * j_loc)
+                j_ids = (np.arange(j_loc, dtype=np.uint32)
+                         + np.uint32(s * j_loc + reg_offset))
                 h = register_hash(self.owned[v].astype(np.uint32)[:, None],
                                   j_ids[None, :], seed=cfg.seed)
                 fresh[v, s] = clz32(h).astype(np.int8)
         self.fresh = fresh
-        self.m = np.where(self.valid[:, None, :, None], fresh, np.int8(VISITED))
+        self.m = np.where(self.valid[:, None, :, None], fresh,
+                          np.int8(VISITED))
+
+    def canonical_matrix(self, n_pad: int) -> np.ndarray:
+        """Un-permute the shard grid to the canonical single-device layout:
+        ``int8[n_pad, mu_s * j_loc]`` with rows in original-id order and
+        columns in canonical x order (sim-shard blocks are contiguous chunks
+        of the sorted sample vector)."""
+        p = self.part
+        planned = self.m.transpose(0, 2, 1, 3).reshape(
+            p.mu_v * p.n_loc, p.mu_s * p.j_loc)
+        return planned[p.plan.perm[:n_pad]]
 
     def _mask(self, kk: int, v: int, s: int, bufs):
         bh = bufs[0][kk][v, s]
@@ -90,6 +118,43 @@ class _RingState:
                     np.maximum.at(acc, bw, contrib)
                 out[v, s] = np.where(self.m[v, s] == VISITED, self.m[v, s], acc)
         changed = bool((out != self.m).any())
+        self.m = out
+        return changed
+
+    def sweep_propagate_restricted(self, read_dirty) -> set:
+        """One propagate sweep over only the buckets whose *read* block
+        belongs to a shard in ``read_dirty``; returns the set of vertex
+        shards whose rows changed (the next sweep's dirty set).
+
+        This is the frontier-restricted repair sweep: starting from a sound
+        lower bound of the fixpoint (e.g. the pre-delta matrix), changes can
+        only originate at rows the dirtied shards feed, so sweeping buckets
+        that read from clean shards is provably a no-op and skipped.
+        """
+        p = self.part
+        bufs = (p.p_h, p.p_w, p.p_r, p.p_t, p.p_l)
+        read_dirty = set(int(v) for v in read_dirty)
+        out = self.m.copy()
+        for v in range(p.mu_v):
+            for s in range(p.mu_s):
+                acc = self.m[v, s].copy()
+                hit = False
+                for kk in range(p.mu_v):
+                    if (v + kk) % p.mu_v not in read_dirty:
+                        continue
+                    if bufs[0][kk].shape[-1] == 0:
+                        continue
+                    hit = True
+                    bw, br = bufs[1][kk][v, s], bufs[2][kk][v, s]
+                    block = self.m[(v + kk) % p.mu_v, s]
+                    contrib = np.where(self._mask(kk, v, s, bufs), block[br],
+                                       np.int8(VISITED))
+                    np.maximum.at(acc, bw, contrib)
+                if hit:
+                    out[v, s] = np.where(self.m[v, s] == VISITED,
+                                         self.m[v, s], acc)
+        changed = {v for v in range(p.mu_v)
+                   if (out[v] != self.m[v]).any()}
         self.m = out
         return changed
 
@@ -149,20 +214,21 @@ class _RingState:
         return int(((self.m == VISITED) & self.valid[:, None, :, None]).sum())
 
     def refill(self) -> None:
+        assert self.fresh is not None, "refill() needs a cold-started state"
         self.m = np.where(self.m == VISITED, self.m, self.fresh)
 
 
-def find_seeds_ring_serial(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
-                           *, mu_v: int = 2, mu_s: int = 2,
-                           strategy: str = "block",
-                           plan: Optional[PartitionPlan] = None,
-                           x: Optional[np.ndarray] = None,
-                           pad_mode: str = "step"):
-    """Run the full ring-scheduled Alg. 4 loop serially.
+def _find_seeds_ring_serial(g: Graph, k: int,
+                            config: Optional[DiFuserConfig] = None,
+                            *, mu_v: int = 2, mu_s: int = 2,
+                            strategy: str = "block",
+                            plan: Optional[PartitionPlan] = None,
+                            x: Optional[np.ndarray] = None,
+                            pad_mode: str = "step"):
+    """Serial-ring Alg. 4 driver (the ``serial`` runtime backend's body).
 
-    Returns ``(InfluenceResult, Partition2D)`` like
-    ``find_seeds_distributed``; seeds are original vertex ids regardless of
-    the plan's relabeling.
+    Returns ``(InfluenceResult, Partition2D)`` like the distributed path;
+    seeds are original vertex ids regardless of the plan's relabeling.
     """
     cfg = config or DiFuserConfig()
     g = g.sorted_by_dst()
@@ -200,3 +266,98 @@ def find_seeds_ring_serial(g: Graph, k: int, config: Optional[DiFuserConfig] = N
                           rebuilds=rebuilds, propagate_iters=build_iters,
                           x=np.sort(x))
     return res, part
+
+
+def find_seeds_ring_serial(g: Graph, k: int,
+                           config: Optional[DiFuserConfig] = None,
+                           *, mu_v: int = 2, mu_s: int = 2,
+                           strategy: str = "block",
+                           plan: Optional[PartitionPlan] = None,
+                           x: Optional[np.ndarray] = None,
+                           pad_mode: str = "step"):
+    """Deprecated entry point — prefer the unified runtime facade::
+
+        from repro.runtime import InfluenceSession, RunSpec
+        spec = RunSpec(backend="serial", mu_v=2, mu_s=2, partition=strategy)
+        InfluenceSession(g, spec).find_seeds(k)
+
+    Kept as a thin shim through the ``serial`` backend; results are
+    bit-identical to the historical direct call (golden-tested). Returns
+    (InfluenceResult, Partition2D) like before."""
+    from repro.runtime import run, warn_deprecated
+    from repro.runtime.spec import RunSpec
+
+    warn_deprecated("repro.partition.serial.find_seeds_ring_serial",
+                    "repro.runtime.InfluenceSession.find_seeds")
+    spec = RunSpec.from_config(config, backend="serial", mu_v=mu_v, mu_s=mu_s,
+                               partition=strategy, pad_mode=pad_mode)
+    report = run(g, k, spec, x=x, plan=plan)
+    return report.result, report.partition
+
+
+def build_matrix_ring_serial(g: Graph, config: Optional[DiFuserConfig] = None,
+                             x: Optional[np.ndarray] = None, *,
+                             mu_v: int = 2, mu_s: int = 1,
+                             strategy: str = "block",
+                             plan: Optional[PartitionPlan] = None,
+                             pad_mode: str = "step", reg_offset: int = 0):
+    """Alg. 4 lines 3-6 on the serial ring: fill + propagate-to-fixpoint.
+
+    Expects ``g`` dst-sorted and ``x`` canonical (sorted). Returns
+    ``(matrix int8[g.n_pad, len(x)], iters, Partition2D)`` with ``matrix``
+    in the canonical single-device layout — bit-identical to
+    ``core.difuser.build_sketch_matrix`` with the same ``reg_offset``, which
+    is what lets :class:`~repro.service.store.SketchStore` banks build
+    through the ``serial`` backend.
+    """
+    cfg = config or DiFuserConfig()
+    if x is None:
+        x = make_x_vector(cfg.num_registers, seed=cfg.seed)
+        x = np.sort(np.asarray(x, dtype=np.uint32))
+    x = np.asarray(x, dtype=np.uint32)
+    sampled = sample_edge_sets(g, x, mu_s, seed=cfg.seed, model=cfg.model)
+    if plan is None:
+        plan = plan_partition(g, mu_v, mu_s=mu_s, strategy=strategy,
+                              seed=cfg.seed, model=cfg.model, sampled=sampled)
+    part = build_partition_2d(g, x, mu_v, mu_s, seed=cfg.seed, model=cfg.model,
+                              plan=plan, pad_mode=pad_mode, sampled=sampled)
+    st = _RingState(part, g, cfg, reg_offset=reg_offset)
+    iters = st.fixpoint(st.sweep_propagate, cfg.max_propagate_iters)
+    return st.canonical_matrix(g.n_pad), iters, part
+
+
+def repair_plan_shards(g: Graph, config: DiFuserConfig, x: np.ndarray,
+                       planned_m: np.ndarray, plan: PartitionPlan,
+                       touched, *, pad_mode: str = "step"):
+    """Shard-restricted monotone insertion repair on the serial ring.
+
+    ``planned_m`` is the pre-delta register matrix in the plan's row order
+    (``StoreEntry.planned_matrix()``), a sound lower bound of the post-delta
+    fixpoint; ``g`` is the *new* (post-delta, dst-sorted) graph; ``touched``
+    is ``DeltaReport.plan_shards_touched`` — the vertex shards the delta's
+    endpoints land in.
+
+    Sweeps start restricted to buckets reading from the touched shards and
+    widen only as changes actually spread (``sweep_propagate_restricted``),
+    so a localized delta re-propagates exactly its ``plan_shards_touched``
+    and leaves every other shard's buckets un-swept. Returns
+    ``(planned_matrix, sweeps, shards_swept)`` with the matrix bit-identical
+    to a full rebuild (max-merge fixpoints are unique above a sound lower
+    bound — the same soundness argument as service.delta's repair).
+    """
+    x = np.asarray(x, dtype=np.uint32)
+    part = build_partition_2d(g, x, plan.mu_v, plan.mu_s, seed=config.seed,
+                              model=config.model, plan=plan, pad_mode=pad_mode)
+    grid = np.asarray(planned_m, dtype=np.int8).reshape(
+        plan.mu_v, plan.n_loc, part.mu_s, part.j_loc).transpose(0, 2, 1, 3)
+    st = _RingState(part, g, config, matrix=grid)
+    dirty = set(int(v) for v in touched)
+    sweeps = 0
+    swept: set = set()
+    while dirty and sweeps < config.max_propagate_iters:
+        swept |= dirty
+        dirty = st.sweep_propagate_restricted(dirty)
+        sweeps += 1
+    planned = st.m.transpose(0, 2, 1, 3).reshape(
+        plan.mu_v * plan.n_loc, part.mu_s * part.j_loc)
+    return planned, sweeps, tuple(sorted(swept))

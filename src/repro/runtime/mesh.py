@@ -1,0 +1,111 @@
+"""``mesh`` backend — the shard_map 2-D distributed runtime.
+
+Wraps ``core/distributed.py``. Needs a jax new enough to ship
+``jax.sharding.AxisType`` (the ``JAX_HAS_AXIS_TYPE`` guard) and at least
+``mu_v * mu_s`` devices; otherwise ``supports`` says no and ``auto``
+resolution falls back to the ``serial`` backend, which executes the exact
+same ring schedule (results are bit-identical by contract).
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.graphs.structs import Graph
+from repro.runtime.base import (Backend, BackendCapabilities, RunReport,
+                                register_backend)
+from repro.runtime.spec import RunSpec
+from repro.utils.jax_compat import JAX_HAS_AXIS_TYPE
+
+
+class MeshBackend(Backend):
+    name = "mesh"
+
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(
+            name=self.name, distributed=True, needs_mesh=True,
+            shard_repair=False,
+            description="shard_map 2-D runtime (ring/allgather schedules)")
+
+    def available(self):
+        if not JAX_HAS_AXIS_TYPE:
+            return False, ("jax.sharding.AxisType missing (old jax) — the "
+                           "shard_map runtime needs a newer jax; the 'serial' "
+                           "backend runs the same schedule meanwhile")
+        return True, ""
+
+    def supports(self, g, spec: RunSpec):
+        ok, why = self.available()
+        if not ok:
+            return ok, why
+        import jax
+
+        ndev = len(jax.devices())
+        if ndev < spec.num_shards:
+            return False, (f"spec asks for {spec.num_shards} shards but only "
+                           f"{ndev} device(s) are visible (export XLA_FLAGS="
+                           f"--xla_force_host_platform_device_count="
+                           f"{spec.num_shards} for a host-device mesh)")
+        if spec.num_registers % max(spec.mu_s, 1) != 0:
+            return False, (f"num_registers={spec.num_registers} not divisible "
+                           f"by mu_s={spec.mu_s}")
+        return True, ""
+
+    def _mesh_for(self, spec: RunSpec, mesh=None):
+        if mesh is not None:
+            return mesh
+        from repro.launch.mesh import make_mesh
+
+        mu_v, mu_s = max(spec.mu_v, 1), max(spec.mu_s, 1)
+        if len(spec.sim_axes) != 1:
+            raise ValueError("pass an explicit mesh for multi-sim-axis specs")
+        return make_mesh((mu_v, mu_s), (spec.vertex_axis, spec.sim_axes[0]))
+
+    def _check(self, g, spec: RunSpec):
+        ok, why = self.supports(g, spec)
+        if not ok:
+            from repro.runtime.base import BackendUnavailable
+
+            raise BackendUnavailable(f"mesh backend: {why}")
+
+    def find_seeds(self, g: Graph, k: int, spec: RunSpec, *,
+                   x: Optional[np.ndarray] = None, mesh=None,
+                   plan=None) -> RunReport:
+        self._check(g, spec)
+        from repro.core import distributed as _dist
+
+        mesh = self._mesh_for(spec, mesh)
+        cfg = spec.distributed_config()
+        t0 = time.perf_counter()
+        res, part = _dist._find_seeds_distributed(g, k, mesh, cfg, x, plan=plan)
+        return RunReport(result=res, backend=self.name, spec=spec,
+                         partition=part, wall_s=time.perf_counter() - t0)
+
+    def build_matrix(self, g: Graph, spec: RunSpec, x: np.ndarray, *,
+                     reg_offset: int = 0, normalized: bool = False,
+                     edges=None, mesh=None):
+        # ``edges`` (single-backend device operands) is not applicable: the
+        # shard_map build re-buckets per x-slice on host.
+        self._check(g, spec)
+        from repro.core import distributed as _dist
+
+        cfg = spec.distributed_config()
+        if not normalized:
+            from repro.core.difuser import normalize_inputs
+
+            g, x = normalize_inputs(g, spec.difuser_config(), x)
+        mesh = self._mesh_for(spec, mesh)
+        mu_s = math.prod(mesh.shape[ax] for ax in cfg.sim_axes)
+        if x is not None and np.asarray(x).shape[0] % mu_s != 0:
+            raise ValueError(
+                f"bank of {np.asarray(x).shape[0]} registers not divisible "
+                f"by the mesh's {mu_s} sim shard(s)")
+        m, iters, _ = _dist.build_matrix_distributed(
+            g, mesh, cfg, x, reg_offset=reg_offset)
+        return m, iters
+
+
+register_backend(MeshBackend())

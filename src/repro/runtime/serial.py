@@ -1,0 +1,110 @@
+"""``serial`` backend — the 2-D ring schedule executed serially on one host.
+
+Wraps :mod:`repro.partition.serial`. Always available (pure numpy, no mesh,
+no jax version requirements), which makes it the ``auto`` fallback whenever
+a sharded spec is requested on an environment whose jax cannot run
+``shard_map`` — and the only backend that can repair *individual plan
+shards* of a store matrix (``repair_plan_shards``), the hook behind
+``DeltaReport.plan_shards_touched``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.graphs.structs import Graph
+from repro.partition import serial as _serial
+from repro.runtime.base import (Backend, BackendCapabilities, RunReport,
+                                register_backend)
+from repro.runtime.spec import RunSpec
+
+
+def _grid(spec: RunSpec) -> tuple[int, int]:
+    """The (mu_v, mu_s) shard grid a spec asks the serial ring to emulate."""
+    return max(spec.mu_v, 1), max(spec.mu_s, 1)
+
+
+class SerialRingBackend(Backend):
+    name = "serial"
+
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(
+            name=self.name, distributed=True, needs_mesh=False,
+            shard_repair=True,
+            description="serial-ring executor (numpy twin of the shard_map "
+                        "body; always available)")
+
+    def supports(self, g, spec: RunSpec):
+        mu_v, mu_s = _grid(spec)
+        if spec.num_registers % mu_s != 0:
+            return False, (f"num_registers={spec.num_registers} not divisible "
+                           f"by mu_s={mu_s}")
+        return True, ""
+
+    def find_seeds(self, g: Graph, k: int, spec: RunSpec, *,
+                   x: Optional[np.ndarray] = None, mesh=None,
+                   plan=None) -> RunReport:
+        mu_v, mu_s = _grid(spec)
+        t0 = time.perf_counter()
+        res, part = _serial._find_seeds_ring_serial(
+            g, k, spec.difuser_config(), mu_v=mu_v, mu_s=mu_s,
+            strategy=spec.partition, plan=plan, x=x, pad_mode=spec.pad_mode)
+        return RunReport(result=res, backend=self.name, spec=spec,
+                         partition=part, wall_s=time.perf_counter() - t0)
+
+    def build_matrix(self, g: Graph, spec: RunSpec, x: np.ndarray, *,
+                     reg_offset: int = 0, normalized: bool = False,
+                     edges=None, mesh=None):
+        # ``edges`` (single-backend device operands) and ``mesh`` are not
+        # applicable: the ring build re-buckets per x-slice on host.
+        cfg = spec.difuser_config()
+        if not normalized:
+            from repro.core.difuser import normalize_inputs
+
+            g, x = normalize_inputs(g, cfg, x)
+        mu_v, mu_s = _grid(spec)
+        if x is not None and np.asarray(x).shape[0] % mu_s != 0:
+            mu_s = 1   # bank slice narrower than the sim grid: keep it whole
+        m, iters, _ = _serial.build_matrix_ring_serial(
+            g, cfg, x, mu_v=mu_v, mu_s=mu_s, strategy=spec.partition,
+            pad_mode=spec.pad_mode, reg_offset=reg_offset)
+        return m, iters
+
+    def fixpoint(self, m, g: Graph, spec: RunSpec, x: np.ndarray, *,
+                 edges=None):
+        """Canonical-layout fixpoint via a full (unrestricted) ring repair:
+        every shard starts dirty."""
+        mu_v, mu_s = _grid(spec)
+        x = np.asarray(x, dtype=np.uint32)
+        if x.shape[0] % mu_s != 0:
+            mu_s = 1
+        cfg = spec.difuser_config()
+        from repro.partition import plan_partition
+
+        plan = plan_partition(g, mu_v, mu_s=mu_s, strategy=spec.partition,
+                              seed=cfg.seed, model=cfg.model)
+        n_extra = plan.n_pad - g.n_pad
+        m_np = np.asarray(m, dtype=np.int8)
+        if n_extra > 0:
+            m_np = np.concatenate(
+                [m_np, np.full((n_extra, m_np.shape[1]), np.int8(-1))], axis=0)
+        planned = m_np[plan.inv_perm]
+        planned, iters, _ = _serial.repair_plan_shards(
+            g, cfg, x, planned, plan, range(mu_v), pad_mode=spec.pad_mode)
+        return planned[plan.perm[: g.n_pad]], iters
+
+    # -- shard-level repair (the mesh-sharded store-bank hook) -------------
+
+    def repair_plan_shards(self, g: Graph, spec: RunSpec, x: np.ndarray,
+                           planned_m: np.ndarray, plan, touched):
+        """Delegates to :func:`repro.partition.serial.repair_plan_shards`:
+        frontier-restricted ring sweeps that re-propagate only the shards a
+        delta dirtied (plus any shard the repair actually spreads into)."""
+        return _serial.repair_plan_shards(
+            g, spec.difuser_config(), x, planned_m, plan, touched,
+            pad_mode=spec.pad_mode)
+
+
+register_backend(SerialRingBackend())

@@ -1,0 +1,110 @@
+"""InfluenceSession — one facade over the whole influence pipeline.
+
+Before the runtime layer, a caller stitched four APIs by hand:
+``core.difuser.find_seeds`` (cold), ``core.difuser.find_seeds_warm`` +
+``build_sketch_matrix`` (amortized), ``SketchStore.get_or_build`` (resident
+index), and one of three executors. A session binds a graph to a
+:class:`RunSpec` once and exposes all of it behind a single object; the
+backend is resolved lazily from the spec (``"auto"`` rules in
+:mod:`repro.runtime.base`) so the same session code runs unchanged from one
+device to a mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import difuser as _difuser
+from repro.core.difuser import InfluenceResult
+from repro.graphs.structs import Graph, GraphDelta
+from repro.runtime.base import Backend, RunReport, resolve_backend
+from repro.runtime.spec import RunSpec
+from repro.service.delta import DeltaReport, apply_delta
+from repro.service.store import SketchStore, StoreEntry
+
+
+class InfluenceSession:
+    """A graph bound to one execution contract (:class:`RunSpec`).
+
+    ``store`` shares a :class:`SketchStore` across sessions (multi-graph
+    tenancy); by default the session owns a private one, built through the
+    session's backend. ``mesh`` pins an explicit jax mesh for the ``mesh``
+    backend's ``find_seeds``/``build_sketch_matrix`` (otherwise one is
+    constructed from ``spec.mu_v x spec.mu_s``); store-path builds
+    (``entry()``) always construct their own mesh from the spec, since a
+    shared store outlives any one session's device placement.
+    """
+
+    def __init__(self, graph: Graph, spec: Optional[RunSpec] = None, *,
+                 store: Optional[SketchStore] = None, mesh=None,
+                 num_banks: int = 1):
+        self.graph = graph
+        self.spec = spec if spec is not None else RunSpec()
+        self.mesh = mesh
+        self.store = (store if store is not None
+                      else SketchStore(num_banks=num_banks, spec=self.spec))
+        self.last_report: Optional[RunReport] = None
+
+    @property
+    def backend(self) -> Backend:
+        """The backend the spec resolves to *right now* (auto rules are
+        environment-dependent: device count, jax version)."""
+        return resolve_backend(self.spec, self.graph, mesh=self.mesh)
+
+    # ------------------------------------------------------------------
+    # Cold path
+    # ------------------------------------------------------------------
+
+    def find_seeds(self, k: int, *, x: Optional[np.ndarray] = None,
+                   plan=None) -> InfluenceResult:
+        """Full Alg. 4 through the resolved backend. Execution provenance
+        (backend name, built partition, wall time) lands in
+        ``self.last_report``."""
+        report = self.backend.find_seeds(self.graph, k, self.spec, x=x,
+                                         mesh=self.mesh, plan=plan)
+        self.last_report = report
+        return report.result
+
+    def build_sketch_matrix(self, *, x: Optional[np.ndarray] = None,
+                            reg_offset: int = 0):
+        """Alg. 4 lines 3-6 through the resolved backend: returns
+        ``(matrix, iters, x_used)`` in the canonical layout (identical
+        across backends)."""
+        cfg = self.spec.difuser_config()
+        g, x_norm = _difuser.normalize_inputs(self.graph, cfg, x)
+        m, iters = self.backend.build_matrix(g, self.spec, x_norm,
+                                             reg_offset=reg_offset,
+                                             normalized=True, mesh=self.mesh)
+        return m, iters, x_norm
+
+    # ------------------------------------------------------------------
+    # Warm / resident path (the store half of the facade)
+    # ------------------------------------------------------------------
+
+    def entry(self, *, x: Optional[np.ndarray] = None) -> StoreEntry:
+        """The resident store entry for this session's (graph, setting),
+        built through the session's backend on first demand."""
+        return self.store.get_or_build(self.graph, self.spec.difuser_config(),
+                                       x)
+
+    def find_seeds_warm(self, k: int, *,
+                        x: Optional[np.ndarray] = None) -> InfluenceResult:
+        """K seed rounds from the resident matrix (cold build amortized
+        away). The round program is the identical trace as the cold path's,
+        so warm seeds are byte-identical to ``find_seeds`` regardless of
+        which backend built the matrix."""
+        e = self.entry(x=x)
+        return _difuser.find_seeds_warm(e.graph, k, e.cfg, matrix=e.matrix,
+                                        x=e.x, edges=e.device_edges())
+
+    def apply_delta(self, delta: GraphDelta, *,
+                    staleness_threshold: float = 0.1) -> DeltaReport:
+        """Apply a graph delta to the resident entry through the session's
+        backend: on a shard-repair-capable backend (``serial``) with a plan
+        attached, insertions re-propagate only the plan shards the delta
+        dirtied."""
+        e = self.entry()
+        return apply_delta(self.store, e.key, delta,
+                           staleness_threshold=staleness_threshold,
+                           backend=self.backend)

@@ -1,0 +1,81 @@
+"""``single`` backend — the jitted single-device Alg. 4 driver.
+
+Wraps the one-program ``lax.scan``/``while_loop`` pipeline in
+``core/difuser.py``. Always available; the reference numerics every other
+backend must match bit-for-bit.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import difuser as _difuser
+from repro.core.cascade import cascade_from_seed
+from repro.core.simulate import propagate_to_fixpoint
+from repro.graphs.structs import Graph
+from repro.runtime.base import (Backend, BackendCapabilities, RunReport,
+                                register_backend)
+from repro.runtime.spec import RunSpec
+
+
+class SingleDeviceBackend(Backend):
+    name = "single"
+
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(
+            name=self.name, distributed=False, needs_mesh=False,
+            shard_repair=False,
+            description="jitted single-device Alg. 4 (reference numerics)")
+
+    def supports(self, g, spec: RunSpec):
+        # a >1 shard grid is an execution *hint* the single backend simply
+        # ignores (results are shard-invariant by contract), so it supports
+        # every spec — auto resolution just won't pick it for sharded specs
+        return True, ""
+
+    def find_seeds(self, g: Graph, k: int, spec: RunSpec, *,
+                   x: Optional[np.ndarray] = None, mesh=None,
+                   plan=None) -> RunReport:
+        t0 = time.perf_counter()
+        res = _difuser._find_seeds_single(g, k, spec.difuser_config(), x)
+        return RunReport(result=res, backend=self.name, spec=spec,
+                         partition=None, wall_s=time.perf_counter() - t0)
+
+    def build_matrix(self, g: Graph, spec: RunSpec, x: np.ndarray, *,
+                     reg_offset: int = 0, normalized: bool = False,
+                     edges=None, mesh=None):
+        m, iters, _ = _difuser.build_sketch_matrix(
+            g, spec.difuser_config(), x, reg_offset=reg_offset,
+            normalized=normalized, edges=edges)
+        return m, iters
+
+    def fixpoint(self, m, g: Graph, spec: RunSpec, x: np.ndarray, *,
+                 edges=None):
+        cfg = spec.difuser_config()
+        if edges is None:
+            edges = _difuser.edge_operands(g, cfg)
+        src, dst, h, lo, thr = edges
+        return propagate_to_fixpoint(
+            m, src, dst, thr, jnp.asarray(np.asarray(x, np.uint32)), h, lo,
+            seed=cfg.seed, impl=cfg.impl, edge_chunk=cfg.edge_chunk,
+            max_iters=cfg.max_propagate_iters,
+            predicate=_difuser.resolve_model(cfg.model).predicate)
+
+    def cascade(self, m, seed_vertex: int, g: Graph, spec: RunSpec,
+                x: np.ndarray, *, edges=None):
+        cfg = spec.difuser_config()
+        if edges is None:
+            edges = _difuser.edge_operands(g, cfg)
+        src, dst, h, lo, thr = edges
+        return cascade_from_seed(
+            m, seed_vertex, src, dst, thr,
+            jnp.asarray(np.asarray(x, np.uint32)), h, lo, seed=cfg.seed,
+            impl=cfg.impl, edge_chunk=cfg.edge_chunk,
+            max_iters=cfg.max_cascade_iters,
+            predicate=_difuser.resolve_model(cfg.model).predicate)
+
+
+register_backend(SingleDeviceBackend())

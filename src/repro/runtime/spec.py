@@ -1,0 +1,112 @@
+"""RunSpec — one flat description of *what* to run and *how* to execute it.
+
+Before the runtime layer existed, the knobs of a DiFuseR run were scattered
+across four call sites: ``DiFuserConfig`` (sketch + diffusion setting),
+``DistributedConfig`` (mesh axes, ring schedule, partition strategy, bucket
+padding), the mesh shape handed to ``find_seeds_distributed``, and the
+``mu_v/mu_s/strategy`` keywords of the serial-ring executor. ``RunSpec``
+consolidates all of them plus the *backend selection* itself, so a caller
+states the full execution contract once and every backend reads the subset
+it understands.
+
+Only the sketch/diffusion fields affect *results* — the execution fields
+(``backend``, ``mu_v``, ``mu_s``, ``partition``, ``pad_mode``, ``schedule``,
+``local_sweeps``) are pure strategy: seed sets are bit-identical across
+every backend and every partition plan (tests/test_runtime.py holds the
+line). That invariance is what makes ``backend="auto"`` safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.difuser import DiFuserConfig
+from repro.diffusion.constants import DEFAULT_MODEL
+
+#: DiFuserConfig field names (the result-affecting half of a RunSpec).
+_SKETCH_FIELDS = ("num_registers", "seed", "estimator", "rebuild_threshold",
+                  "max_propagate_iters", "max_cascade_iters", "edge_chunk",
+                  "impl", "sort_x", "model")
+
+#: DistributedConfig-only field names shared with RunSpec.
+_EXEC_FIELDS = ("vertex_axis", "sim_axes", "schedule", "fasst",
+                "local_sweeps", "partition", "pad_mode")
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """The unified execution contract of one influence-maximization run."""
+
+    # ---- sketch / diffusion setting (mirrors DiFuserConfig) ----
+    num_registers: int = 1024
+    seed: int = 0
+    estimator: str = "hll"             # "hll" | "fm_mean"
+    rebuild_threshold: float = 0.01
+    max_propagate_iters: int = 64
+    max_cascade_iters: int = 64
+    edge_chunk: int = 2048
+    impl: str = "ref"                  # "ref" | "pallas"
+    sort_x: bool = True                # FASST sample ordering
+    model: str = DEFAULT_MODEL         # diffusion model spec (repro.diffusion)
+
+    # ---- execution strategy ----
+    backend: str = "auto"              # "auto" | registered backend name
+    mu_v: int = 1                      # vertex shards (2-D partition rows)
+    mu_s: int = 1                      # sample-space shards
+    partition: str = "block"           # vertex-assignment strategy
+    pad_mode: str = "step"             # "step" | "global" bucket padding
+    schedule: str = "ring"             # "ring" | "allgather" (mesh backend)
+    fasst: bool = True                 # FASST sample partition (vs naive)
+    local_sweeps: int = 0              # comm-free sweeps per ring exchange
+    vertex_axis: str = "data"          # mesh axis names (mesh backend)
+    sim_axes: Tuple[str, ...] = ("model",)
+
+    @property
+    def num_shards(self) -> int:
+        """Total shard-grid size the spec asks for (1 = unsharded)."""
+        return max(self.mu_v, 1) * max(self.mu_s, 1)
+
+    # ------------------------------------------------------------------
+    # Conversions to/from the legacy config objects
+    # ------------------------------------------------------------------
+
+    def difuser_config(self) -> DiFuserConfig:
+        """The DiFuserConfig equivalent (single-device / store / queries)."""
+        return DiFuserConfig(**{f: getattr(self, f) for f in _SKETCH_FIELDS})
+
+    def distributed_config(self):
+        """The DistributedConfig equivalent (mesh backend)."""
+        from repro.core.distributed import DistributedConfig
+
+        kw = {f: getattr(self, f) for f in _SKETCH_FIELDS}
+        kw.update({f: getattr(self, f) for f in _EXEC_FIELDS})
+        kw["sim_axes"] = tuple(self.sim_axes)
+        return DistributedConfig(**kw)
+
+    @classmethod
+    def from_config(cls, config: Optional[DiFuserConfig] = None,
+                    base: Optional["RunSpec"] = None, **overrides) -> "RunSpec":
+        """Lift a legacy config into a RunSpec.
+
+        ``config`` supplies the sketch/diffusion fields (and, when it is a
+        ``DistributedConfig``, the execution fields it carries); ``base``
+        supplies defaults for everything the config does not name (backend,
+        mu_v/mu_s, ...); ``overrides`` win over both. ``config=None`` means
+        paper defaults — exactly ``DiFuserConfig()``.
+        """
+        spec = base if base is not None else cls()
+        kw: dict = {}
+        if config is not None:
+            for f in _SKETCH_FIELDS:
+                kw[f] = getattr(config, f)
+            for f in _EXEC_FIELDS:   # only DistributedConfig has these
+                if hasattr(config, f):
+                    kw[f] = getattr(config, f)
+            if "sim_axes" in kw:
+                kw["sim_axes"] = tuple(kw["sim_axes"])
+        kw.update(overrides)
+        return dataclasses.replace(spec, **kw)
+
+    def with_(self, **overrides) -> "RunSpec":
+        """Functional update (``dataclasses.replace`` spelled as a method)."""
+        return dataclasses.replace(self, **overrides)

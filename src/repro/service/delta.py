@@ -47,6 +47,11 @@ class DeltaReport:
     # endpoints land in (empty without a plan) — the invalidation set a
     # mesh-sharded store bank repairs instead of the whole matrix
     plan_shards_touched: tuple = ()
+    # when the repair ran through a shard_repair backend: the shards whose
+    # buckets were actually re-swept (== plan_shards_touched for a localized
+    # delta; grows only if the repair genuinely spread further)
+    shards_swept: tuple = ()
+    repair_backend: str = "single"   # backend the insertion repair ran on
 
 
 def _touched_edge_arrays(new_g: Graph, delta: GraphDelta, ep,
@@ -76,7 +81,8 @@ def _touched_edge_arrays(new_g: Graph, delta: GraphDelta, ep,
 
 
 def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
-                *, staleness_threshold: float = 0.1) -> DeltaReport:
+                *, staleness_threshold: float = 0.1,
+                backend=None) -> DeltaReport:
     """Apply edge insertions/removals to a resident entry, repairing or
     invalidating its matrix as cheaply as soundness allows.
 
@@ -89,6 +95,13 @@ def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
     stale. Deliberately distinct from ``DiFuserConfig.rebuild_threshold``
     (Alg. 4's per-round score epsilon) — the two knobs govern different
     mechanisms.
+
+    ``backend``: a :mod:`repro.runtime` backend (name or instance). When it
+    reports ``shard_repair`` capability and the entry has a partition plan
+    attached, the insertion repair runs shard-restricted: only the plan
+    shards the delta dirtied (``plan_shards_touched``) are re-propagated,
+    with results bit-identical to a full rebuild. ``None`` keeps the
+    historical per-bank single-device repair.
     """
     t0 = time.perf_counter()
     entry = store.entry(key)
@@ -119,6 +132,8 @@ def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
     rebuilt = False
     repair_sweeps = 0
     banks_touched = 0
+    shards_swept: tuple = ()
+    repair_backend = "single"
     # lt-style models: any in-edge add/remove re-normalizes the destination's
     # interval partition, so the old fixpoint is neither a lower bound
     # (insertions) nor a sound over-approximation (removals) — both fast
@@ -135,7 +150,14 @@ def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
 
     if delta.num_added and not rebuilt:
         if context_free:
-            repair_sweeps, banks_touched = _repair_insertions(entry, new_g, delta)
+            shard_backend = _shard_repair_backend(backend)
+            if shard_backend is not None and entry.plan is not None and plan_shards:
+                repair_sweeps, banks_touched, shards_swept = \
+                    _repair_insertions_sharded(entry, new_g, plan_shards,
+                                               shard_backend)
+                repair_backend = shard_backend.name
+            else:
+                repair_sweeps, banks_touched = _repair_insertions(entry, new_g, delta)
         else:
             store.rebuild(key)
             rebuilt = True
@@ -146,7 +168,46 @@ def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
                        staleness_frac=entry.staleness_frac,
                        repair_sweeps=repair_sweeps, banks_touched=banks_touched,
                        time_s=time.perf_counter() - t0,
-                       plan_shards_touched=plan_shards)
+                       plan_shards_touched=plan_shards,
+                       shards_swept=shards_swept,
+                       repair_backend=repair_backend)
+
+
+def _shard_repair_backend(backend):
+    """Resolve ``backend`` (name | Backend | None) to a shard_repair-capable
+    backend instance, or None when the historical repair should run."""
+    if backend is None:
+        return None
+    from repro.runtime import get_backend
+
+    b = get_backend(backend)
+    return b if b.capabilities().shard_repair else None
+
+
+def _repair_insertions_sharded(entry: StoreEntry, new_g: Graph,
+                               touched: tuple, backend):
+    """Shard-restricted monotone insertion repair through a shard_repair
+    backend (``serial``): the plan-order matrix is repaired starting from
+    exactly the shards the delta dirtied, and sweeps widen only where
+    changes actually spread. Bit-identical to a full rebuild (and to the
+    per-bank single-device repair) by the same monotone-lattice argument.
+    """
+    from repro.runtime.spec import RunSpec
+
+    planned_old = np.asarray(entry.planned_matrix())
+    spec = RunSpec.from_config(entry.cfg)
+    planned_new, sweeps, swept = backend.repair_plan_shards(
+        new_g, spec, entry.x, planned_old, entry.plan, touched)
+    canon = planned_new[entry.plan.perm[: new_g.n_pad]]
+    old_banks = list(entry.banks)
+    entry.set_matrix(jnp.asarray(canon))
+    banks_touched = sum(
+        1 for b_old, b_new in zip(old_banks, entry.banks)
+        if bool(jnp.any(b_old != b_new)))
+    # warm the serving cache for the post-delta graph (same contract as the
+    # single-device repair path)
+    entry.prime_edges_cache()
+    return sweeps, banks_touched, swept
 
 
 def _repair_insertions(entry: StoreEntry, new_g: Graph, delta: GraphDelta):

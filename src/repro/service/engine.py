@@ -67,9 +67,17 @@ class QueryResult:
 class InfluenceEngine:
     """Accepts a stream of mixed queries and executes them in padded batches."""
 
-    def __init__(self, store: Optional[SketchStore] = None, max_batch: int = 256):
+    def __init__(self, store: Optional[SketchStore] = None, max_batch: int = 256,
+                 backend=None, spec=None):
         # explicit None check: an empty SketchStore is falsy (__len__ == 0)
-        self.store = SketchStore() if store is None else store
+        # backend/spec (repro.runtime) configure the engine-owned store's
+        # build strategy; an explicitly passed store keeps its own
+        if store is None:
+            store = SketchStore(backend=backend, spec=spec)
+        elif backend is not None or spec is not None:
+            raise ValueError("pass backend/spec to the SketchStore itself "
+                             "when sharing an explicit store")
+        self.store = store
         self.max_batch = max_batch
         self._pending: list[Request] = []
         # (store key, k) -> (state token, InfluenceResult); keying tokens in

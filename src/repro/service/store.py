@@ -24,8 +24,8 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.difuser import (DiFuserConfig, build_sketch_matrix,
-                                edge_operands, normalize_inputs, normalize_x)
+from repro.core.difuser import (DiFuserConfig, edge_operands,
+                                normalize_inputs, normalize_x)
 from repro.diffusion import DEFAULT_MODEL
 from repro.graphs.structs import Graph
 from repro.partition import PartitionPlan
@@ -149,12 +149,34 @@ class StoreEntry:
 
 
 class SketchStore:
-    """Build-once, query-many cache of propagated sketch matrices."""
+    """Build-once, query-many cache of propagated sketch matrices.
 
-    def __init__(self, num_banks: int = 1):
+    ``backend`` / ``spec`` select the execution strategy of the builds
+    (:mod:`repro.runtime`): any registered backend can build the banks,
+    because every backend returns the canonical matrix layout. The defaults
+    reproduce the historical behaviour exactly (``"auto"`` on an unsharded
+    spec resolves to the ``single`` backend). ``spec`` also carries the
+    shard-grid knobs (``mu_v``/``partition``/``pad_mode``) a sharded build
+    needs.
+    """
+
+    def __init__(self, num_banks: int = 1, backend=None, spec=None):
         assert num_banks >= 1
         self.num_banks = num_banks
+        self.backend = backend   # str | runtime.Backend | None (spec's choice)
+        self.spec = spec         # Optional[runtime.RunSpec] execution knobs
         self._entries: dict[StoreKey, StoreEntry] = {}
+
+    def _resolve_backend(self, cfg: DiFuserConfig):
+        """The (backend, RunSpec) pair builds run through: ``cfg`` supplies
+        the result-affecting sketch fields, ``self.spec`` the execution
+        strategy, ``self.backend`` an explicit override."""
+        from repro.runtime import RunSpec, get_backend, resolve_backend
+
+        spec = RunSpec.from_config(cfg, base=self.spec)
+        if self.backend is not None:
+            return get_backend(self.backend), spec
+        return resolve_backend(spec), spec
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -210,16 +232,18 @@ class SketchStore:
         assert j % self.num_banks == 0, (j, self.num_banks)
         j_loc = j // self.num_banks
         t0 = time.perf_counter()
+        backend, spec = self._resolve_backend(cfg)
         # hoisted out of the bank loop: the O(m) model preprocessing +
         # device upload is identical for every bank (banks split the sample
-        # space, not the graph)
+        # space, not the graph); sharded backends ignore the hint but the
+        # serving cache (device_edges) wants the operands regardless
         edges = edge_operands(g_norm, cfg)
         banks, iters = [], 0
         for b in range(self.num_banks):
-            m_b, it_b, _ = build_sketch_matrix(
-                g_norm, cfg, x_norm[b * j_loc:(b + 1) * j_loc],
+            m_b, it_b = backend.build_matrix(
+                g_norm, spec, x_norm[b * j_loc:(b + 1) * j_loc],
                 reg_offset=b * j_loc, normalized=True, edges=edges)
-            banks.append(m_b)
+            banks.append(jnp.asarray(m_b))
             iters = max(iters, it_b)
         for m_b in banks:
             m_b.block_until_ready()
