@@ -21,10 +21,9 @@ bench-smoke:
 	python scripts/check_models.py
 	python -m benchmarks.run --fast
 
-# lint's import check covers the IM-only API surface (repro.IM_API_MODULES
-# and friends). The quarantined LM seed-template modules (repro.models/
-# train/serve, per-arch configs) are syntax-compiled but deliberately NOT
-# imported: they are legacy-test ballast, not API.
+# lint's import check covers the IM API surface (repro.IM_API_MODULES and
+# friends). The LM seed-template modules were deleted in PR 5; everything
+# left is importable API.
 lint:
 	python -m compileall -q src tests benchmarks examples scripts
-	python -c "import importlib; [importlib.import_module(m) for m in ('repro', 'repro.runtime', 'repro.runtime.session', 'repro.core.difuser', 'repro.diffusion', 'repro.diffusion.models', 'repro.partition', 'repro.partition.serial', 'repro.service', 'repro.service.engine', 'repro.launch.common', 'repro.launch.serve_im', 'repro.__main__', 'benchmarks.model_zoo', 'benchmarks.partition_balance', 'benchmarks.runtime_bench')]; print('imports ok')"
+	python -c "import importlib; [importlib.import_module(m) for m in ('repro', 'repro.runtime', 'repro.runtime.session', 'repro.core.difuser', 'repro.diffusion', 'repro.diffusion.models', 'repro.partition', 'repro.partition.serial', 'repro.service', 'repro.service.engine', 'repro.configs', 'repro.launch.common', 'repro.launch.serve_im', 'repro.__main__', 'benchmarks.model_zoo', 'benchmarks.partition_balance', 'benchmarks.runtime_bench', 'benchmarks.trend')]; print('imports ok')"

@@ -1,12 +1,19 @@
 """Benchmark harness: one module per paper table + kernel micro + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--only tableX] [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--only tableX] [--fast] \
+        [--baseline-dir bench-baseline]
 
-Prints ``name,us_per_call,derived`` CSV rows (assignment contract).
+Prints ``name,us_per_call,derived`` CSV rows (assignment contract). With a
+baseline directory (``--baseline-dir`` or the ``BENCH_BASELINE_DIR`` env
+var — CI points it at the previous run's artifact), the fresh
+``BENCH_runtime.json`` / ``BENCH_service.json`` records are compared via
+:mod:`benchmarks.trend` and the process exits non-zero on a >20% seeds/sec
+or qps regression.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -15,6 +22,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--fast", action="store_true", help="smaller graphs (CI)")
+    ap.add_argument("--baseline-dir",
+                    default=os.environ.get("BENCH_BASELINE_DIR", ""),
+                    help="previous CI artifact dir with BENCH_*.json to "
+                         "trend against (empty: no gate)")
+    ap.add_argument("--regression-threshold", type=float, default=0.2)
     args = ap.parse_args()
 
     from benchmarks import (kernels_micro, model_zoo, partition_balance,
@@ -34,7 +46,9 @@ def main() -> None:
             k=2 if args.fast else 4),
         "service": lambda: service_throughput.main(
             scale=11 if args.fast else 14,
-            num_queries=50 if args.fast else 200),
+            num_queries=50 if args.fast else 200,
+            mu_v=4 if args.fast else 8,
+            out_json="BENCH_service.json"),
         "model_zoo": lambda: model_zoo.main(
             scale=9 if args.fast else None,          # None -> preset graphs
             k=8 if args.fast else None,
@@ -57,6 +71,17 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"{name}.ERROR,0,{type(e).__name__}: {e}", file=sys.stdout)
         print(f"{name}.total_s,{(time.time()-t0)*1e6:.0f},done")
+
+    if args.baseline_dir:
+        from benchmarks import trend
+
+        regressed = trend.compare(args.baseline_dir,
+                                  threshold=args.regression_threshold)
+        if regressed:
+            print(f"trend gate: {regressed} metric(s) regressed > "
+                  f"{args.regression_threshold:.0%} vs {args.baseline_dir}",
+                  file=sys.stderr)
+            sys.exit(1)
 
 
 if __name__ == "__main__":

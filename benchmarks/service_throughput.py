@@ -1,11 +1,22 @@
-"""Service throughput: cold-build vs warm-store serving on an RMAT graph.
+"""Service throughput: cold-build vs warm-store serving on an RMAT graph,
+host-order vs device-resident (shard-local) serving side by side.
 
-    PYTHONPATH=src python -m benchmarks.service_throughput [--scale 14]
+    PYTHONPATH=src python -m benchmarks.service_throughput [--scale 14] \
+        [--backend auto|host|mesh] [--mu-v 8]
 
 Emits the repo's standard ``name,us_per_call,derived`` CSV rows (the
 benchmarks/run.py schema) plus one ``service.json`` row whose derived field
-is the full JSON stats blob. The acceptance metric is ``service.speedup``:
-amortized per-query cost of the 2nd..Nth warm query vs repeated cold runs.
+is the full JSON stats blob. Two acceptance metrics:
+
+  * ``service.speedup`` — amortized per-query cost of the 2nd..Nth warm
+    query vs repeated cold runs (the PR 1 store claim);
+  * ``service.device_vs_host`` — amortized per-query cost of the
+    gather-to-host path vs shard-local serving off mesh-placed row blocks
+    (> 1 means device residency wins; needs a multi-device mesh, e.g.
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+``--out-json BENCH_service.json`` records both for the CI trend gate
+(``benchmarks/run.py --fast`` + ``benchmarks/trend.py``).
 """
 from __future__ import annotations
 
@@ -24,8 +35,38 @@ from repro.service import (InfluenceEngine, SketchStore, TopKSeeds,
                            summarize_latencies)
 
 
+def _serve_workload(engine, key, g, num_queries, k, seed):
+    """Push the standard mixed workload through the engine; returns
+    (wall_s, stats). Warms the jit caches with one TopKSeeds first and
+    clears the memo so the timed top-k queries execute for real."""
+    warm = engine(key, TopKSeeds(k)).value
+    engine.clear_topk_memo()
+    for q in make_workload(g.n, num_queries, k=k, seed=seed):
+        engine.submit(key, q)
+    t0 = time.perf_counter()
+    results = engine.run()
+    wall_s = time.perf_counter() - t0
+    return warm, wall_s, summarize_latencies(results)
+
+
+def _device_placement_ok(mu_v: int):
+    """(ok, reason) for shard-local serving on this host."""
+    from repro.utils.jax_compat import JAX_HAS_AXIS_TYPE
+
+    if not JAX_HAS_AXIS_TYPE:
+        return False, "jax.sharding.AxisType missing (old jax)"
+    import jax
+
+    if len(jax.devices()) < mu_v:
+        return False, (f"{mu_v} row blocks need {mu_v} devices, have "
+                       f"{len(jax.devices())} (export XLA_FLAGS="
+                       f"--xla_force_host_platform_device_count={mu_v})")
+    return True, ""
+
+
 def main(scale: int = 14, *, registers: int = 256, k: int = 10,
-         num_queries: int = 200, seed: int = 0) -> dict:
+         num_queries: int = 200, seed: int = 0, backend: str = "auto",
+         mu_v: int = 8, out_json: str = "") -> dict:
     g = rmat_graph(scale, edge_factor=8, seed=seed, setting="w1")
     cfg = DiFuserConfig(num_registers=registers, seed=seed)
 
@@ -43,33 +84,86 @@ def main(scale: int = 14, *, registers: int = 256, k: int = 10,
     emit(f"service.store_build.n{g.n}", build_s * 1e6,
          store.entry(key).build_iters)
 
-    # warm: the 1st query eats jit compiles; report 2nd..Nth amortized
-    warm = engine(key, TopKSeeds(k)).value
-    assert np.array_equal(warm.seeds, cold.seeds), "warm/cold seed mismatch"
-    # drop the memo this check just populated: the timed workload below must
-    # execute its top-k queries for real, not serve them as 0-cost cache hits
-    engine.clear_topk_memo()
+    # ---- host-order serving (the single/serial fallback path) ----
+    host_stats = device_stats = None
+    device_skip = ""
+    if backend != "mesh":
+        warm, host_wall, host_stats = _serve_workload(
+            engine, key, g, num_queries, k, seed + 7)
+        assert np.array_equal(warm.seeds, cold.seeds), "warm/cold seed mismatch"
+        host_amort = host_wall / num_queries
+        emit(f"service.warm_query.n{g.n}", host_amort * 1e6,
+             f"{host_stats['qps']:.0f}qps")
+        emit(f"service.p50.n{g.n}", host_stats["p50_ms"] * 1e3, "")
+        emit(f"service.p99.n{g.n}", host_stats["p99_ms"] * 1e3, "")
+        emit(f"service.speedup.n{g.n}", host_amort * 1e6,
+             f"{cold_s / host_amort:.1f}x")
+        host_stats = {**host_stats, "wall_s": host_wall,
+                      "amortized_s": host_amort,
+                      "qps": num_queries / host_wall,
+                      "speedup_vs_cold": cold_s / host_amort}
 
-    for q in make_workload(g.n, num_queries, k=k, seed=seed + 7):
-        engine.submit(key, q)
-    t0 = time.perf_counter()
-    results = engine.run()
-    wall_s = time.perf_counter() - t0
-    stats = summarize_latencies(results)
+    # ---- device-resident serving (shard-local reductions on the mesh) ----
+    if backend in ("auto", "mesh"):
+        ok, why = _device_placement_ok(mu_v)
+        if not ok:
+            device_skip = why
+            emit(f"service.device.n{g.n}", 0.0, f"skipped: {why}")
+            if backend == "mesh":
+                raise SystemExit(f"--backend mesh: {why}")
+        else:
+            from repro.launch.mesh import make_serving_mesh
+            from repro.partition import plan_partition
 
-    amortized_s = wall_s / num_queries
-    speedup = cold_s / amortized_s
-    emit(f"service.warm_query.n{g.n}", amortized_s * 1e6,
-         f"{stats['qps']:.0f}qps")
-    emit(f"service.p50.n{g.n}", stats["p50_ms"] * 1e3, "")
-    emit(f"service.p99.n{g.n}", stats["p99_ms"] * 1e3, "")
-    emit(f"service.speedup.n{g.n}", amortized_s * 1e6, f"{speedup:.1f}x")
+            entry = store.entry(key)
+            t0 = time.perf_counter()
+            plan = plan_partition(entry.graph, mu_v, mu_s=1, x=entry.x,
+                                  seed=seed, model=cfg.model)
+            store.attach_plan(key, plan)
+            entry.place_on_mesh(make_serving_mesh(mu_v))
+            place_s = time.perf_counter() - t0
+            emit(f"service.device_place.n{g.n}", place_s * 1e6,
+                 f"{mu_v} row blocks")
+            engine.clear_topk_memo()
+            warm_d, dev_wall, device_stats = _serve_workload(
+                engine, key, g, num_queries, k, seed + 7)
+            assert np.array_equal(warm_d.seeds, cold.seeds), \
+                "device warm/cold seed mismatch"
+            dev_amort = dev_wall / num_queries
+            emit(f"service.device.warm_query.n{g.n}", dev_amort * 1e6,
+                 f"{device_stats['qps']:.0f}qps")
+            emit(f"service.device.p50.n{g.n}",
+                 device_stats["p50_ms"] * 1e3, "")
+            emit(f"service.device.p99.n{g.n}",
+                 device_stats["p99_ms"] * 1e3, "")
+            device_stats = {**device_stats, "wall_s": dev_wall,
+                            "amortized_s": dev_amort,
+                            "qps": num_queries / dev_wall,
+                            "speedup_vs_cold": cold_s / dev_amort,
+                            "mu_v": mu_v, "place_s": place_s}
+            if host_stats is not None:
+                ratio = host_stats["amortized_s"] / dev_amort
+                emit(f"service.device_vs_host.n{g.n}", dev_amort * 1e6,
+                     f"{ratio:.2f}x")
 
     out = {"n": g.n, "m": g.m_real, "registers": registers, "k": k,
            "num_queries": num_queries, "cold_s": cold_s, "build_s": build_s,
-           "wall_s": wall_s, "amortized_s": amortized_s, "speedup": speedup,
-           **stats}
-    emit("service.json", wall_s * 1e6, json.dumps(out))
+           "host": host_stats, "device": device_stats,
+           "device_skip": device_skip}
+    if host_stats is not None:
+        # the legacy top-level fields (older BENCH baselines / table tooling)
+        out.update(wall_s=host_stats["wall_s"],
+                   amortized_s=host_stats["amortized_s"],
+                   speedup=host_stats["speedup_vs_cold"],
+                   qps=host_stats["qps"])
+    if host_stats is not None and device_stats is not None:
+        out["device_vs_host"] = (host_stats["amortized_s"]
+                                 / device_stats["amortized_s"])
+    emit("service.json", (out.get("wall_s", 0.0)) * 1e6, json.dumps(out))
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=1)
+        emit("service.out_json", 0.0, out_json)
     return out
 
 
@@ -79,7 +173,15 @@ if __name__ == "__main__":
     ap.add_argument("--registers", type=int, default=256)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--queries", type=int, default=200)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "host", "mesh"],
+                    help="auto: host rows + device rows when a mesh is "
+                         "available; host/mesh: that path only")
+    ap.add_argument("--mu-v", type=int, default=8,
+                    help="row blocks (devices) of the serving mesh")
+    ap.add_argument("--out-json", default="")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     main(args.scale, registers=args.registers, k=args.k,
-         num_queries=args.queries)
+         num_queries=args.queries, backend=args.backend, mu_v=args.mu_v,
+         out_json=args.out_json)

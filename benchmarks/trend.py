@@ -1,0 +1,105 @@
+"""CI perf-trend gate: compare fresh BENCH_*.json records against the
+previous CI run's artifacts and fail on significant regressions.
+
+    PYTHONPATH=src python -m benchmarks.trend --baseline-dir bench-baseline \
+        [--threshold 0.2] [BENCH_runtime.json BENCH_service.json]
+
+``benchmarks/run.py --fast`` calls :func:`compare` automatically when a
+baseline directory is configured (``--baseline-dir`` / the
+``BENCH_BASELINE_DIR`` env var, which CI points at the downloaded artifact
+of the previous run) and exits non-zero when any tracked throughput metric
+— per-backend cold/warm seeds/sec from ``BENCH_runtime.json``, host/device
+qps from ``BENCH_service.json`` — dropped more than ``threshold`` (20% by
+default). A missing baseline (first run, expired artifact) skips cleanly:
+the gate compares trajectories, it doesn't demand one exists.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Iterator, Optional
+
+from benchmarks.common import emit
+
+DEFAULT_FILES = ("BENCH_runtime.json", "BENCH_service.json")
+
+
+def _load(path: str) -> Optional[dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def _runtime_metrics(rec: dict) -> Iterator[tuple[str, float]]:
+    """(metric name, seeds/sec) per available backend, cold + warm."""
+    for name, b in (rec.get("backends") or {}).items():
+        if not b.get("available"):
+            continue
+        for kind in ("seeds_per_s_cold", "seeds_per_s_warm"):
+            if b.get(kind):
+                yield f"{name}.{kind}", float(b[kind])
+
+
+def _service_metrics(rec: dict) -> Iterator[tuple[str, float]]:
+    """(metric name, qps) for the host and device serving rows."""
+    for row in ("host", "device"):
+        stats = rec.get(row)
+        if stats and stats.get("qps"):
+            yield f"{row}.qps", float(stats["qps"])
+
+
+_METRICS = {"BENCH_runtime.json": _runtime_metrics,
+            "BENCH_service.json": _service_metrics}
+
+
+def compare(baseline_dir: str, files=DEFAULT_FILES, *,
+            threshold: float = 0.2) -> int:
+    """Emit one CSV row per tracked metric; returns the regression count."""
+    regressions = 0
+    for name in files:
+        cur = _load(name)
+        base = _load(os.path.join(baseline_dir, name))
+        if cur is None:
+            emit(f"trend.{name}", 0.0, "skipped: no current record")
+            continue
+        if base is None:
+            emit(f"trend.{name}", 0.0, "skipped: no baseline artifact")
+            continue
+        metrics_fn = _METRICS.get(name, _runtime_metrics)
+        baseline = dict(metrics_fn(base))
+        for metric, new in metrics_fn(cur):
+            old = baseline.get(metric)
+            if not old:
+                emit(f"trend.{name}.{metric}", 0.0, f"new metric ({new:.2f})")
+                continue
+            ratio = new / old
+            verdict = "ok" if ratio >= 1.0 - threshold else "REGRESSION"
+            if verdict == "REGRESSION":
+                regressions += 1
+            emit(f"trend.{name}.{metric}", 0.0,
+                 f"{verdict} {new:.2f} vs {old:.2f} ({ratio:.2f}x)")
+    return regressions
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", default=list(DEFAULT_FILES))
+    ap.add_argument("--baseline-dir", required=True)
+    ap.add_argument("--threshold", type=float, default=0.2)
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    n = compare(args.baseline_dir, args.files or DEFAULT_FILES,
+                threshold=args.threshold)
+    if n:
+        print(f"trend: {n} metric(s) regressed > "
+              f"{args.threshold:.0%}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,18 +10,15 @@ Public (IM-only) surface:
   * :mod:`repro.diffusion` — the diffusion model zoo (wc / ic / lt / dic);
   * :mod:`repro.partition` — the 2-D partition planner + serial-ring
     executor;
-  * :mod:`repro.service`   — persistent SketchStore, batched query engine,
-    graph-delta repair;
-  * :mod:`repro.graphs`, :mod:`repro.baselines`, :mod:`repro.launch`
-    (``python -m repro`` front door).
+  * :mod:`repro.service`   — persistent SketchStore (host- or
+    device-resident banks), batched query engine, graph-delta repair;
+  * :mod:`repro.graphs`, :mod:`repro.baselines`, :mod:`repro.configs`
+    (IM workload presets), :mod:`repro.launch` (``python -m repro`` front
+    door).
 
-Quarantined: the LM seed-template modules (``repro.models``,
-``repro.train``, ``repro.serve``, the per-arch ``repro.configs`` entries,
-``launch/{train,serve,specs}.py``) are NOT part of the public API. They are
-kept only because legacy tier-1 tests still import them directly; nothing
-in the IM pipeline depends on them, they are excluded from ``make lint``'s
-import surface, and they may be removed wholesale once those tests are
-retired.
+The LM seed-template modules (``repro.models``/``train``/``serve``, the
+per-arch configs, ``launch/{train,serve,specs}.py``) were quarantined in
+PR 4 — nothing in the IM pipeline imported them — and are deleted.
 """
 __version__ = "1.0.0"
 
@@ -34,16 +31,6 @@ IM_API_MODULES = (
     "repro.service",
     "repro.graphs",
     "repro.baselines",
+    "repro.configs",
     "repro.launch.common",
-)
-
-#: Quarantined LM seed-template modules — imported by legacy tests only,
-#: never by IM code. Not covered by lint's import check; slated for removal.
-QUARANTINED_MODULES = (
-    "repro.models",
-    "repro.train",
-    "repro.serve",
-    "repro.launch.train",
-    "repro.launch.serve",
-    "repro.launch.specs",
 )

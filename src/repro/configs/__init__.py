@@ -1,77 +1,11 @@
-"""Config registry: the 10 assigned architectures + DiFuseR workloads.
+"""Config registry: the DiFuseR influence-maximization workloads.
 
-``--arch <id>`` everywhere resolves through ``get_config``. Every (arch x
-shape) dry-run cell is enumerated by ``iter_cells()`` with the assignment's
-skip rules applied (long_500k only for sub-quadratic archs)."""
-from __future__ import annotations
+``repro.configs.difuser_workloads`` carries the selectable presets for
+``launch/im.py`` / ``launch/serve_im.py`` and the production-scale dry-run
+cells (``launch/dryrun.py``, ``IM_CELLS``). The LM seed-template arch
+configs that used to live here were quarantined in PR 4 and deleted in
+PR 5 — the IM pipeline never imported them.
+"""
+from repro.configs.difuser_workloads import PRESETS, IMWorkload
 
-import dataclasses
-from typing import Iterator
-
-from repro.configs.deepseek_moe_16b import CONFIG as _deepseek
-from repro.configs.grok_1_314b import CONFIG as _grok
-from repro.configs.yi_34b import CONFIG as _yi
-from repro.configs.h2o_danube3_4b import CONFIG as _danube
-from repro.configs.tinyllama_1_1b import CONFIG as _tinyllama
-from repro.configs.qwen1_5_4b import CONFIG as _qwen
-from repro.configs.zamba2_1_2b import CONFIG as _zamba
-from repro.configs.whisper_medium import CONFIG as _whisper
-from repro.configs.mamba2_780m import CONFIG as _mamba
-from repro.configs.internvl2_26b import CONFIG as _internvl
-from repro.models.config import ModelConfig, reduced
-
-ARCHS = {
-    "deepseek-moe-16b": _deepseek,
-    "grok-1-314b": _grok,
-    "yi-34b": _yi,
-    "h2o-danube-3-4b": _danube,
-    "tinyllama-1.1b": _tinyllama,
-    "qwen1.5-4b": _qwen,
-    "zamba2-1.2b": _zamba,
-    "whisper-medium": _whisper,
-    "mamba2-780m": _mamba,
-    "internvl2-26b": _internvl,
-}
-
-
-@dataclasses.dataclass(frozen=True)
-class ShapeCell:
-    name: str
-    seq_len: int
-    global_batch: int
-    kind: str  # "train" | "prefill" | "decode"
-
-
-SHAPES = {
-    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
-    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
-    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
-    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
-}
-
-
-def get_config(arch: str) -> ModelConfig:
-    if arch not in ARCHS:
-        raise KeyError(f"unknown arch {arch!r}; options: {sorted(ARCHS)}")
-    return ARCHS[arch]
-
-
-def get_reduced(arch: str, **overrides) -> ModelConfig:
-    return reduced(get_config(arch), **overrides)
-
-
-def cell_is_valid(cfg: ModelConfig, shape: ShapeCell) -> tuple[bool, str]:
-    """Assignment skip rules."""
-    if shape.name == "long_500k" and not cfg.sub_quadratic:
-        return False, "long_500k skipped: pure full-attention arch (assignment rule)"
-    if shape.kind == "decode" and not cfg.has_decoder:
-        return False, "decode skipped: encoder-only arch"
-    return True, ""
-
-
-def iter_cells() -> Iterator[tuple[str, str, bool, str]]:
-    """Yields (arch, shape, valid, skip_reason) over all 40 cells."""
-    for arch, cfg in ARCHS.items():
-        for shape_name, shape in SHAPES.items():
-            ok, why = cell_is_valid(cfg, shape)
-            yield arch, shape_name, ok, why
+__all__ = ["PRESETS", "IMWorkload"]

@@ -98,12 +98,19 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
                          sim_axes: Sequence[str], estimator: str,
                          rebuild_threshold: float, max_prop: int, max_casc: int,
                          seed: int, schedule: str = "ring", local_sweeps: int = 0,
-                         predicate=None):
+                         predicate=None, warm: bool = False):
     """Returns the shard_map body running the full Alg. 4 loop.
 
     Bucket arrays arrive as per-ring-step tuples (``bh[kk]`` is step kk's
     bucket, possibly width 0 — those steps skip their merge at trace time
     but still forward the ring block).
+
+    ``warm=True`` makes the body take each shard's already-propagated
+    register block as its first argument and skip fill + the initial
+    propagate fixpoint — the device twin of ``core.difuser.find_seeds_warm``
+    (the K seed rounds are the identical program either way, so warm mesh
+    seeds are bit-identical to cold mesh seeds, which are bit-identical to
+    the single-device reference).
     """
     mu_v, mu_s = part.mu_v, part.mu_s
     n_loc, j_loc, n_real = part.n_loc, part.j_loc, part.n
@@ -166,7 +173,13 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
         m_out, _, iters = jax.lax.while_loop(cond, body, (m_loc, jnp.bool_(True), jnp.int32(0)))
         return m_out, iters
 
-    def body(x_loc, owned, *bufs):
+    def body(*all_args):
+        if warm:
+            m_in, x_loc, owned, *bufs = all_args
+        else:
+            m_in = None
+            x_loc, owned, *bufs = all_args
+
         # regroup the flat per-step bucket args: 10 fields x mu_v steps
         def grp(i):
             return tuple(bufs[i * mu_v + kk][0, 0] for kk in range(mu_v))
@@ -192,13 +205,19 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
         from repro.core.sampling import register_hash
 
         fresh = jax.lax.clz(register_hash(owned.astype(jnp.uint32)[:, None], j_ids, seed=seed))
-        m_loc = jnp.where(valid_row[:, None], fresh.astype(jnp.int8), jnp.int8(VISITED))
 
         def refill(m_cur):
             return jnp.where(m_cur == VISITED, m_cur, fresh.astype(jnp.int8))
 
-        m_loc, build_iters = fixpoint(m_loc, ph, pw, pr, pt, pl, x_loc,
-                                      _bucket_sweep_propagate, max_prop)
+        if warm:
+            # warm start: the caller's block IS the propagated fixpoint
+            # (fresh is still needed above for the lazy-rebuild refill)
+            m_loc, build_iters = m_in, jnp.int32(0)
+        else:
+            m_loc = jnp.where(valid_row[:, None], fresh.astype(jnp.int8),
+                              jnp.int8(VISITED))
+            m_loc, build_iters = fixpoint(m_loc, ph, pw, pr, pt, pl, x_loc,
+                                          _bucket_sweep_propagate, max_prop)
 
         # ---- K seed rounds ----
         def round_fn(carry, _):
@@ -512,3 +531,190 @@ def build_matrix_distributed(g: Graph, mesh,
     # un-permute planned rows back to original-id (canonical) order
     m_canon = m_planned[jnp.asarray(part.plan.perm[: g.n_pad])]
     return m_canon, int(iters), part
+
+
+# ---------------------------------------------------------------------------
+# Device-resident serving paths: warm seed rounds + shard-restricted repair
+# on a plan-order matrix that already lives on the mesh (docs/service.md,
+# "Sharded serving"). Both consume the matrix through an
+# ``in_specs=P(vertex_axis, sim_spec)`` slot, so a bank placed with
+# ``NamedSharding`` is used where it sits — no gather to host order.
+# ---------------------------------------------------------------------------
+
+
+def _sim_spec(sim_axes):
+    """PartitionSpec entry for the sample-space dim: the axis tuple, a bare
+    axis name, or None for a vertex-only serving mesh."""
+    if len(sim_axes) > 1:
+        return tuple(sim_axes)
+    return sim_axes[0] if sim_axes else None
+
+
+def _partition_for_plan(g: Graph, mesh, cfg: DistributedConfig,
+                        x: np.ndarray, plan):
+    """Build the bucket arrays of ``plan`` for ``mesh``'s shard grid."""
+    mu_v = mesh.shape[cfg.vertex_axis]
+    mu_s = math.prod(mesh.shape[ax] for ax in cfg.sim_axes)
+    if plan.mu_v != mu_v:
+        raise ValueError(f"plan has mu_v={plan.mu_v} but the mesh's "
+                         f"{cfg.vertex_axis!r} axis is {mu_v}-way")
+    x = np.asarray(x, dtype=np.uint32)
+    method = "fasst" if cfg.fasst else "naive"
+    sampled = sample_edge_sets(g, x, mu_s, seed=cfg.seed, model=cfg.model,
+                               method=method)
+    return build_partition_2d(g, x, mu_v, mu_s, seed=cfg.seed, method=method,
+                              model=cfg.model, plan=plan,
+                              pad_mode=cfg.pad_mode, sampled=sampled)
+
+
+def find_seeds_warm_distributed(g: Graph, k: int, mesh,
+                                config: Optional[DistributedConfig],
+                                planned_m, plan,
+                                x: np.ndarray, *,
+                                part: Optional[Partition2D] = None
+                                ) -> InfluenceResult:
+    """Warm-start Alg. 4 under shard_map: skip fill + propagate and run the
+    K seed rounds from an already-propagated plan-order register matrix
+    (``StoreEntry.planned_matrix()``) sharded — or shardable — over the
+    mesh's vertex axis. The round program is the warm twin of
+    ``_find_seeds_distributed``'s, so seeds are bit-identical to the
+    single-device ``find_seeds_warm`` (backend-invariance contract).
+    ``part`` passes a pre-built bucket partition of the same (graph, plan,
+    x) in — the O(m · mu_s) host preprocessing is the dominant warm-serving
+    cost, so repeat callers (the store's device TopKSeeds path) cache it
+    against the entry version instead of paying it per query.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    cfg = config or DistributedConfig()
+    if part is None:
+        part = _partition_for_plan(g, mesh, cfg, x, plan)
+    x = np.asarray(x, dtype=np.uint32)
+    maker = _make_distributed_fn(
+        part, k=k, vertex_axis=cfg.vertex_axis, sim_axes=tuple(cfg.sim_axes),
+        estimator=cfg.estimator, rebuild_threshold=cfg.rebuild_threshold,
+        max_prop=cfg.max_propagate_iters, max_casc=cfg.max_cascade_iters,
+        seed=cfg.seed, schedule=cfg.schedule, local_sweeps=cfg.local_sweeps,
+        predicate=resolve_model(cfg.model).predicate, warm=True)
+    body = maker(mesh)
+
+    sim_spec = _sim_spec(cfg.sim_axes)
+    bucket_spec = P(cfg.vertex_axis, sim_spec, None)
+    in_specs = ((P(cfg.vertex_axis, sim_spec), P(sim_spec, None),
+                 P(cfg.vertex_axis, None)) + (bucket_spec,) * (10 * part.mu_v))
+    out_specs = (P(), P(), P(), P(), P())
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False))
+    args = [jnp.asarray(planned_m, jnp.int8), jnp.asarray(part.x_shards),
+            jnp.asarray(part.owned_ids)]
+    for field in (part.p_h, part.p_w, part.p_r, part.p_t, part.p_l,
+                  part.c_h, part.c_w, part.c_r, part.c_t, part.c_l):
+        for step in field:
+            args.append(jnp.asarray(step))
+    seeds, gains, scores, rebuilds, _ = fn(*args)
+    return InfluenceResult(
+        seeds=np.asarray(seeds), est_gains=np.asarray(gains),
+        scores=np.asarray(scores), rebuilds=np.asarray(rebuilds),
+        propagate_iters=0, x=np.sort(x) if cfg.fasst else x)
+
+
+def _make_repair_fn(part: Partition2D, *, vertex_axis: str,
+                    sim_axes: Sequence[str], max_prop: int, predicate=None):
+    """Returns the shard_map body of the frontier-restricted repair — the
+    device twin of ``partition.serial._RingState.sweep_propagate_restricted``.
+
+    Carries a replicated ``dirty`` bool[mu_v] vector: each ring-step merge
+    is applied only when the block being read belongs to a dirty shard
+    (sound, because starting from a lower bound of the fixpoint, changes can
+    only originate at rows the dirtied shards feed); the per-sweep changed
+    flags (one psum over the sim axes + one all_gather over the vertex axis)
+    become the next sweep's dirty set, so the repair widens exactly where
+    changes actually spread and stops when nothing moved.
+    """
+    mu_v = part.mu_v
+    pred = predicate if predicate is not None else fused_predicate
+
+    def body(m_in, dirty0, x_loc, *bufs):
+        def grp(i):
+            return tuple(bufs[i * mu_v + kk][0, 0] for kk in range(mu_v))
+
+        ph, pw, pr, pt, pl = grp(0), grp(1), grp(2), grp(3), grp(4)
+        x_loc = x_loc[0]
+        me = jax.lax.axis_index(vertex_axis)
+
+        def cond(c):
+            _, dirty, _, it = c
+            return jnp.logical_and(jnp.any(dirty), it < max_prop)
+
+        def sweep(c):
+            m_cur, dirty, swept, it = c
+            swept = jnp.logical_or(swept, dirty)
+            acc = m_cur
+            block = m_cur
+            for kk in range(mu_v):
+                if ph[kk].shape[0]:
+                    owner = jax.lax.rem(me + kk, mu_v)
+                    merged = _bucket_sweep_propagate(
+                        acc, block, ph[kk], pw[kk], pr[kk], pt[kk], x_loc,
+                        pl[kk], pred)
+                    acc = jnp.where(dirty[owner], merged, acc)
+                if kk + 1 < mu_v:
+                    perm = [(i, (i - 1) % mu_v) for i in range(mu_v)]
+                    block = jax.lax.ppermute(block, vertex_axis, perm)
+            m_new = jnp.where(m_cur == VISITED, m_cur, acc)
+            changed = jnp.any(m_new != m_cur).astype(jnp.int32)
+            if sim_axes:   # OR across this vertex shard's sim siblings
+                changed = jax.lax.psum(changed, tuple(sim_axes))
+            dirty_new = jax.lax.all_gather(changed > 0, vertex_axis)
+            return m_new, dirty_new, swept, it + 1
+
+        zeros = jnp.zeros((mu_v,), jnp.bool_)
+        m_out, _, swept, sweeps = jax.lax.while_loop(
+            cond, sweep, (m_in, dirty0, zeros, jnp.int32(0)))
+        return m_out, swept, sweeps
+
+    return body
+
+
+def repair_plan_shards_distributed(g: Graph, mesh,
+                                   config: Optional[DistributedConfig],
+                                   x: np.ndarray, planned_m, plan, touched):
+    """Shard-restricted monotone insertion repair under shard_map — the
+    ``mesh`` backend's twin of ``partition.serial.repair_plan_shards``.
+
+    ``planned_m`` is the pre-delta plan-order matrix (device-resident banks
+    pass straight through; the in_spec matches their ``NamedSharding`` row
+    placement so no cross-host gather happens), ``g`` the post-delta
+    dst-sorted graph, ``touched`` the plan shards the delta's endpoints land
+    in. Returns ``(planned_matrix, sweeps, shards_swept)`` with the matrix
+    still sharded over the vertex axis, bit-identical to a full rebuild (and
+    to the serial repair) by fixpoint uniqueness above a sound lower bound.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    cfg = config or DistributedConfig()
+    part = _partition_for_plan(g, mesh, cfg, x, plan)
+    body = _make_repair_fn(
+        part, vertex_axis=cfg.vertex_axis, sim_axes=tuple(cfg.sim_axes),
+        max_prop=cfg.max_propagate_iters,
+        predicate=resolve_model(cfg.model).predicate)
+
+    sim_spec = _sim_spec(cfg.sim_axes)
+    bucket_spec = P(cfg.vertex_axis, sim_spec, None)
+    in_specs = ((P(cfg.vertex_axis, sim_spec), P(None), P(sim_spec, None))
+                + (bucket_spec,) * (5 * part.mu_v))
+    out_specs = (P(cfg.vertex_axis, sim_spec), P(), P())
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False))
+    dirty0 = np.zeros(part.mu_v, dtype=bool)
+    dirty0[np.asarray(list(touched), dtype=np.int64)] = True
+    args = [jnp.asarray(planned_m, jnp.int8), jnp.asarray(dirty0),
+            jnp.asarray(part.x_shards)]
+    for field in (part.p_h, part.p_w, part.p_r, part.p_t, part.p_l):
+        for step in field:
+            args.append(jnp.asarray(step))
+    m_out, swept, sweeps = fn(*args)
+    swept_t = tuple(int(v) for v in np.nonzero(np.asarray(swept))[0])
+    return m_out, int(sweeps), swept_t

@@ -1,11 +1,11 @@
-"""Multi-pod dry-run: .lower().compile() every (arch x input-shape x mesh)
-cell on the production meshes, plus the DiFuseR IM cells, recording
-memory_analysis / cost_analysis / collective wire bytes for the roofline.
+"""Production-scale dry-run: .lower().compile() the DiFuseR IM cells on the
+production meshes, recording memory_analysis / cost_analysis / collective
+wire bytes for the roofline report (benchmarks/roofline_report.py).
 
 Usage:
-    PYTHONPATH=src python -m repro.launch.dryrun --mesh both --out artifacts/dryrun
-    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
-    PYTHONPATH=src python -m repro.launch.dryrun --im            # IM cells only
+    PYTHONPATH=src python -m repro.launch.dryrun --out artifacts/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --arch difuser-twitter \
+        --mesh single --schedule allgather
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -16,93 +16,17 @@ import argparse
 import json
 import time
 import traceback
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCHS, SHAPES, cell_is_valid, get_config
-from repro.launch import specs as S
 from repro.launch.mesh import make_production_mesh
-from repro.models.sharding import (activation_mesh, batch_specs, cache_specs,
-                                   param_specs, to_shardings)
-from repro.models.transformer import prefill
-from repro.serve.engine import make_serve_step
-from repro.train.optimizer import make_optimizer, specs_for_state
-from repro.train.train_step import TrainConfig, make_train_step
 from repro.utils.hlo import collective_stats
-from repro.utils.roofline import Roofline, model_flops
-
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 
-def _batch_axis(mesh):
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-
-
-def lower_lm_cell(arch: str, shape_name: str, mesh, *, accum: int = 1, cfg=None):
-    """Returns the lowered computation for one LM cell."""
-    with activation_mesh(mesh):
-        return _lower_lm_cell(arch, shape_name, mesh, accum=accum, cfg=cfg)
-
-
-def _lower_lm_cell(arch: str, shape_name: str, mesh, *, accum: int = 1, cfg=None):
-    cfg = cfg or get_config(arch)
-    shape = SHAPES[shape_name]
-    pspecs = param_specs(cfg, mesh)
-    pshapes = S.param_shapes(cfg)
-    psh = to_shardings(pspecs, mesh)
-    b_ax = _batch_axis(mesh)
-
-    if shape.kind == "train":
-        opt = make_optimizer(cfg.optimizer)
-        oshapes = S.opt_state_shapes(cfg, opt)
-        ospecs = specs_for_state(oshapes, pspecs)
-        step = make_train_step(cfg, opt, TrainConfig(accum_steps=accum), mesh=mesh)
-        bspecs = batch_specs(cfg, mesh, batch=shape.global_batch)
-        fn = jax.jit(
-            step,
-            in_shardings=(psh, to_shardings(ospecs, mesh), to_shardings(bspecs, mesh)),
-            out_shardings=(psh, to_shardings(ospecs, mesh), NamedSharding(mesh, P())),
-            donate_argnums=(0, 1),
-        )
-        lowered = fn.lower(pshapes, oshapes, S.train_batch_specs(cfg, shape))
-
-    elif shape.kind == "prefill":
-        inp = S.prefill_specs(cfg, shape)
-        in_shardings = [psh] + [NamedSharding(mesh, P(b_ax, *(None,) * (len(v.shape) - 1)))
-                                for v in inp.values()]
-        cspecs = cache_specs(cfg, mesh, batch=shape.global_batch)
-        logits_sh = NamedSharding(mesh, P(b_ax, None, "model"))
-        keys = list(inp.keys())
-
-        def pf(params, *vals):
-            kw = dict(zip(keys, vals))
-            return prefill(params, kw.pop("tokens"), cfg, **kw)
-
-        fn = jax.jit(pf, in_shardings=tuple(in_shardings),
-                     out_shardings=(logits_sh, to_shardings(cspecs, mesh)))
-        lowered = fn.lower(pshapes, *inp.values())
-
-    elif shape.kind == "decode":
-        inp = S.decode_specs(cfg, shape)
-        seq_shard = shape.name == "long_500k"
-        cspecs = cache_specs(cfg, mesh, batch=shape.global_batch, seq_shard=seq_shard)
-        tok_spec = P(b_ax) if shape.global_batch % _prod(mesh, b_ax) == 0 else P()
-        step = make_serve_step(cfg)
-        fn = jax.jit(
-            step,
-            in_shardings=(psh, NamedSharding(mesh, tok_spec),
-                          to_shardings(cspecs, mesh), NamedSharding(mesh, P())),
-            out_shardings=(NamedSharding(mesh, P(tok_spec[0] if tok_spec else None, "model")),
-                           to_shardings(cspecs, mesh)),
-        )
-        lowered = fn.lower(pshapes, inp["token"], inp["cache"], inp["position"])
-    else:
-        raise ValueError(shape.kind)
-    return lowered
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
 
 
 def _prod(mesh, axes):
@@ -127,6 +51,8 @@ IM_CELLS = {
 def lower_im_cell(name: str, mesh, *, k: int = 4, schedule: str = "ring"):
     """Lower the full distributed DiFuseR loop with ShapeDtypeStruct inputs
     (no host graph build — bucket sizes come from the duplication model)."""
+    from jax.sharding import PartitionSpec as P
+
     from repro.core.distributed import Partition2D, _make_distributed_fn
 
     n, m, j, dup = IM_CELLS[name]
@@ -164,10 +90,10 @@ def lower_im_cell(name: str, mesh, *, k: int = 4, schedule: str = "ring"):
     fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=in_specs,
                                out_specs=(P(), P(), P(), P(), P()), check_vma=False))
     bshape = (mu_v, mu_s, bucket)
-    args = [S.sds((mu_s, j_loc), jnp.uint32), S.sds((mu_v, n_loc), jnp.int32)]
+    args = [_sds((mu_s, j_loc), jnp.uint32), _sds((mu_v, n_loc), jnp.int32)]
     for dt in (jnp.uint32, jnp.int32, jnp.int32, jnp.uint32, jnp.uint32) * 2:
         for _ in range(mu_v):
-            args.append(S.sds(bshape, dt))
+            args.append(_sds(bshape, dt))
     return fn.lower(*args), part
 
 
@@ -187,41 +113,13 @@ def _cell_metrics(lowered):
     }
 
 
-def run_cell(arch, shape_name, mesh, mesh_name, *, im=False, out_dir=None,
-             probes=True, accum=1, overrides=None, tag="", schedule="ring"):
-    """Lower + compile one cell. For LM cells, two tiny unrolled probes
-    (1 and 2 layers) correct for XLA HloCostAnalysis counting while-loop
-    (scan-over-layers) bodies once:
-        corrected = full + (L - 1) * (probe2 - probe1).
-    The memory analysis always comes from the full production compile."""
+def run_cell(name, mesh, mesh_name, *, out_dir=None, tag="", schedule="ring"):
+    """Lower + compile one IM cell, recording cost/memory/collective stats."""
     t0 = time.time()
-    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": False}
+    rec = {"arch": name, "shape": "im_step", "mesh": mesh_name, "ok": False}
     try:
-        import dataclasses as _dc
-        if im:
-            lowered, part = lower_im_cell(arch, mesh, schedule=schedule)
-            compiled, m = _cell_metrics(lowered)
-        else:
-            cfg = get_config(arch)
-            if overrides:
-                cfg = _dc.replace(cfg, **overrides)
-            lowered = lower_lm_cell(arch, shape_name, mesh, cfg=cfg, accum=accum)
-            compiled, m = _cell_metrics(lowered)
-            if probes:
-                pcfgs = [
-                    _dc.replace(cfg, num_layers=n, enc_layers=min(cfg.enc_layers, n),
-                                scan_layers=False) for n in (1, 2)
-                ]
-                p1 = _cell_metrics(lower_lm_cell(arch, shape_name, mesh, cfg=pcfgs[0], accum=accum))[1]
-                p2 = _cell_metrics(lower_lm_cell(arch, shape_name, mesh, cfg=pcfgs[1], accum=accum))[1]
-                scale = cfg.num_layers - 1
-                for k in ("flops", "bytes_accessed", "wire_bytes"):
-                    m[k] = m[k] + scale * max(p2[k] - p1[k], 0.0)
-            if accum > 1:
-                # the accumulation lax.scan body is also counted once by
-                # HloCostAnalysis: scale to the full optimizer step
-                for k in ("flops", "bytes_accessed", "wire_bytes"):
-                    m[k] = m[k] * accum
+        lowered, part = lower_im_cell(name, mesh, schedule=schedule)
+        compiled, m = _cell_metrics(lowered)
         mem = compiled.memory_analysis()
         chips = len(mesh.devices.flatten())
         rec.update(
@@ -240,22 +138,13 @@ def run_cell(arch, shape_name, mesh, mesh_name, *, im=False, out_dir=None,
             collectives=m["coll"].to_dict(),
             chips=chips,
         )
-        if not im:
-            shape = SHAPES[shape_name]
-            mf = model_flops(cfg, shape)
-            roof = Roofline(arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
-                            flops_per_device=rec["flops"],
-                            bytes_per_device=rec["bytes_accessed"],
-                            wire_bytes_per_device=rec["wire_bytes"],
-                            model_flops_total=mf)
-            rec["roofline"] = roof.to_dict()
     except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         suffix = f"__{tag}" if tag else ""
-        fn = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+        fn = os.path.join(out_dir, f"{name}__im_step__{mesh_name}{suffix}.json")
         with open(fn, "w") as f:
             json.dump(rec, f, indent=1)
     return rec
@@ -263,21 +152,15 @@ def run_cell(arch, shape_name, mesh, mesh_name, *, im=False, out_dir=None,
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="all")
-    ap.add_argument("--shape", default="all")
+    ap.add_argument("--arch", default="all", help="IM cell name (IM_CELLS)")
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
-    ap.add_argument("--im", action="store_true", help="run the DiFuseR IM cells")
+    ap.add_argument("--im", action="store_true",
+                    help="deprecated no-op: the IM cells are the only cells "
+                         "since the LM seed templates were removed")
     ap.add_argument("--out", default="artifacts/dryrun")
-    ap.add_argument("--accum", type=int, default=1, help="grad-accum microbatches")
-    ap.add_argument("--override", action="append", default=[],
-                    help="cfg override key=value (hillclimb), e.g. attn_chunk=1024")
     ap.add_argument("--schedule", default="ring", choices=["ring", "allgather"])
     ap.add_argument("--tag", default="", help="artifact filename suffix")
     args = ap.parse_args()
-    overrides = {}
-    for ov in args.override:
-        k, _, v = ov.partition("=")
-        overrides[k] = int(v) if v.lstrip("-").isdigit() else v
 
     meshes = []
     if args.mesh in ("single", "both"):
@@ -286,38 +169,15 @@ def main() -> None:
         meshes.append(("pods2x16x16", make_production_mesh(multi_pod=True)))
 
     failures = 0
-    if args.im:
-        names = list(IM_CELLS) if args.arch == "all" else [args.arch]
-        for mesh_name, mesh in meshes:
-            for name in names:
-                rec = run_cell(name, "im_step", mesh, mesh_name, im=True, out_dir=args.out,
-                               schedule=args.schedule, tag=args.tag)
-                status = "OK " if rec["ok"] else "FAIL"
-                print(f"[{status}] {name:24s} im_step      {mesh_name:12s} "
-                      f"{rec.get('compile_s', '-'):>6}s  {rec.get('error', '')}")
-                failures += 0 if rec["ok"] else 1
-        raise SystemExit(1 if failures else 0)
-
-    archs = list(ARCHS) if args.arch == "all" else [args.arch]
-    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    names = list(IM_CELLS) if args.arch == "all" else [args.arch]
     for mesh_name, mesh in meshes:
-        for arch in archs:
-            for shape_name in shapes:
-                ok, why = cell_is_valid(get_config(arch), SHAPES[shape_name])
-                if not ok:
-                    print(f"[SKIP] {arch:20s} {shape_name:12s} {mesh_name:12s} {why}")
-                    continue
-                rec = run_cell(arch, shape_name, mesh, mesh_name, out_dir=args.out,
-                               accum=args.accum, overrides=overrides, tag=args.tag)
-                status = "OK " if rec["ok"] else "FAIL"
-                extra = ""
-                if rec["ok"]:
-                    r = rec.get("roofline", {})
-                    extra = (f"flops/dev={rec['flops']:.3g} "
-                             f"bottleneck={r.get('bottleneck', '-')}")
-                print(f"[{status}] {arch:20s} {shape_name:12s} {mesh_name:12s} "
-                      f"{rec.get('compile_s', '-'):>6}s  {extra}{rec.get('error', '')}")
-                failures += 0 if rec["ok"] else 1
+        for name in names:
+            rec = run_cell(name, mesh, mesh_name, out_dir=args.out,
+                           schedule=args.schedule, tag=args.tag)
+            status = "OK " if rec["ok"] else "FAIL"
+            print(f"[{status}] {name:24s} im_step      {mesh_name:12s} "
+                  f"{rec.get('compile_s', '-'):>6}s  {rec.get('error', '')}")
+            failures += 0 if rec["ok"] else 1
     raise SystemExit(1 if failures else 0)
 
 

@@ -1,23 +1,24 @@
-"""Fault tolerance: supervised relaunch + health checking.
+"""Fault tolerance: supervised relaunch + health checking for the IM
+drivers (``python -m repro im`` / ``serve``).
 
-Large-scale contract (DESIGN.md §4):
-
-  * **Checkpoint/restart** — train.py checkpoints atomically every
-    --ckpt-every steps and resumes from the latest step on relaunch; the
-    data pipeline is a pure function of (seed, step) so the token stream
-    resumes exactly. This module supervises the process: on a non-zero
-    exit (preempted host, OOM-killed worker, ICI link flap surfacing as a
-    crash) it relaunches, bounded by --max-restarts.
-  * **Elastic scaling** — checkpoints are topology-free (full host arrays +
-    reshard-on-load via restore_sharded). Changing the mesh between
-    launches re-shards params/optimizer state; for DiFuseR, FASST
-    repartitions the sample space for the new device count in
-    O(R log R) host time (core/fasst.partition_samples).
+  * **Build/restart** — the SketchStore index is persisted as an npz
+    snapshot (``serve_im.py --save`` / ``SketchStore.load``), so a
+    relaunched server skips the cold fixpoint; this module supervises the
+    process: on a non-zero exit (preempted host, OOM-killed worker, ICI
+    link flap surfacing as a crash) it relaunches, bounded by
+    --max-restarts.
+  * **Elastic scaling** — snapshots are topology-free (canonical row
+    order; a device-resident layout re-places on load via
+    ``SketchStore.load(mesh=...)``). Changing the mesh between launches
+    re-shards: FASST repartitions the sample space for the new device
+    count in O(R log R) host time (core/fasst.partition_samples) and the
+    partition planner re-plans the row blocks.
   * **Straggler mitigation** — SPMD steps are lockstep, so stragglers are
     structural, not scheduled: FASST minimizes the max device-local edge
-    count (the paper's Table 7 *is* a straggler bound), MoE capacity
-    padding equalizes expert shards, and the heartbeat below converts a
-    hung host into a crash+relaunch instead of an indefinite stall.
+    count (the paper's Table 7 *is* a straggler bound), the partition
+    planner balances per-shard bucket work, and the heartbeat below
+    converts a hung host into a crash+relaunch instead of an indefinite
+    stall.
 
 On real clusters the supervisor integrates with the cluster manager
 (GKE/SLURM restarts); this reference implementation supervises a local
@@ -66,7 +67,7 @@ def supervise(cmd: list[str], *, max_restarts: int = 5, heartbeat_file: str | No
 
 def main() -> None:
     ap = argparse.ArgumentParser(
-        description="supervise a training run: ft.py [opts] -- <cmd...>")
+        description="supervise a long-running launch: ft.py [opts] -- <cmd...>")
     ap.add_argument("--max-restarts", type=int, default=5)
     ap.add_argument("--heartbeat-file", default=None)
     ap.add_argument("--heartbeat-timeout", type=float, default=600.0)

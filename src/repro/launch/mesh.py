@@ -46,6 +46,15 @@ def make_mesh(shape: tuple, axes: tuple) -> Mesh:
                          **_MESH_KW(len(axes)))
 
 
+def make_serving_mesh(mu_v: int, *, vertex_axis: str = "data",
+                      sim_axis: str = "model") -> Mesh:
+    """``(mu_v, 1)`` mesh for device-resident serving: ``mu_v`` plan-order
+    row blocks, one per device, sample space kept whole per device (the
+    store's column split is *banks*, not mesh columns — docs/service.md,
+    "Sharded serving")."""
+    return make_mesh((mu_v, 1), (vertex_axis, sim_axis))
+
+
 def make_im_mesh(devices: int, *, mu_v: int = 0) -> Mesh:
     """(data, model) mesh for the IM drivers: ``mu_v`` vertex shards x
     ``devices/mu_v`` sample-space shards. ``mu_v=0`` picks the historical

@@ -56,7 +56,14 @@ def run(argv=None) -> dict:
                          "blocks and deltas report the plan shards they "
                          "touch")
     ap.add_argument("--plan-shards", type=int, default=8,
-                    help="vertex shards of the attached plan")
+                    help="vertex shards of the attached plan (and the row "
+                         "blocks of a device-resident placement)")
+    ap.add_argument("--residency", default="auto",
+                    choices=["auto", "host", "device"],
+                    help="where the index banks live for serving: 'device' "
+                         "pins plan-order row blocks on a mesh "
+                         "(shard-local query reductions); 'auto' follows "
+                         "the resolved --backend (mesh -> device)")
     ap.add_argument("--queries", type=int, default=1000)
     ap.add_argument("--topk", type=int, default=10, help="k for TopKSeeds queries")
     ap.add_argument("--max-batch", type=int, default=256)
@@ -67,8 +74,13 @@ def run(argv=None) -> dict:
 
     g = make_graph(args.graph, args.setting, args.seed)
     print(f"graph n={g.n:,} m={g.m_real:,} model={args.model}")
+    # a sharded spec (mu_v = --plan-shards) only when device serving was
+    # asked for — the default stays the historical single-device cold path
+    wants_device = args.backend == "mesh" or args.residency == "device"
     spec = RunSpec(num_registers=args.registers, seed=args.seed,
                    model=args.model, backend=args.backend,
+                   residency=args.residency,
+                   mu_v=args.plan_shards if wants_device else 1, mu_s=1,
                    partition=args.partition if args.partition else "block")
     sess = InfluenceSession(g, spec,
                             store=SketchStore(num_banks=args.banks, spec=spec))
@@ -83,11 +95,17 @@ def run(argv=None) -> dict:
     store = sess.store
     engine = InfluenceEngine(store, max_batch=args.max_batch)
     key = engine.register(g, spec.difuser_config())
-    entry = store.entry(key)
+    entry = sess.entry()   # routes spec.residency: mesh serving pins blocks
     print(f"store build: {entry.build_time_s:.2f}s "
           f"({entry.num_banks} bank(s), {entry.build_iters} sweeps)")
 
-    if args.attach_plan or args.partition != "block":
+    if entry.residency == "device":
+        pm = entry.planned_matrix()
+        shard_bytes = pm.shape[0] // entry.plan.mu_v * pm.shape[1]
+        print(f"device-resident: {entry.plan.mu_v} row blocks x "
+              f"{shard_bytes} B on mesh {dict(entry.mesh.shape)} "
+              f"(serving {entry.serving_backend})")
+    elif args.attach_plan or args.partition != "block":
         from repro.partition import plan_partition
 
         plan = plan_partition(entry.graph, args.plan_shards, mu_s=1,
@@ -123,7 +141,9 @@ def run(argv=None) -> dict:
     return {**stats, "cold_s": cold_s, "build_s": entry.build_time_s,
             "wall_s": wall_s, "qps": args.queries / wall_s,
             "amortized_s": amortized, "speedup": speedup,
-            "backend": sess.last_report.backend}
+            "backend": sess.last_report.backend,
+            "residency": entry.residency,
+            "serving": entry.serving_backend}
 
 
 if __name__ == "__main__":

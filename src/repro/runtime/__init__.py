@@ -35,7 +35,8 @@ from typing import Optional
 from repro.runtime.base import (Backend, BackendCapabilities,
                                 BackendUnavailable, RunReport,
                                 available_backends, get_backend,
-                                register_backend, resolve_backend)
+                                register_backend, resolve_backend,
+                                resolve_residency)
 from repro.runtime.spec import RunSpec
 
 # importing the implementations registers them
@@ -75,6 +76,7 @@ __all__ = [
     "get_backend",
     "register_backend",
     "resolve_backend",
+    "resolve_residency",
     "run",
     "warn_deprecated",
 ]

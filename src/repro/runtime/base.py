@@ -125,11 +125,13 @@ class Backend(abc.ABC):
         raise NotImplementedError(f"backend {self.name!r} has no cascade hook")
 
     def repair_plan_shards(self, g: Graph, spec: RunSpec, x: np.ndarray,
-                           planned_m, plan, touched):
+                           planned_m, plan, touched, *, mesh=None):
         """Shard-restricted repair of a plan-order matrix; returns
         ``(planned_matrix, sweeps, shards_swept)``. MUST be implemented by
         every backend whose ``capabilities().shard_repair`` is True —
-        ``service.delta.apply_delta`` dispatches on that flag."""
+        ``service.delta.apply_delta`` dispatches on that flag. ``mesh`` pins
+        the jax mesh of a device-resident matrix (the entry's placement) —
+        only the ``mesh`` backend consumes it."""
         raise NotImplementedError(
             f"backend {self.name!r} reports no shard_repair capability")
 
@@ -194,3 +196,13 @@ def resolve_backend(spec: RunSpec, g: Optional[Graph] = None, *,
             f"no backend can run this spec: mesh unavailable and the "
             f"serial fallback cannot either: {why}")
     return serial
+
+
+def resolve_residency(spec: RunSpec, backend: Backend) -> str:
+    """Apply the ``residency="auto"`` rule: banks live on the mesh exactly
+    when the resolved backend runs there (``needs_mesh``) — serving
+    reductions then happen where the registers already are — and on the host
+    otherwise. An explicit ``"host"``/``"device"`` is honored as-is."""
+    if spec.residency != "auto":
+        return spec.residency
+    return "device" if backend.capabilities().needs_mesh else "host"

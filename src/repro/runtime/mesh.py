@@ -27,8 +27,9 @@ class MeshBackend(Backend):
     def capabilities(self) -> BackendCapabilities:
         return BackendCapabilities(
             name=self.name, distributed=True, needs_mesh=True,
-            shard_repair=False,
-            description="shard_map 2-D runtime (ring/allgather schedules)")
+            shard_repair=True,
+            description="shard_map 2-D runtime (ring/allgather schedules; "
+                        "shard-restricted repair of device-resident banks)")
 
     def available(self):
         if not JAX_HAS_AXIS_TYPE:
@@ -106,6 +107,33 @@ class MeshBackend(Backend):
         m, iters, _ = _dist.build_matrix_distributed(
             g, mesh, cfg, x, reg_offset=reg_offset)
         return m, iters
+
+    # -- shard-level repair (device-resident store banks) ------------------
+
+    def repair_plan_shards(self, g: Graph, spec: RunSpec, x: np.ndarray,
+                           planned_m, plan, touched, *, mesh=None):
+        """Frontier-restricted re-propagation of only the touched plan
+        shards under shard_map (``core.distributed.
+        repair_plan_shards_distributed``) — the device twin of the serial
+        ring repair, bit-identical to it and to a full rebuild. ``mesh``
+        should be the placement mesh of the matrix (a device-resident
+        entry's); without one, a row-only serving mesh of ``plan.mu_v``
+        devices is constructed."""
+        ok, why = self.available()
+        if not ok:
+            from repro.runtime.base import BackendUnavailable
+
+            raise BackendUnavailable(f"mesh backend: {why}")
+        from repro.core import distributed as _dist
+
+        if mesh is None:
+            from repro.launch.mesh import make_serving_mesh
+
+            mesh = make_serving_mesh(plan.mu_v, vertex_axis=spec.vertex_axis)
+        sim_axes = tuple(ax for ax in mesh.axis_names if ax != spec.vertex_axis)
+        cfg = spec.with_(sim_axes=sim_axes).distributed_config()
+        return _dist.repair_plan_shards_distributed(
+            g, mesh, cfg, x, planned_m, plan, touched)
 
 
 register_backend(MeshBackend())

@@ -98,12 +98,15 @@ class SerialRingBackend(Backend):
     # -- shard-level repair (the mesh-sharded store-bank hook) -------------
 
     def repair_plan_shards(self, g: Graph, spec: RunSpec, x: np.ndarray,
-                           planned_m: np.ndarray, plan, touched):
+                           planned_m: np.ndarray, plan, touched, *,
+                           mesh=None):
         """Delegates to :func:`repro.partition.serial.repair_plan_shards`:
         frontier-restricted ring sweeps that re-propagate only the shards a
-        delta dirtied (plus any shard the repair actually spreads into)."""
+        delta dirtied (plus any shard the repair actually spreads into).
+        ``mesh`` (a device placement) is not applicable — the ring runs on
+        host; a device-resident matrix is pulled host-side first."""
         return _serial.repair_plan_shards(
-            g, spec.difuser_config(), x, planned_m, plan, touched,
+            g, spec.difuser_config(), x, np.asarray(planned_m), plan, touched,
             pad_mode=spec.pad_mode)
 
 

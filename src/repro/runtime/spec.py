@@ -51,6 +51,10 @@ class RunSpec:
 
     # ---- execution strategy ----
     backend: str = "auto"              # "auto" | registered backend name
+    residency: str = "auto"            # "auto" | "host" | "device" — where
+    #   store banks live for serving: "device" pins plan-order row blocks on
+    #   the mesh (shard-local query reductions); "auto" follows the resolved
+    #   backend (mesh -> device, else host); see runtime.resolve_residency
     mu_v: int = 1                      # vertex shards (2-D partition rows)
     mu_s: int = 1                      # sample-space shards
     partition: str = "block"           # vertex-assignment strategy

@@ -100,8 +100,13 @@ def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
     reports ``shard_repair`` capability and the entry has a partition plan
     attached, the insertion repair runs shard-restricted: only the plan
     shards the delta dirtied (``plan_shards_touched``) are re-propagated,
-    with results bit-identical to a full rebuild. ``None`` keeps the
-    historical per-bank single-device repair.
+    with results bit-identical to a full rebuild. ``"auto"`` picks by the
+    entry's residency — ``mesh`` when the banks are device-resident (the
+    repair then runs where the rows live and the result stays sharded),
+    else ``serial`` when a plan is attached, else the historical per-bank
+    single-device repair. ``None`` keeps the historical repair, except for
+    device-resident entries, which always route through a shard_repair
+    backend (the per-bank kernels assume canonical row order).
     """
     t0 = time.perf_counter()
     entry = store.entry(key)
@@ -150,7 +155,7 @@ def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
 
     if delta.num_added and not rebuilt:
         if context_free:
-            shard_backend = _shard_repair_backend(backend)
+            shard_backend = _shard_repair_backend(backend, entry)
             if shard_backend is not None and entry.plan is not None and plan_shards:
                 repair_sweeps, banks_touched, shards_swept = \
                     _repair_insertions_sharded(entry, new_g, plan_shards,
@@ -173,34 +178,57 @@ def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
                        repair_backend=repair_backend)
 
 
-def _shard_repair_backend(backend):
-    """Resolve ``backend`` (name | Backend | None) to a shard_repair-capable
-    backend instance, or None when the historical repair should run."""
-    if backend is None:
-        return None
+def _shard_repair_backend(backend, entry: StoreEntry):
+    """Resolve ``backend`` (name | Backend | "auto" | None) to a
+    shard_repair-capable backend instance, or None when the historical
+    per-bank repair should run. The entry's residency is authoritative
+    over the caller's backend in both directions: device-resident entries
+    never get None (their banks are plan-ordered, which the per-bank
+    kernels cannot consume — they route to ``mesh``, rows repaired where
+    they live, with ``serial`` as the host fallback), and host-resident
+    entries never get ``mesh`` (shipping a host matrix to a throwaway
+    device mesh just to gather it back is strictly worse than the in-place
+    serial repair, and may not even have the devices)."""
     from repro.runtime import get_backend
 
+    if backend == "auto" or (backend is None and entry.residency == "device"):
+        if entry.plan is None:
+            return None
+        if entry.residency == "device":
+            b = get_backend("mesh")
+            if b.available()[0]:
+                return b
+        return get_backend("serial")
+    if backend is None:
+        return None
     b = get_backend(backend)
-    return b if b.capabilities().shard_repair else None
+    if not b.capabilities().shard_repair:
+        return get_backend("serial") if entry.residency == "device" else None
+    if b.capabilities().needs_mesh and entry.residency != "device":
+        return get_backend("serial")
+    return b
 
 
 def _repair_insertions_sharded(entry: StoreEntry, new_g: Graph,
                                touched: tuple, backend):
     """Shard-restricted monotone insertion repair through a shard_repair
-    backend (``serial``): the plan-order matrix is repaired starting from
-    exactly the shards the delta dirtied, and sweeps widen only where
-    changes actually spread. Bit-identical to a full rebuild (and to the
-    per-bank single-device repair) by the same monotone-lattice argument.
+    backend (``serial`` on host, ``mesh`` for device-resident banks): the
+    plan-order matrix is repaired starting from exactly the shards the
+    delta dirtied, and sweeps widen only where changes actually spread.
+    Bit-identical to a full rebuild (and to the per-bank single-device
+    repair) by the same monotone-lattice argument. A device-resident
+    entry's matrix goes in sharded and comes back sharded — the repair is
+    the only data movement.
     """
     from repro.runtime.spec import RunSpec
 
-    planned_old = np.asarray(entry.planned_matrix())
-    spec = RunSpec.from_config(entry.cfg)
+    planned_old = entry.planned_matrix()
+    spec = RunSpec.from_config(entry.cfg, vertex_axis=entry.vertex_axis)
     planned_new, sweeps, swept = backend.repair_plan_shards(
-        new_g, spec, entry.x, planned_old, entry.plan, touched)
-    canon = planned_new[entry.plan.perm[: new_g.n_pad]]
+        new_g, spec, entry.x, planned_old, entry.plan, touched,
+        mesh=entry.mesh)
     old_banks = list(entry.banks)
-    entry.set_matrix(jnp.asarray(canon))
+    entry.set_planned_matrix(planned_new)
     banks_touched = sum(
         1 for b_old, b_new in zip(old_banks, entry.banks)
         if bool(jnp.any(b_old != b_new)))

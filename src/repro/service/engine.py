@@ -50,6 +50,10 @@ class QueryResult:
     latency_s: wall time of the batch this request rode in.
     amortized_s: latency_s / batch_size — the per-query serving cost.
     batch_size: number of real requests in the executed batch.
+    backend: which lowering served the batch — ``"single:host"`` (canonical
+             jitted reductions), ``"mesh:device"`` (shard-local reductions
+             on the placed row blocks), or ``"memo"`` (top-k cache hit, no
+             execution). Benchmarks report host vs device rows off this.
     cache_hit: True if the result came from the top-k memo (no execution).
     deduped: True if this request shared another identical request's
              execution within the same batch (distinct from a memo hit).
@@ -60,6 +64,7 @@ class QueryResult:
     latency_s: float
     amortized_s: float
     batch_size: int
+    backend: str = "single:host"
     cache_hit: bool = False
     deduped: bool = False
 
@@ -169,7 +174,8 @@ class InfluenceEngine:
         dt = time.perf_counter() - t0
         for j, i in enumerate(chunk):
             results[i] = QueryResult(requests[i].query, float(est[j]), dt,
-                                     dt / len(chunk), len(chunk))
+                                     dt / len(chunk), len(chunk),
+                                     backend=entry.serving_backend)
 
     def _run_marginal(self, entry, requests, chunk, results):
         sentinel = entry.graph.n_pad - 1
@@ -182,7 +188,8 @@ class InfluenceEngine:
         dt = time.perf_counter() - t0
         for j, i in enumerate(chunk):
             results[i] = QueryResult(requests[i].query, float(gains[j]), dt,
-                                     dt / len(chunk), len(chunk))
+                                     dt / len(chunk), len(chunk),
+                                     backend=entry.serving_backend)
 
     def _run_probe(self, entry, requests, chunk, results):
         sentinel = entry.graph.n_pad - 1
@@ -201,7 +208,8 @@ class InfluenceEngine:
             value = {"est": est[off: off + ln].copy(),
                      "max_register": max_reg[off: off + ln].copy()}
             results[i] = QueryResult(requests[i].query, value, dt,
-                                     dt / len(chunk), len(chunk))
+                                     dt / len(chunk), len(chunk),
+                                     backend=entry.serving_backend)
 
     def _run_topk(self, entry, requests, chunk, results):
         # dedupe identical k within the batch; memoize against entry.version
@@ -214,8 +222,10 @@ class InfluenceEngine:
             if cached is not None and cached[0] == (entry.version, entry.stale):
                 for i in idxs:
                     results[i] = QueryResult(requests[i].query, cached[1], 0.0,
-                                             0.0, len(idxs), cache_hit=True)
+                                             0.0, len(idxs), backend="memo",
+                                             cache_hit=True)
                 continue
+            served_by = entry.serving_backend
             t0 = time.perf_counter()
             res = Q.top_k_seeds(self.store, entry, k)
             dt = time.perf_counter() - t0
@@ -226,14 +236,19 @@ class InfluenceEngine:
             for j, i in enumerate(idxs):
                 results[i] = QueryResult(requests[i].query, res, dt,
                                          dt / len(idxs), len(idxs),
-                                         deduped=j > 0)
+                                         backend=served_by, deduped=j > 0)
 
 
 def summarize_latencies(results: Sequence[QueryResult]) -> dict:
-    """Aggregate serving stats: p50/p99 per-request latency, amortized cost."""
+    """Aggregate serving stats: p50/p99 per-request latency, amortized cost,
+    and the per-backend request counts (``by_backend``: how many requests
+    each lowering — host jit, shard-local device, memo — answered)."""
     lat = np.asarray([r.latency_s for r in results], dtype=np.float64)
     amort = np.asarray([r.amortized_s for r in results], dtype=np.float64)
     total = float(amort.sum())
+    by_backend: dict[str, int] = {}
+    for r in results:
+        by_backend[r.backend] = by_backend.get(r.backend, 0) + 1
     return {
         "num_queries": len(results),
         "total_s": total,
@@ -243,4 +258,5 @@ def summarize_latencies(results: Sequence[QueryResult]) -> dict:
         "amortized_ms": total / len(results) * 1e3 if len(results) else 0.0,
         "cache_hits": sum(1 for r in results if r.cache_hit),
         "deduped": sum(1 for r in results if r.deduped),
+        "by_backend": by_backend,
     }

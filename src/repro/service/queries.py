@@ -19,11 +19,24 @@ Candidate sets are padded with the graph's sentinel vertex (``n_pad - 1``),
 whose row is all VISITED (= -1, the bottom of the max lattice), so padding
 is inert under the union merge by construction — batches of ragged candidate
 sets lower to one fixed-shape jit.
+
+Two lowerings per query class, selected by ``StoreEntry.residency``:
+
+* **host** — the historical jitted reductions over the canonical matrix;
+* **device** — shard-local partial reductions under ``shard_map`` against
+  the plan-order row blocks a :meth:`StoreEntry.place_on_mesh` pinned per
+  device: each shard merges the candidate rows it owns (rows it does not
+  own contribute VISITED, the bottom of the max lattice) and one ``pmax``
+  over the vertex axis combines the partial registers; the estimator then
+  runs on the identical merged vector, so device answers are bit-identical
+  to host answers (tests/test_sharded_serving.py holds the line). TopKSeeds
+  routes through the warm shard_map round loop
+  (``core.distributed.find_seeds_warm_distributed``) — same contract.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import Sequence, Union
 
 import jax
@@ -32,6 +45,7 @@ import numpy as np
 
 from repro.core import sketch
 from repro.core.difuser import InfluenceResult, find_seeds_warm
+from repro.core.sketch import VISITED
 from repro.service.store import SketchStore, StoreEntry
 
 
@@ -117,6 +131,92 @@ def _probe_batch(m, verts, *, total_regs: int, estimator: str):
 
 
 # ---------------------------------------------------------------------------
+# Sharded batch kernels (device residency): shard-local partials + one
+# pmax combine under shard_map
+# ---------------------------------------------------------------------------
+
+
+def shard_partial_rows(m_loc, rows, row0: int, n_loc: int):
+    """The per-shard half of a sharded row gather: of the global plan-order
+    ``rows`` requested, return the ones this shard owns (rows ``[row0,
+    row0 + n_loc)`` of the planned matrix) and VISITED — the bottom of the
+    max lattice, inert under every downstream merge — for the rest.
+
+    Pure function of one shard's block, shared by the ``shard_map`` bodies
+    below and the numpy-twin equivalence tests (which combine per-shard
+    calls with ``np.maximum`` and must reproduce the host reductions
+    bit-for-bit)."""
+    local = rows - row0
+    owned = jnp.logical_and(local >= 0, local < n_loc)
+    safe = jnp.clip(local, 0, n_loc - 1)
+    return jnp.where(owned[..., None], m_loc[safe], jnp.int8(VISITED))
+
+
+# bounded: each slot pins a Mesh + three compiled shard_map executables, and
+# multi-tenant serving constructs a fresh serving mesh per placed graph —
+# unbounded caching would leak them for process lifetime as graphs turn over
+@lru_cache(maxsize=16)
+def _sharded_kernels(mesh, vertex_axis: str, n_loc: int, total_regs: int,
+                     estimator: str):
+    """Jitted shard_map executors for one (mesh, plan geometry, estimator).
+
+    The matrix argument's in_spec matches the ``NamedSharding`` placement of
+    a device-resident entry (rows over ``vertex_axis``), so serving consumes
+    the banks where they live; candidate arrays are replicated (they are
+    O(batch), the registers are O(n)). Each body computes its shard's
+    partial row-merge and combines with a single ``pmax`` over the vertex
+    axis; the estimator math then sees the exact merged vector the host
+    kernels see, making results bit-identical by construction.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def _merged(m_loc, rows):
+        row0 = jax.lax.axis_index(vertex_axis) * n_loc
+        return shard_partial_rows(m_loc, rows, row0, n_loc)
+
+    def _estimate(merged):
+        sums = sketch.partial_sums(merged, estimator=estimator)
+        return sketch.estimate_from_sums(sums, total_regs, estimator=estimator)
+
+    def spread_body(m_loc, cands):
+        part_rows = jnp.max(_merged(m_loc, cands), axis=1)     # (B, J) partial
+        return _estimate(jax.lax.pmax(part_rows, vertex_axis))
+
+    def marginal_body(m_loc, cand, committed):
+        with_c = jnp.concatenate([committed, cand[:, None]], axis=1)
+        est_with = spread_body(m_loc, with_c)
+        est_without = spread_body(m_loc, committed)
+        return est_with - est_without, est_with, est_without
+
+    def probe_body(m_loc, verts):
+        rows = jax.lax.pmax(_merged(m_loc, verts), vertex_axis)  # (B, J)
+        return _estimate(rows), jnp.max(rows, axis=-1).astype(jnp.int32)
+
+    m_spec = P(vertex_axis, None)
+
+    def _wrap(body, n_rep, out_specs):
+        return jax.jit(jax.shard_map(
+            body, mesh=mesh, in_specs=(m_spec,) + (P(),) * n_rep,
+            out_specs=out_specs, check_vma=False))
+
+    return {"spread": _wrap(spread_body, 1, P()),
+            "marginal": _wrap(marginal_body, 2, (P(), P(), P())),
+            "probe": _wrap(probe_body, 1, (P(), P()))}
+
+
+def _entry_kernels(entry: StoreEntry):
+    return _sharded_kernels(entry.mesh, entry.vertex_axis, entry.plan.n_loc,
+                            int(entry.x.shape[0]), entry.cfg.estimator)
+
+
+def _plan_rows(entry: StoreEntry, ids: np.ndarray) -> np.ndarray:
+    """Original vertex ids -> plan-order row indices (host side, O(batch)).
+    The sentinel (``graph.n_pad - 1``) maps to a padding row that is VISITED
+    everywhere in the planned layout, so sentinel inertness carries over."""
+    return entry.plan.perm[np.asarray(ids, dtype=np.int64)].astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
 # Lowering helpers (host side)
 # ---------------------------------------------------------------------------
 
@@ -134,12 +234,18 @@ def spread_estimates(entry: StoreEntry, sets: Sequence[tuple],
                      length: int | None = None) -> np.ndarray:
     """Batch of SpreadEstimate queries against one store entry. ``length``
     overrides the padded set length (the engine rounds it to a power of two
-    to bound jit specializations)."""
+    to bound jit specializations). Device-resident entries serve the
+    shard-local lowering; host entries the canonical jit — bit-identical."""
     if length is None:
         length = max((len(s) for s in sets), default=1)
     cands = pad_candidate_sets(sets, entry.graph.n_pad - 1, length)
-    est = _spread_batch(entry.matrix, jnp.asarray(cands),
-                        total_regs=entry.x.shape[0], estimator=entry.cfg.estimator)
+    if entry.residency == "device":
+        est = _entry_kernels(entry)["spread"](
+            entry.planned_matrix(), jnp.asarray(_plan_rows(entry, cands)))
+    else:
+        est = _spread_batch(entry.matrix, jnp.asarray(cands),
+                            total_regs=entry.x.shape[0],
+                            estimator=entry.cfg.estimator)
     return np.asarray(est)
 
 
@@ -149,17 +255,27 @@ def marginal_gains(entry: StoreEntry, cands: Sequence[int],
     if length is None:
         length = max((len(s) for s in committed), default=1)
     comm = pad_candidate_sets(committed, entry.graph.n_pad - 1, length)
-    gain, _, _ = _marginal_batch(
-        entry.matrix, jnp.asarray(np.asarray(cands, dtype=np.int32)),
-        jnp.asarray(comm), total_regs=entry.x.shape[0],
-        estimator=entry.cfg.estimator)
+    cands = np.asarray(cands, dtype=np.int32)
+    if entry.residency == "device":
+        gain, _, _ = _entry_kernels(entry)["marginal"](
+            entry.planned_matrix(), jnp.asarray(_plan_rows(entry, cands)),
+            jnp.asarray(_plan_rows(entry, comm)))
+    else:
+        gain, _, _ = _marginal_batch(
+            entry.matrix, jnp.asarray(cands), jnp.asarray(comm),
+            total_regs=entry.x.shape[0], estimator=entry.cfg.estimator)
     return np.asarray(gain)
 
 
 def coverage_probes(entry: StoreEntry, verts: Sequence[int]) -> tuple[np.ndarray, np.ndarray]:
-    est, max_reg = _probe_batch(
-        entry.matrix, jnp.asarray(np.asarray(verts, dtype=np.int32)),
-        total_regs=entry.x.shape[0], estimator=entry.cfg.estimator)
+    verts = np.asarray(verts, dtype=np.int32)
+    if entry.residency == "device":
+        est, max_reg = _entry_kernels(entry)["probe"](
+            entry.planned_matrix(), jnp.asarray(_plan_rows(entry, verts)))
+    else:
+        est, max_reg = _probe_batch(
+            entry.matrix, jnp.asarray(verts),
+            total_regs=entry.x.shape[0], estimator=entry.cfg.estimator)
     return np.asarray(est), np.asarray(max_reg)
 
 
@@ -167,8 +283,29 @@ def top_k_seeds(store: SketchStore, entry: StoreEntry, k: int) -> InfluenceResul
     """Warm-start Alg. 4 from the cached matrix. The lazy-rebuild check: a
     stale entry (edge removals since the last build) is rebuilt pristine
     first and the fresh matrix written back into the store, so this query —
-    and every later one — serves from a sound index."""
+    and every later one — serves from a sound index. Device-resident entries
+    run the K rounds under shard_map straight off the placed row blocks."""
     if entry.stale:
         entry = store.rebuild(entry.key)
+    if entry.residency == "device":
+        from repro.core.distributed import (_partition_for_plan,
+                                            find_seeds_warm_distributed)
+        from repro.runtime.spec import RunSpec
+
+        sim_axes = tuple(ax for ax in entry.mesh.axis_names
+                         if ax != entry.vertex_axis)
+        dcfg = RunSpec.from_config(
+            entry.cfg, vertex_axis=entry.vertex_axis,
+            sim_axes=sim_axes).distributed_config()
+        # the bucket partition is the cold-build-grade host cost of this
+        # path — cache it against the version so warm top-k pays it once
+        # per (graph, plan) state, not once per query
+        if (entry._serving_part_cache is None
+                or entry._serving_part_cache[0] != entry.version):
+            entry._serving_part_cache = (entry.version, _partition_for_plan(
+                entry.graph, entry.mesh, dcfg, entry.x, entry.plan))
+        return find_seeds_warm_distributed(
+            entry.graph, k, entry.mesh, dcfg, entry.planned_matrix(),
+            entry.plan, entry.x, part=entry._serving_part_cache[1])
     return find_seeds_warm(entry.graph, k, entry.cfg, matrix=entry.matrix,
                            x=entry.x, edges=entry.device_edges())

@@ -18,9 +18,11 @@ delta repair, future per-device placement).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -63,7 +65,17 @@ class StoreKey:
 
 @dataclasses.dataclass
 class StoreEntry:
-    """One resident index. ``banks[b]`` is int8[n_pad, J/num_banks] on device."""
+    """One resident index. ``banks[b]`` is int8[n_pad, J/num_banks] on device.
+
+    Residency: ``"host"`` keeps the banks in canonical (original-id) row
+    order on the default device — the historical single/serial layout.
+    ``"device"`` (via :meth:`place_on_mesh`) keeps each bank's rows in the
+    partition plan's order, placed as row blocks across a mesh with
+    ``NamedSharding`` (shard ``v`` of the plan owns the device holding rows
+    ``[v*n_loc, (v+1)*n_loc)``): ``planned_matrix()`` then IS the resident
+    array, shard-local query reductions serve off it without a gather, and
+    ``matrix`` becomes the gather-to-host fallback behind the same API.
+    """
 
     key: StoreKey
     graph: Graph                 # dst-sorted serving layout
@@ -77,9 +89,16 @@ class StoreEntry:
     staleness_frac: float = 0.0  # removed-edge fraction since last rebuild
     rebuilds: int = 0
     plan: Optional[PartitionPlan] = None   # vertex-shard plan (mesh residency)
+    residency: str = "host"      # "host" | "device" (row order of banks)
+    mesh: Optional[object] = None          # jax Mesh of a device-placed entry
+    vertex_axis: str = "data"              # mesh axis the row blocks shard on
     _matrix_cache: Optional[tuple] = None  # (version, concatenated matrix)
     _edges_cache: Optional[tuple] = None   # (version, (src, dst, h, lo, thr) device)
     _planned_cache: Optional[tuple] = None  # (version, plan-row-order matrix)
+    _serving_part_cache: Optional[tuple] = None  # (version, Partition2D) —
+    #   the bucketed partition the device-resident warm TopKSeeds sweeps;
+    #   its O(m * mu_s) host build is the dominant warm-serving cost, so it
+    #   is cached like the edge operands (deltas bump the version)
 
     @property
     def num_banks(self) -> int:
@@ -90,13 +109,30 @@ class StoreEntry:
         return self.x.shape[0] // len(self.banks)
 
     @property
+    def serving_backend(self) -> str:
+        """Which execution path answers queries against this entry —
+        ``"mesh:device"`` (shard-local reductions on the placed banks) or
+        ``"single:host"`` (jitted reductions on the canonical matrix).
+        Recorded per batch in :class:`~repro.service.engine.QueryResult`."""
+        return "mesh:device" if self.residency == "device" else "single:host"
+
+    @property
     def matrix(self) -> jnp.ndarray:
-        """Full int8[n_pad, J] register matrix (bank concatenation).
+        """Full int8[n_pad, J] register matrix in canonical (original-id) row
+        order — the host-order serving layout.
 
         The concatenation is cached against ``version`` so multi-bank entries
         don't repeat the O(n_pad * J) device copy on every query batch; every
-        banks mutation (rebuild, delta, set_matrix) bumps the version.
+        banks mutation (rebuild, delta, set_matrix) bumps the version. On a
+        device-resident entry this is the *gather* fallback: the plan-order
+        row blocks are un-permuted back to canonical order (shard-local
+        serving never calls it).
         """
+        if self.residency == "device":
+            if self._matrix_cache is None or self._matrix_cache[0] != self.version:
+                perm = jnp.asarray(self.plan.perm[: self.graph.n_pad])
+                self._matrix_cache = (self.version, self.planned_matrix()[perm])
+            return self._matrix_cache[1]
         if len(self.banks) == 1:
             return self.banks[0]
         if self._matrix_cache is None or self._matrix_cache[0] != self.version:
@@ -129,22 +165,132 @@ class StoreEntry:
         of the plan owns contiguous rows ``[v*n_loc, (v+1)*n_loc)``) — the
         layout a mesh-sharded store bank slices per device. Cached against
         ``version``; rows past ``n_pad`` of the plan are padding (VISITED
-        everywhere), exactly like the distributed runtime's."""
+        everywhere), exactly like the distributed runtime's. On a
+        device-resident entry this is the resident array itself — sharded
+        over the mesh's vertex axis, no data movement."""
         if self.plan is None:
             raise ValueError("entry has no partition plan attached")
         if self._planned_cache is None or self._planned_cache[0] != self.version:
-            m = self.matrix
-            n_pad = self.plan.n_pad
-            if m.shape[0] < n_pad:  # plan pads further than the graph did
-                pad = jnp.full((n_pad - m.shape[0], m.shape[1]), jnp.int8(-1))
-                m = jnp.concatenate([m, pad], axis=0)
-            self._planned_cache = (self.version, m[jnp.asarray(self.plan.inv_perm)])
+            if self.residency == "device":
+                pm = (self.banks[0] if len(self.banks) == 1
+                      else jnp.concatenate(self.banks, axis=1))
+                pm = jax.device_put(pm, self._row_sharding())
+            else:
+                pm = self._to_plan_order(self.matrix)
+            self._planned_cache = (self.version, pm)
         return self._planned_cache[1]
 
+    # ------------------------------------------------------------------
+    # Residency (docs/service.md, "Sharded serving")
+    # ------------------------------------------------------------------
+
+    def _row_sharding(self):
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        return NamedSharding(self.mesh, P(self.vertex_axis, None))
+
+    def _to_plan_order(self, m: jnp.ndarray) -> jnp.ndarray:
+        """Canonical rows -> plan-order rows, padded to ``plan.n_pad``."""
+        n_pad = self.plan.n_pad
+        if m.shape[0] < n_pad:  # plan pads further than the graph did
+            pad = jnp.full((n_pad - m.shape[0], m.shape[1]), jnp.int8(-1))
+            m = jnp.concatenate([m, pad], axis=0)
+        return m[jnp.asarray(self.plan.inv_perm)]
+
+    def _place_banks(self, pm) -> jnp.ndarray:
+        """Place a plan-order matrix and its per-bank column slices as
+        row-block-sharded device arrays; returns the placed matrix. The one
+        spot the NamedSharding placement happens (place_on_mesh and every
+        device-residency mutation go through it)."""
+        sh = self._row_sharding()
+        pm = jax.device_put(jnp.asarray(pm, jnp.int8), sh)
+        j_loc = self.regs_per_bank
+        self.banks = [jax.device_put(pm[:, b * j_loc:(b + 1) * j_loc], sh)
+                      for b in range(self.num_banks)]
+        return pm
+
+    def _install_planned(self, pm: jnp.ndarray) -> None:
+        """Split a plan-order matrix into placed row-block banks (device
+        residency) and make it the new resident state (version bump)."""
+        pm = self._place_banks(pm)
+        self.version += 1
+        self._planned_cache = (self.version, pm)
+        self._matrix_cache = None
+
+    def place_on_mesh(self, mesh, vertex_axis: str = "data") -> "StoreEntry":
+        """Pin this entry's banks to ``mesh`` as plan-order row blocks.
+
+        Each bank becomes ``int8[plan.n_pad, J_loc]`` with rows in the
+        attached plan's order, sharded over ``vertex_axis`` via
+        ``NamedSharding`` — shard ``v`` of the plan lives on device ``v``.
+        Requires a plan with ``mu_v == mesh.shape[vertex_axis]`` and a mesh
+        whose other axes are trivial (rows are the only sharded dim; the
+        sample space splits into *banks*, not mesh columns). Idempotent
+        content-wise: placement is a layout change, not a version bump.
+        """
+        if self.plan is None:
+            raise ValueError("attach a partition plan before device placement "
+                             "(SketchStore.attach_plan)")
+        if mesh.shape[vertex_axis] != self.plan.mu_v:
+            raise ValueError(
+                f"plan has mu_v={self.plan.mu_v} row blocks but mesh axis "
+                f"{vertex_axis!r} is {mesh.shape[vertex_axis]}-way")
+        if math.prod(mesh.shape.values()) != self.plan.mu_v:
+            raise ValueError(
+                "serving meshes shard rows only: every non-vertex axis must "
+                f"have size 1, got shape {dict(mesh.shape)}")
+        canonical = self.matrix      # computed from the current layout
+        self.mesh, self.vertex_axis = mesh, vertex_axis
+        self.residency = "device"
+        pm = self._place_banks(self._to_plan_order(canonical))
+        self._planned_cache = (self.version, pm)
+        self._matrix_cache = (self.version, canonical)
+        return self
+
+    def to_host(self) -> "StoreEntry":
+        """Undo :meth:`place_on_mesh`: back to canonical host-order banks."""
+        if self.residency != "device":
+            return self
+        canonical = jnp.asarray(self.matrix)
+        self.residency, self.mesh = "host", None
+        j_loc = self.regs_per_bank
+        self.banks = [canonical[:, b * j_loc:(b + 1) * j_loc]
+                      for b in range(self.num_banks)]
+        self._matrix_cache = (self.version, canonical)
+        self._planned_cache = None
+        return self
+
     def set_matrix(self, m: jnp.ndarray) -> None:
-        """Replace the resident matrix, preserving the bank split."""
+        """Replace the resident matrix (canonical row order), preserving the
+        bank split and the entry's residency."""
+        if self.residency == "device":
+            self._install_planned(self._to_plan_order(jnp.asarray(m, jnp.int8)))
+            return
         j_loc = self.regs_per_bank
         self.banks = [m[:, b * j_loc:(b + 1) * j_loc] for b in range(self.num_banks)]
+        self.version += 1
+
+    def set_planned_matrix(self, pm) -> None:
+        """Replace the resident matrix from a plan-order array (the shard
+        repair output) — a device-resident entry installs it as-is (still
+        sharded); a host entry un-permutes back to canonical order."""
+        if self.residency == "device":
+            self._install_planned(pm)
+            return
+        canon = jnp.asarray(pm, jnp.int8)[
+            jnp.asarray(self.plan.perm[: self.graph.n_pad])]
+        self.set_matrix(canon)
+
+    def install_canonical_banks(self, banks: list) -> None:
+        """Adopt freshly built canonical-order banks (the rebuild path),
+        preserving residency: a device-resident entry re-places the new
+        matrix as plan-order row blocks on its mesh."""
+        if self.residency == "device":
+            m = banks[0] if len(banks) == 1 else jnp.concatenate(banks, axis=1)
+            self._install_planned(self._to_plan_order(jnp.asarray(m, jnp.int8)))
+            return
+        self.banks = list(banks)
         self.version += 1
 
 
@@ -255,12 +401,11 @@ class SketchStore:
         stale, or on explicit request). Clears staleness, bumps version."""
         entry = self._entries[key]
         banks, iters, dt, edges = self._build_banks(entry.graph, entry.cfg, entry.x)
-        entry.banks = banks
+        entry.install_canonical_banks(banks)   # device entries re-place
         entry.build_iters = iters
         entry.build_time_s = dt
         entry.stale = False
         entry.staleness_frac = 0.0
-        entry.version += 1
         entry.rebuilds += 1
         entry.prime_edges_cache(edges)
         return entry
@@ -275,10 +420,18 @@ class SketchStore:
         distributed delta repair keys on. Plans survive deltas/rebuilds (the
         vertex set is fixed) and are persisted by ``save``/``load``."""
         entry = self._entries[key]
+        if entry.residency == "device":
+            raise ValueError("entry is device-resident under its current "
+                             "plan; to_host() before attaching another")
         plan.validate(entry.graph)
         entry.plan = plan
         entry._planned_cache = None
         return entry
+
+    def place(self, key: StoreKey, mesh, *,
+              vertex_axis: str = "data") -> StoreEntry:
+        """Convenience: :meth:`StoreEntry.place_on_mesh` by key."""
+        return self._entries[key].place_on_mesh(mesh, vertex_axis=vertex_axis)
 
     # ------------------------------------------------------------------
     # Persistence
@@ -316,14 +469,22 @@ class SketchStore:
             max_cascade_iters=e.cfg.max_cascade_iters,
             edge_chunk=e.cfg.edge_chunk,
             build_iters=e.build_iters, version=e.version,
+            residency=np.str_(e.residency),
             stale=e.stale, staleness_frac=e.staleness_frac)
 
-    def load(self, path: str) -> StoreEntry:
+    def load(self, path: str, *, mesh=None,
+             vertex_axis: str = "data") -> StoreEntry:
         """Restore an entry saved by ``save`` (skipping the build fixpoint).
 
         Snapshots from before the diffusion-model zoo carry no ``model``
         field; they are re-keyed on load under the backward-compatible
-        default (``wc`` — exactly the sampling they were built with)."""
+        default (``wc`` — exactly the sampling they were built with).
+
+        ``mesh`` round-trips a device-resident layout: an entry saved with
+        ``residency="device"`` (the plan rides the snapshot) is re-placed as
+        plan-order row blocks on the given mesh. Without a mesh the entry
+        loads host-order — same answers, gather-path serving — and an
+        explicit ``mesh`` also places snapshots saved host-order."""
         z = np.load(self._npz_path(path))
         cfg = DiFuserConfig(
             num_registers=int(z["num_registers"]), seed=int(z["seed"]),
@@ -354,4 +515,22 @@ class SketchStore:
                 g.n, int(z["plan_mu_v"]), int(z["plan_mu_s"]),
                 z["plan_perm"], strategy=str(z["plan_strategy"]))
         self._entries[key] = entry
+        saved_residency = (str(z["residency"])
+                           if "residency" in getattr(z, "files", ()) else "host")
+        if mesh is not None:
+            if entry.plan is None:
+                raise ValueError(
+                    "load(mesh=...) asked for device placement but the "
+                    "snapshot carries no partition plan to place with")
+            entry.place_on_mesh(mesh, vertex_axis=vertex_axis)
+        elif saved_residency == "device":
+            # a device snapshot restored without a mesh serves host-order —
+            # bit-identical answers through the gather fallback, but slower
+            # than the layout it was saved with, so say so
+            import warnings
+
+            warnings.warn(
+                "snapshot was saved device-resident; pass load(mesh=...) to "
+                "restore the placed row-block layout (serving host-order "
+                "for now — identical answers, gather path)", stacklevel=2)
         return entry

@@ -1,5 +1,5 @@
 """HLO collective parser units + a miniature dry-run (8 fake devices,
-subprocess) covering LM train/prefill/decode and the IM shard_map cell."""
+subprocess) covering the IM shard_map cell."""
 import json
 import os
 import subprocess
@@ -53,38 +53,12 @@ def test_roofline_terms():
 MINI_DRYRUN = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import json, dataclasses
-import jax
-import jax.numpy as jnp
+import json
 from repro.launch.mesh import make_mesh
-from repro.launch import specs as S
-from repro.configs import SHAPES, get_reduced
-from repro.models.sharding import activation_mesh, batch_specs, cache_specs, param_specs, to_shardings
-from repro.train.optimizer import make_optimizer, specs_for_state
-from repro.train.train_step import TrainConfig, make_train_step
-from repro.serve.engine import make_serve_step
 from repro.utils.hlo import collective_stats
 
 out = {}
 mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
-shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64, global_batch=8)
-
-for arch in ["tinyllama-1.1b", "deepseek-moe-16b", "mamba2-780m", "whisper-medium"]:
-    cfg = get_reduced(arch, vocab_size=512)
-    with activation_mesh(mesh):
-        pspecs = param_specs(cfg, mesh)
-        psh = to_shardings(pspecs, mesh)
-        opt = make_optimizer(cfg.optimizer)
-        oshapes = S.opt_state_shapes(cfg, opt)
-        ospecs = specs_for_state(oshapes, pspecs)
-        step = make_train_step(cfg, opt, TrainConfig(), mesh=mesh)
-        fn = jax.jit(step, in_shardings=(psh, to_shardings(ospecs, mesh),
-                                         to_shardings(batch_specs(cfg, mesh, batch=8), mesh)))
-        lowered = fn.lower(S.param_shapes(cfg), oshapes, S.train_batch_specs(cfg, shape))
-        compiled = lowered.compile()
-        coll = collective_stats(compiled.as_text())
-        out[arch] = {"flops": compiled.cost_analysis()["flops"],
-                     "wire": coll.wire_bytes, "ok": True}
 
 # IM cell on the mini mesh
 from repro.launch.dryrun import lower_im_cell, IM_CELLS
@@ -112,17 +86,6 @@ def mini_dryrun():
                           capture_output=True, text=True, timeout=1200)
     assert proc.returncode == 0, proc.stderr[-3000:]
     return json.loads(proc.stdout.strip().splitlines()[-1])
-
-
-def test_mini_dryrun_all_families_compile(mini_dryrun):
-    for arch in ("tinyllama-1.1b", "deepseek-moe-16b", "mamba2-780m", "whisper-medium"):
-        assert mini_dryrun[arch]["ok"]
-        assert mini_dryrun[arch]["flops"] > 0
-
-
-def test_mini_dryrun_train_has_collectives(mini_dryrun):
-    """DP gradient reduction must appear as wire traffic on the mini mesh."""
-    assert mini_dryrun["tinyllama-1.1b"]["wire"] > 0
 
 
 def test_mini_dryrun_im_cell_compiles_with_ring(mini_dryrun):

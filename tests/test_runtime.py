@@ -112,7 +112,7 @@ def test_registry_reports_capabilities():
             for name in ("single", "serial", "mesh")}
     assert not caps["single"].distributed and not caps["single"].needs_mesh
     assert caps["serial"].distributed and caps["serial"].shard_repair
-    assert caps["mesh"].needs_mesh and not caps["mesh"].shard_repair
+    assert caps["mesh"].needs_mesh and caps["mesh"].shard_repair
     avail = available_backends()
     assert avail["single"][0] and avail["serial"][0]
 
