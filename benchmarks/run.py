@@ -61,6 +61,15 @@ def main() -> None:
         "kernels": lambda: kernels_micro.main(scale=10 if args.fast else 12),
         "roofline": roofline_report.main,
     }
+    # --fast (the CI sweep) records the run's spans + metrics as artifacts
+    # next to the BENCH_*.json records: BENCH_trace.json opens in Perfetto,
+    # BENCH_metrics.jsonl is the registry snapshot
+    recorder = None
+    if args.fast:
+        from repro.obs import trace as obs_trace
+
+        recorder = obs_trace.get_recorder().start()
+
     print("name,us_per_call,derived")
     for name, job in jobs.items():
         if args.only and args.only not in name:
@@ -71,6 +80,15 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"{name}.ERROR,0,{type(e).__name__}: {e}", file=sys.stdout)
         print(f"{name}.total_s,{(time.time()-t0)*1e6:.0f},done")
+
+    if recorder is not None:
+        from repro.obs import metrics as obs_metrics
+
+        recorder.stop()
+        n_spans = recorder.save_chrome_trace("BENCH_trace.json")
+        n_series = obs_metrics.registry().write_jsonl("BENCH_metrics.jsonl")
+        print(f"obs.trace,0,{n_spans} spans -> BENCH_trace.json")
+        print(f"obs.metrics,0,{n_series} series -> BENCH_metrics.jsonl")
 
     if args.baseline_dir:
         from benchmarks import trend

@@ -13,12 +13,12 @@ perf trajectory of each execution path (``benchmarks/run.py --fast`` does).
 from __future__ import annotations
 
 import json
-import time
 
 import numpy as np
 
 from benchmarks.common import emit
 from repro.graphs import rmat_graph
+from repro.obs import trace
 
 
 def main(scale: int = 10, registers: int = 256, k: int = 8, seed: int = 5,
@@ -44,18 +44,22 @@ def main(scale: int = 10, registers: int = 256, k: int = 8, seed: int = 5,
             record["backends"][name] = {"available": False, "reason": why}
             continue
         sess = InfluenceSession(g, spec)
-        t0 = time.perf_counter()
-        res = sess.find_seeds(k)
-        cold_s = time.perf_counter() - t0
+        # timed sync spans instead of bare perf_counter pairs: JAX dispatch
+        # is async, so the un-synced timing under-reported device execution
+        with trace.span(f"bench.{name}.cold", phase="select",
+                        timed=True) as sp:
+            res = sp.sync(sess.find_seeds(k))
+        cold_s = sp.duration_s
         if seeds_ref is None:
             seeds_ref = res.seeds
         identical = bool(np.array_equal(res.seeds, seeds_ref))
         emit(f"runtime.{name}.cold", cold_s * 1e6,
              f"seeds_per_s={k / cold_s:.2f} identical={int(identical)}")
         entry = sess.entry()          # bank build through this backend
-        t0 = time.perf_counter()
-        warm = sess.find_seeds_warm(k)
-        warm_s = time.perf_counter() - t0
+        with trace.span(f"bench.{name}.warm", phase="select",
+                        timed=True) as sp:
+            warm = sp.sync(sess.find_seeds_warm(k))
+        warm_s = sp.duration_s
         emit(f"runtime.{name}.warm", warm_s * 1e6,
              f"seeds_per_s={k / warm_s:.2f} build_s={entry.build_time_s:.3f}")
         record["backends"][name] = {

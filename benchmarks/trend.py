@@ -7,11 +7,14 @@ previous CI run's artifacts and fail on significant regressions.
 ``benchmarks/run.py --fast`` calls :func:`compare` automatically when a
 baseline directory is configured (``--baseline-dir`` / the
 ``BENCH_BASELINE_DIR`` env var, which CI points at the downloaded artifact
-of the previous run) and exits non-zero when any tracked throughput metric
-— per-backend cold/warm seeds/sec from ``BENCH_runtime.json``, host/device
-qps from ``BENCH_service.json`` — dropped more than ``threshold`` (20% by
-default). A missing baseline (first run, expired artifact) skips cleanly:
-the gate compares trajectories, it doesn't demand one exists.
+of the previous run) and exits non-zero when any tracked metric moved the
+wrong way by more than ``threshold`` (20% by default). Metrics carry a
+direction: throughput metrics (per-backend cold/warm seeds/sec from
+``BENCH_runtime.json``, host/device qps from ``BENCH_service.json``) are
+higher-is-better and regress on drops; tail-latency metrics (host/device
+p99 ms from ``BENCH_service.json``) are lower-is-better and regress on
+rises. A missing baseline (first run, expired artifact) skips cleanly: the
+gate compares trajectories, it doesn't demand one exists.
 """
 from __future__ import annotations
 
@@ -33,22 +36,31 @@ def _load(path: str) -> Optional[dict]:
         return None
 
 
-def _runtime_metrics(rec: dict) -> Iterator[tuple[str, float]]:
-    """(metric name, seeds/sec) per available backend, cold + warm."""
+#: metric directions: "higher" regresses on drops, "lower" on rises
+HIGHER, LOWER = "higher", "lower"
+
+
+def _runtime_metrics(rec: dict) -> Iterator[tuple[str, float, str]]:
+    """(metric name, seeds/sec, direction) per available backend."""
     for name, b in (rec.get("backends") or {}).items():
         if not b.get("available"):
             continue
         for kind in ("seeds_per_s_cold", "seeds_per_s_warm"):
             if b.get(kind):
-                yield f"{name}.{kind}", float(b[kind])
+                yield f"{name}.{kind}", float(b[kind]), HIGHER
 
 
-def _service_metrics(rec: dict) -> Iterator[tuple[str, float]]:
-    """(metric name, qps) for the host and device serving rows."""
+def _service_metrics(rec: dict) -> Iterator[tuple[str, float, str]]:
+    """(metric name, value, direction) for host/device serving rows:
+    qps (higher-is-better) and tail latency p99 (lower-is-better)."""
     for row in ("host", "device"):
         stats = rec.get(row)
-        if stats and stats.get("qps"):
-            yield f"{row}.qps", float(stats["qps"])
+        if not stats:
+            continue
+        if stats.get("qps"):
+            yield f"{row}.qps", float(stats["qps"]), HIGHER
+        if stats.get("p99_ms"):
+            yield f"{row}.p99_ms", float(stats["p99_ms"]), LOWER
 
 
 _METRICS = {"BENCH_runtime.json": _runtime_metrics,
@@ -69,18 +81,23 @@ def compare(baseline_dir: str, files=DEFAULT_FILES, *,
             emit(f"trend.{name}", 0.0, "skipped: no baseline artifact")
             continue
         metrics_fn = _METRICS.get(name, _runtime_metrics)
-        baseline = dict(metrics_fn(base))
-        for metric, new in metrics_fn(cur):
+        baseline = {m: v for m, v, _ in metrics_fn(base)}
+        for metric, new, direction in metrics_fn(cur):
             old = baseline.get(metric)
             if not old:
                 emit(f"trend.{name}.{metric}", 0.0, f"new metric ({new:.2f})")
                 continue
             ratio = new / old
-            verdict = "ok" if ratio >= 1.0 - threshold else "REGRESSION"
+            if direction == LOWER:
+                ok = ratio <= 1.0 + threshold      # latency rising = bad
+            else:
+                ok = ratio >= 1.0 - threshold      # throughput dropping = bad
+            verdict = "ok" if ok else "REGRESSION"
             if verdict == "REGRESSION":
                 regressions += 1
             emit(f"trend.{name}.{metric}", 0.0,
-                 f"{verdict} {new:.2f} vs {old:.2f} ({ratio:.2f}x)")
+                 f"{verdict} {new:.2f} vs {old:.2f} ({ratio:.2f}x, "
+                 f"{direction}-is-better)")
     return regressions
 
 

@@ -24,6 +24,7 @@ __version__ = "1.0.0"
 
 #: Modules that make up the supported API surface (see the docstring).
 IM_API_MODULES = (
+    "repro.obs",
     "repro.runtime",
     "repro.core",
     "repro.diffusion",

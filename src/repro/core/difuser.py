@@ -33,6 +33,7 @@ from repro.core.sketch import VISITED, count_visited
 from repro.diffusion.constants import DEFAULT_MODEL
 from repro.graphs.structs import Graph
 from repro.kernels import ops
+from repro.obs import trace
 
 
 def resolve_model(spec: str):
@@ -176,13 +177,16 @@ def _find_seeds_single(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
     cfg = config or DiFuserConfig()
     g, x = normalize_inputs(g, cfg, x)
     src, dst, h, lo, thr = edge_operands(g, cfg)
-    seeds, gains, scores, rebuilds, build_iters = _find_seeds_jit(
-        src, dst, h, lo, thr, jnp.asarray(x),
-        n_pad=g.n_pad, k=k, n_real=g.n, num_regs=cfg.num_registers, seed=cfg.seed,
-        estimator=cfg.estimator, impl=cfg.impl, edge_chunk=cfg.edge_chunk,
-        max_prop=cfg.max_propagate_iters, max_casc=cfg.max_cascade_iters,
-        rebuild_threshold=cfg.rebuild_threshold,
-        predicate=resolve_model(cfg.model).predicate)
+    with trace.span("single.find_seeds", phase="select", k=k, n=g.n,
+                    registers=cfg.num_registers, model=cfg.model) as sp:
+        seeds, gains, scores, rebuilds, build_iters = sp.sync(_find_seeds_jit(
+            src, dst, h, lo, thr, jnp.asarray(x),
+            n_pad=g.n_pad, k=k, n_real=g.n, num_regs=cfg.num_registers,
+            seed=cfg.seed, estimator=cfg.estimator, impl=cfg.impl,
+            edge_chunk=cfg.edge_chunk, max_prop=cfg.max_propagate_iters,
+            max_casc=cfg.max_cascade_iters,
+            rebuild_threshold=cfg.rebuild_threshold,
+            predicate=resolve_model(cfg.model).predicate))
     return InfluenceResult(
         seeds=np.asarray(seeds), est_gains=np.asarray(gains),
         scores=np.asarray(scores), rebuilds=np.asarray(rebuilds),
@@ -251,17 +255,21 @@ def build_sketch_matrix(g: Graph, config: Optional[DiFuserConfig] = None,
         g, x = normalize_inputs(g, cfg, x)
     src, dst, h, lo, thr = edges if edges is not None else edge_operands(g, cfg)
     predicate = resolve_model(cfg.model).predicate
-    if init_matrix is None:
-        m, iters = _build_matrix_jit(
-            src, dst, h, lo, thr, jnp.asarray(x), n_pad=g.n_pad, n_real=g.n,
-            num_regs=x.shape[0], seed=cfg.seed, impl=cfg.impl,
-            edge_chunk=cfg.edge_chunk, max_prop=cfg.max_propagate_iters,
-            reg_offset=reg_offset, predicate=predicate)
-    else:
-        m, iters = propagate_to_fixpoint(
-            init_matrix, src, dst, thr, jnp.asarray(x), h, lo, seed=cfg.seed,
-            impl=cfg.impl, edge_chunk=cfg.edge_chunk,
-            max_iters=cfg.max_propagate_iters, predicate=predicate)
+    with trace.span("single.build_matrix", phase="build", n=g.n,
+                    registers=int(x.shape[0]), reg_offset=reg_offset,
+                    warm=init_matrix is not None) as sp:
+        if init_matrix is None:
+            m, iters = _build_matrix_jit(
+                src, dst, h, lo, thr, jnp.asarray(x), n_pad=g.n_pad, n_real=g.n,
+                num_regs=x.shape[0], seed=cfg.seed, impl=cfg.impl,
+                edge_chunk=cfg.edge_chunk, max_prop=cfg.max_propagate_iters,
+                reg_offset=reg_offset, predicate=predicate)
+        else:
+            m, iters = propagate_to_fixpoint(
+                init_matrix, src, dst, thr, jnp.asarray(x), h, lo, seed=cfg.seed,
+                impl=cfg.impl, edge_chunk=cfg.edge_chunk,
+                max_iters=cfg.max_propagate_iters, predicate=predicate)
+        sp.sync(m)
     return m, int(iters), x
 
 
@@ -281,13 +289,15 @@ def find_seeds_warm(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
         g, x = normalize_inputs(g, cfg, x)
         edges = edge_operands(g, cfg)
     src, dst, h, lo, thr = edges
-    seeds, gains, scores, rebuilds = _seed_rounds_jit(
-        matrix, src, dst, h, lo, thr,
-        jnp.asarray(x), k=k, n_real=g.n, num_regs=x.shape[0], seed=cfg.seed,
-        estimator=cfg.estimator, impl=cfg.impl, edge_chunk=cfg.edge_chunk,
-        max_prop=cfg.max_propagate_iters, max_casc=cfg.max_cascade_iters,
-        rebuild_threshold=cfg.rebuild_threshold,
-        predicate=resolve_model(cfg.model).predicate)
+    with trace.span("single.warm_rounds", phase="select", k=k, n=g.n,
+                    registers=int(x.shape[0])) as sp:
+        seeds, gains, scores, rebuilds = sp.sync(_seed_rounds_jit(
+            matrix, src, dst, h, lo, thr,
+            jnp.asarray(x), k=k, n_real=g.n, num_regs=x.shape[0], seed=cfg.seed,
+            estimator=cfg.estimator, impl=cfg.impl, edge_chunk=cfg.edge_chunk,
+            max_prop=cfg.max_propagate_iters, max_casc=cfg.max_cascade_iters,
+            rebuild_threshold=cfg.rebuild_threshold,
+            predicate=resolve_model(cfg.model).predicate))
     return InfluenceResult(
         seeds=np.asarray(seeds), est_gains=np.asarray(gains),
         scores=np.asarray(scores), rebuilds=np.asarray(rebuilds),

@@ -54,6 +54,7 @@ from repro.core.sampling import fused_predicate
 from repro.core.sampling import make_x_vector
 from repro.core.sketch import VISITED
 from repro.graphs.structs import Graph
+from repro.obs import trace
 # host-side partition build moved to repro.partition; re-exported here for
 # backward compatibility (tests and dryrun historically imported from core)
 from repro.partition import (Partition2D, build_partition_2d,  # noqa: F401
@@ -346,7 +347,9 @@ def _find_seeds_distributed(g: Graph, k: int, mesh,
                   part.c_h, part.c_w, part.c_r, part.c_t, part.c_l):
         for step in field:
             args.append(jnp.asarray(step))
-    seeds, gains, scores, rebuilds, build_iters = fn(*args)
+    with trace.span("mesh.find_seeds", phase="select", k=k, mu_v=mu_v,
+                    mu_s=mu_s, schedule=cfg.schedule) as sp:
+        seeds, gains, scores, rebuilds, build_iters = sp.sync(fn(*args))
     res = InfluenceResult(
         seeds=np.asarray(seeds), est_gains=np.asarray(gains), scores=np.asarray(scores),
         rebuilds=np.asarray(rebuilds), propagate_iters=int(build_iters),
@@ -527,9 +530,11 @@ def build_matrix_distributed(g: Graph, mesh,
     for field in (part.p_h, part.p_w, part.p_r, part.p_t, part.p_l):
         for step in field:
             args.append(jnp.asarray(step))
-    m_planned, iters = fn(*args)
-    # un-permute planned rows back to original-id (canonical) order
-    m_canon = m_planned[jnp.asarray(part.plan.perm[: g.n_pad])]
+    with trace.span("mesh.build_matrix", phase="build", mu_v=mu_v,
+                    mu_s=mu_s, reg_offset=reg_offset) as sp:
+        m_planned, iters = sp.sync(fn(*args))
+        # un-permute planned rows back to original-id (canonical) order
+        m_canon = sp.sync(m_planned[jnp.asarray(part.plan.perm[: g.n_pad])])
     return m_canon, int(iters), part
 
 
@@ -612,7 +617,9 @@ def find_seeds_warm_distributed(g: Graph, k: int, mesh,
                   part.c_h, part.c_w, part.c_r, part.c_t, part.c_l):
         for step in field:
             args.append(jnp.asarray(step))
-    seeds, gains, scores, rebuilds, _ = fn(*args)
+    with trace.span("mesh.warm_rounds", phase="select", k=k,
+                    mu_v=part.mu_v, mu_s=part.mu_s) as sp:
+        seeds, gains, scores, rebuilds, _ = sp.sync(fn(*args))
     return InfluenceResult(
         seeds=np.asarray(seeds), est_gains=np.asarray(gains),
         scores=np.asarray(scores), rebuilds=np.asarray(rebuilds),
@@ -715,6 +722,9 @@ def repair_plan_shards_distributed(g: Graph, mesh,
     for field in (part.p_h, part.p_w, part.p_r, part.p_t, part.p_l):
         for step in field:
             args.append(jnp.asarray(step))
-    m_out, swept, sweeps = fn(*args)
+    with trace.span("mesh.repair", phase="repair",
+                    touched=len(tuple(touched))) as sp:
+        m_out, swept, sweeps = sp.sync(fn(*args))
+        sp.annotate(sweeps=int(sweeps))
     swept_t = tuple(int(v) for v in np.nonzero(np.asarray(swept))[0])
     return m_out, int(sweeps), swept_t

@@ -10,11 +10,15 @@ instead of hand-rolled mesh setup.
 from __future__ import annotations
 
 import argparse
+import contextlib
+import time
 
 from repro.graphs import barabasi_albert_graph, erdos_renyi_graph, rmat_graph
 from repro.graphs.io import load_snap_edgelist
+from repro.obs import metrics, trace
 
 
+@trace.traced("launch.make_graph", phase="other")
 def make_graph(spec: str, setting: str, seed: int):
     """Parse ``--graph`` specs: rmat:<scale> | rmat-skew:<scale> | er:<n> |
     ba:<n> | snap:<path>."""
@@ -61,4 +65,41 @@ def add_common_im_args(ap: argparse.ArgumentParser, *,
                           "jax + devices allow a sharded run, else serial, "
                           "else single)")
     grp.add_argument("--seed", type=int, default=0)
+    obs = ap.add_argument_group("observability (repro.obs)")
+    obs.add_argument("--trace", default=None, metavar="OUT.json",
+                     help="record spans and write Chrome trace-event JSON "
+                          "(open in ui.perfetto.dev; one lane per phase)")
+    obs.add_argument("--metrics", default=None, metavar="OUT.jsonl",
+                     help="write a JSONL metrics snapshot (counters/gauges/"
+                          "histograms) at exit")
     return ap
+
+
+@contextlib.contextmanager
+def observe(args):
+    """Wrap a driver run in the observability surface ``--trace`` /
+    ``--metrics`` request: start the span recorder when a trace path is
+    given, and at exit write the Chrome trace + metrics snapshot and print a
+    one-line span-coverage summary (top-level span seconds / wall seconds —
+    the "spans account for the run" acceptance number). No flags -> exact
+    historical behaviour (recorder stays off, nothing written)."""
+    trace_path = getattr(args, "trace", None)
+    metrics_path = getattr(args, "metrics", None)
+    rec = trace.get_recorder()
+    if trace_path:
+        rec.start()
+    t0 = time.perf_counter()
+    try:
+        yield rec
+    finally:
+        wall = time.perf_counter() - t0
+        if trace_path:
+            rec.stop()
+            n = rec.save_chrome_trace(trace_path)
+            cov = rec.top_level_seconds() / wall if wall > 0 else 0.0
+            print(f"trace: {n} spans -> {trace_path} "
+                  f"(lanes: {', '.join(sorted(rec.phases_seen()))}; "
+                  f"span coverage {cov * 100:.1f}% of {wall:.2f}s wall)")
+        if metrics_path:
+            n = metrics.registry().write_jsonl(metrics_path)
+            print(f"metrics: {n} series -> {metrics_path}")

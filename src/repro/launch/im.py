@@ -16,7 +16,8 @@ import argparse
 import time
 
 from repro.baselines import influence_score, ris_find_seeds
-from repro.launch.common import add_common_im_args, make_graph  # noqa: F401
+from repro.launch.common import (add_common_im_args, make_graph,  # noqa: F401
+                                 observe)
 # make_graph is re-exported: serve_im and the benchmarks import it from here
 
 
@@ -33,7 +34,11 @@ def run(argv=None) -> dict:
     ap.add_argument("--validate", action="store_true", help="score seeds with the MC oracle")
     ap.add_argument("--ris", action="store_true", help="also run the RIS/IMM baseline")
     args = ap.parse_args(argv)
+    with observe(args):
+        return _run(args)
 
+
+def _run(args) -> dict:
     from repro.runtime import RunSpec, run as run_im
 
     g = make_graph(args.graph, args.setting, args.seed)

@@ -17,7 +17,7 @@ import time
 
 import numpy as np
 
-from repro.launch.common import add_common_im_args, make_graph
+from repro.launch.common import add_common_im_args, make_graph, observe
 from repro.service import (CoverageProbe, InfluenceEngine, MarginalGain,
                            SketchStore, SpreadEstimate, TopKSeeds,
                            summarize_latencies)
@@ -69,7 +69,13 @@ def run(argv=None) -> dict:
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--save", default="", help="persist the index npz here")
     args = ap.parse_args(argv)
+    # --trace/--metrics wrap the whole serve run: build + query spans land
+    # in the Chrome trace, the registry snapshot is written at exit
+    with observe(args):
+        return _run(args)
 
+
+def _run(args) -> dict:
     from repro.runtime import InfluenceSession, RunSpec
 
     g = make_graph(args.graph, args.setting, args.seed)

@@ -1,0 +1,30 @@
+"""repro.obs — the seeing layer: tracing + metrics for every execution path.
+
+Two dependency-free modules (importable from anywhere in the repo, no jax
+at import time):
+
+  * :mod:`repro.obs.trace`   — hierarchical spans with a ``sync`` knob
+    (``block_until_ready`` on declared outputs at span exit, so GPU/TPU
+    time is attributed to the span that incurred it), a process-global
+    recorder that is a no-op when disabled, and Chrome trace-event JSON
+    export that opens in Perfetto — one lane per phase (plan / build /
+    fixpoint / select / ring / repair / query);
+  * :mod:`repro.obs.metrics` — counters, gauges, and streaming histograms
+    (p50/p95/p99 without storing samples) behind a named registry, exported
+    as a JSONL snapshot.
+
+Drivers expose both via ``--trace OUT.json`` / ``--metrics OUT.jsonl``
+(``python -m repro im|serve``); see docs/observability.md.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               counter, gauge, histogram, load_jsonl,
+                               registry)
+from repro.obs.trace import (PHASES, Recorder, Span, get_recorder, span,
+                             traced, tracing_enabled)
+
+__all__ = [
+    "PHASES", "Recorder", "Span", "get_recorder", "span", "traced",
+    "tracing_enabled",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "counter", "gauge",
+    "histogram", "load_jsonl", "registry",
+]

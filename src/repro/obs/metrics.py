@@ -1,0 +1,232 @@
+"""Counters, gauges, and streaming histograms behind a named registry.
+
+The numbers the repo's perf story argues from — ring bytes and bucket loads
+from the partition planner, repair sweep counts and dirty-shard fractions
+from delta repair, per-query-class latency and memo hit-rate from the
+engine, bank build time from the store — all land here, in one process-wide
+:class:`MetricsRegistry`, and export as a JSONL snapshot (one JSON object
+per line, the ``name``/``kind``/value schema :mod:`benchmarks.trend`
+consumes).
+
+Histograms are streaming: geometric buckets (growth factor 1.04, i.e.
+~2% relative resolution) hold counts only, so p50/p95/p99 come out of a
+few hundred integers regardless of sample count — no sample storage, no
+numpy dependency.
+
+Dependency-free and import-cycle-safe, like :mod:`repro.obs.trace`.
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+from typing import Dict, Iterable, Optional, Tuple
+
+_GROWTH = 1.04               # bucket growth factor: <= ~2% relative error
+_LOG_GROWTH = math.log(_GROWTH)
+_V0 = 1e-9                   # smallest resolvable magnitude (1 ns in seconds)
+
+
+class Counter:
+    """Monotone event count."""
+
+    __slots__ = ("value",)
+    kind = "counter"
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def summary(self) -> dict:
+        return {"value": self.value}
+
+
+class Gauge:
+    """Last-written value (residency, imbalance, bytes...)."""
+
+    __slots__ = ("value",)
+    kind = "gauge"
+
+    def __init__(self):
+        self.value: float = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def summary(self) -> dict:
+        return {"value": self.value}
+
+
+class Histogram:
+    """Streaming distribution: p50/p95/p99 without storing samples.
+
+    Values are assigned to geometric buckets ``[_V0 * G^i, _V0 * G^(i+1))``;
+    a percentile query walks the cumulative counts and returns the matched
+    bucket's geometric midpoint, so the answer is within one bucket width
+    (~2% relative) of the exact order statistic. Non-positive values share
+    one underflow bucket reported as 0.0.
+    """
+
+    __slots__ = ("buckets", "count", "total", "min", "max", "unit")
+    kind = "histogram"
+
+    def __init__(self, unit: str = ""):
+        self.buckets: Dict[int, int] = {}
+        self.count = 0
+        self.total = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self.unit = unit
+
+    @staticmethod
+    def _index(v: float) -> int:
+        if v <= _V0:
+            return -1          # underflow bucket (zeros, negatives)
+        return int(math.log(v / _V0) / _LOG_GROWTH)
+
+    @staticmethod
+    def _midpoint(idx: int) -> float:
+        if idx < 0:
+            return 0.0
+        return _V0 * math.exp((idx + 0.5) * _LOG_GROWTH)
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        idx = self._index(v)
+        self.buckets[idx] = self.buckets.get(idx, 0) + 1
+        self.count += 1
+        self.total += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+
+    def percentile(self, q: float) -> float:
+        """Approximate q-th percentile (q in [0, 100])."""
+        if self.count == 0:
+            return 0.0
+        # nearest-rank on the cumulative bucket counts; exact min/max at the
+        # extremes so p0/p100 round-trip the observed range
+        if q <= 0:
+            return self.min
+        if q >= 100:
+            return self.max
+        rank = q / 100.0 * self.count
+        seen = 0
+        for idx in sorted(self.buckets):
+            seen += self.buckets[idx]
+            if seen >= rank:
+                mid = self._midpoint(idx)
+                return min(max(mid, self.min), self.max)
+        return self.max  # pragma: no cover - rank <= count always hits
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def summary(self) -> dict:
+        return {"count": self.count, "sum": self.total,
+                "min": self.min if self.count else 0.0,
+                "max": self.max if self.count else 0.0,
+                "mean": self.mean,
+                "p50": self.percentile(50), "p95": self.percentile(95),
+                "p99": self.percentile(99)}
+
+
+_MetricKey = Tuple[str, Tuple[Tuple[str, str], ...]]
+
+
+class MetricsRegistry:
+    """Named, tag-aware metric store. ``counter``/``gauge``/``histogram``
+    are get-or-create (same name+tags -> same instance), so call sites
+    don't thread metric objects around."""
+
+    def __init__(self):
+        self._metrics: Dict[_MetricKey, object] = {}
+        self._lock = threading.Lock()
+
+    @staticmethod
+    def _key(name: str, tags: dict) -> _MetricKey:
+        return name, tuple(sorted((str(k), str(v)) for k, v in tags.items()))
+
+    def _get(self, cls, name: str, tags: dict, **kw):
+        key = self._key(name, tags)
+        with self._lock:
+            m = self._metrics.get(key)
+            if m is None:
+                m = cls(**kw)
+                self._metrics[key] = m
+            elif not isinstance(m, cls):
+                raise TypeError(f"metric {name!r} already registered as "
+                                f"{type(m).__name__}, requested {cls.__name__}")
+        return m
+
+    def counter(self, name: str, **tags) -> Counter:
+        return self._get(Counter, name, tags)
+
+    def gauge(self, name: str, **tags) -> Gauge:
+        return self._get(Gauge, name, tags)
+
+    def histogram(self, name: str, *, unit: str = "", **tags) -> Histogram:
+        return self._get(Histogram, name, tags, unit=unit)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._metrics.clear()
+
+    # -- export ------------------------------------------------------------
+
+    def snapshot(self) -> Iterable[dict]:
+        """One JSON-ready dict per metric: ``{"name", "kind", "tags",
+        **summary}`` (histograms add ``unit`` and the percentile fields)."""
+        with self._lock:
+            items = list(self._metrics.items())
+        out = []
+        for (name, tags), m in sorted(items, key=lambda kv: kv[0]):
+            rec = {"name": name, "kind": m.kind, "tags": dict(tags)}
+            if isinstance(m, Histogram) and m.unit:
+                rec["unit"] = m.unit
+            rec.update(m.summary())
+            out.append(rec)
+        return out
+
+    def write_jsonl(self, path: str) -> int:
+        """Append-free JSONL snapshot (one metric per line); returns the
+        metric count written. The schema matches what
+        ``benchmarks/trend.py`` can diff across CI runs."""
+        snap = list(self.snapshot())
+        with open(path, "w") as f:
+            for rec in snap:
+                f.write(json.dumps(rec) + "\n")
+        return len(snap)
+
+
+_REGISTRY = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    """The process-global default registry all repo call sites use."""
+    return _REGISTRY
+
+
+def counter(name: str, **tags) -> Counter:
+    return _REGISTRY.counter(name, **tags)
+
+
+def gauge(name: str, **tags) -> Gauge:
+    return _REGISTRY.gauge(name, **tags)
+
+
+def histogram(name: str, *, unit: str = "", **tags) -> Histogram:
+    return _REGISTRY.histogram(name, unit=unit, **tags)
+
+
+def load_jsonl(path: str) -> list:
+    """Read a snapshot written by :meth:`MetricsRegistry.write_jsonl`."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

@@ -28,6 +28,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.graphs.structs import Graph
+from repro.obs import trace
 from repro.partition.plan import (PartitionPlan, SampledEdges, plan_partition,
                                   sample_edge_sets)
 
@@ -112,6 +113,7 @@ def _round_up(v: np.ndarray, block: int) -> np.ndarray:
     return v + (-v) % block
 
 
+@trace.traced("partition.build_buckets", phase="plan")
 def build_partition_2d(g: Graph, x: np.ndarray, mu_v: int, mu_s: int, *,
                        seed: int = 0, method: str = "fasst",
                        edge_block: int = 256, model: str = "wc",

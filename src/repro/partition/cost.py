@@ -21,6 +21,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs import metrics
+
 
 @dataclasses.dataclass(frozen=True)
 class PlanStats:
@@ -82,7 +84,7 @@ def measure_partition(part) -> PlanStats:
             padded += step.size
     strategy = part.plan.strategy if part.plan is not None else "block"
     per_shard = counts_p.sum(axis=(1, 2))
-    return PlanStats(
+    stats = PlanStats(
         source="measured", strategy=strategy, mu_v=part.mu_v, mu_s=part.mu_s,
         edges_per_shard=per_shard,
         edge_imbalance=_imbalance(part.edge_counts),
@@ -90,3 +92,8 @@ def measure_partition(part) -> PlanStats:
             np.concatenate([counts_p.reshape(-1), counts_c.reshape(-1)])),
         pad_waste_frac=float(1.0 - real / padded) if padded else 0.0,
         ring_bytes_per_sweep=part.comm_bytes_per_sweep)
+    metrics.gauge("partition.pad_waste_frac",
+                  strategy=strategy).set(stats.pad_waste_frac)
+    metrics.gauge("partition.measured_bucket_imbalance",
+                  strategy=strategy).set(stats.bucket_imbalance)
+    return stats

@@ -40,6 +40,7 @@ from typing import Callable, Dict, Optional, Tuple
 import numpy as np
 
 from repro.graphs.structs import Graph
+from repro.obs import metrics, trace
 from repro.partition.cost import PlanStats, predicted_stats
 
 
@@ -297,34 +298,42 @@ def plan_partition(g: Graph, mu_v: int, *, mu_s: int = 1,
     if fn is None:
         raise KeyError(f"unknown partition strategy {strategy!r}; "
                        f"registered: {sorted(_STRATEGIES)}")
-    n_pad = g.n_pad + ((-g.n_pad) % mu_v)
-    n_loc = n_pad // mu_v
-    c_e = _edge_multiplicity(g, x, mu_s, seed=seed, model=model, method=method,
-                             sampled=sampled)
-    w_v = _vertex_weights(g, c_e)
-    owner = np.asarray(fn(g, c_e, w_v, mu_v, n_loc, seed), dtype=np.int64)
-    if owner.shape[0] != g.n:
-        raise ValueError(f"strategy {strategy!r} assigned {owner.shape[0]} "
-                         f"vertices, expected {g.n}")
-    counts = np.bincount(owner, minlength=mu_v)
-    if counts.max(initial=0) > n_loc:
-        raise ValueError(f"strategy {strategy!r} overfilled a shard: "
-                         f"{counts.tolist()} vs capacity {n_loc}")
-    # padding ids fill the leftover slots, ascending id into ascending shard
-    free = n_loc - counts
-    pad_owner = np.repeat(np.arange(mu_v, dtype=np.int64), free)
-    owner_all = np.concatenate([owner, pad_owner])
-    # stable sort groups ids by owner, keeping ascending original id within
-    # each shard — block's identity assignment relabels to the identity
-    inv_perm = np.argsort(owner_all, kind="stable").astype(np.int32)
-    perm = np.empty_like(inv_perm)
-    perm[inv_perm] = np.arange(n_pad, dtype=np.int32)
+    with trace.span("partition.plan", phase="plan", strategy=strategy,
+                    mu_v=mu_v, mu_s=mu_s, n=g.n):
+        n_pad = g.n_pad + ((-g.n_pad) % mu_v)
+        n_loc = n_pad // mu_v
+        c_e = _edge_multiplicity(g, x, mu_s, seed=seed, model=model,
+                                 method=method, sampled=sampled)
+        w_v = _vertex_weights(g, c_e)
+        owner = np.asarray(fn(g, c_e, w_v, mu_v, n_loc, seed), dtype=np.int64)
+        if owner.shape[0] != g.n:
+            raise ValueError(f"strategy {strategy!r} assigned {owner.shape[0]} "
+                             f"vertices, expected {g.n}")
+        counts = np.bincount(owner, minlength=mu_v)
+        if counts.max(initial=0) > n_loc:
+            raise ValueError(f"strategy {strategy!r} overfilled a shard: "
+                             f"{counts.tolist()} vs capacity {n_loc}")
+        # padding ids fill the leftover slots, ascending id into ascending shard
+        free = n_loc - counts
+        pad_owner = np.repeat(np.arange(mu_v, dtype=np.int64), free)
+        owner_all = np.concatenate([owner, pad_owner])
+        # stable sort groups ids by owner, keeping ascending original id within
+        # each shard — block's identity assignment relabels to the identity
+        inv_perm = np.argsort(owner_all, kind="stable").astype(np.int32)
+        perm = np.empty_like(inv_perm)
+        perm[inv_perm] = np.arange(n_pad, dtype=np.int32)
 
-    if sampled is not None:
-        j_loc = int(sampled.x_shards.shape[1])
-    else:
-        j_loc = (np.asarray(x).shape[0] // mu_s) if x is not None else 0
-    stats = predicted_stats(g, strategy, perm, c_e, mu_v, mu_s, n_loc, j_loc)
+        if sampled is not None:
+            j_loc = int(sampled.x_shards.shape[1])
+        else:
+            j_loc = (np.asarray(x).shape[0] // mu_s) if x is not None else 0
+        stats = predicted_stats(g, strategy, perm, c_e, mu_v, mu_s, n_loc, j_loc)
+    metrics.gauge("partition.ring_bytes_per_sweep",
+                  strategy=strategy).set(stats.ring_bytes_per_sweep)
+    metrics.gauge("partition.edge_imbalance",
+                  strategy=strategy).set(stats.edge_imbalance)
+    metrics.gauge("partition.bucket_imbalance",
+                  strategy=strategy).set(stats.bucket_imbalance)
     return PartitionPlan(strategy=strategy, n=g.n, n_pad=n_pad, n_loc=n_loc,
                          mu_v=mu_v, mu_s=mu_s, perm=perm, inv_perm=inv_perm,
                          predicted=stats)

@@ -29,6 +29,7 @@ from repro.core.difuser import DiFuserConfig, InfluenceResult, resolve_model
 from repro.core.sampling import clz32, make_x_vector, register_hash
 from repro.core.sketch import C_HARMONIC, PHI_FM, VISITED
 from repro.graphs.structs import Graph
+from repro.obs import trace
 from repro.partition.builder import Partition2D, build_partition_2d
 from repro.partition.plan import (PartitionPlan, plan_partition,
                                   sample_edge_sets)
@@ -243,7 +244,10 @@ def _find_seeds_ring_serial(g: Graph, k: int,
                               plan=plan, pad_mode=pad_mode, sampled=sampled)
     st = _RingState(part, g, cfg)
     total_regs = part.mu_s * part.j_loc
-    build_iters = st.fixpoint(st.sweep_propagate, cfg.max_propagate_iters)
+    with trace.span("serial.build_fixpoint", phase="fixpoint",
+                    mu_v=mu_v, mu_s=mu_s) as sp:
+        build_iters = st.fixpoint(st.sweep_propagate, cfg.max_propagate_iters)
+        sp.annotate(iters=build_iters)
 
     seeds = np.zeros(k, dtype=np.int32)
     gains = np.zeros(k, dtype=np.float32)
@@ -251,16 +255,21 @@ def _find_seeds_ring_serial(g: Graph, k: int,
     rebuilds = np.zeros(k, dtype=bool)
     oldscore = np.float32(0.0)
     for i in range(k):
-        s_v, gain = st.select(total_regs, part.n_pad)
-        st.commit(s_v)
-        st.fixpoint(st.sweep_cascade, cfg.max_cascade_iters)
-        new_score = np.float32(st.visited_count()) / np.float32(total_regs)
-        rel = (new_score - oldscore) / np.maximum(new_score, np.float32(1e-9))
-        do_rebuild = bool(rel > np.float32(cfg.rebuild_threshold))
-        if do_rebuild:
-            st.refill()
-            st.fixpoint(st.sweep_propagate, cfg.max_propagate_iters)
-            oldscore = new_score
+        with trace.span("serial.round", phase="select", round=i) as rsp:
+            s_v, gain = st.select(total_regs, part.n_pad)
+            st.commit(s_v)
+            with trace.span("serial.cascade_fixpoint", phase="ring", round=i):
+                st.fixpoint(st.sweep_cascade, cfg.max_cascade_iters)
+            new_score = np.float32(st.visited_count()) / np.float32(total_regs)
+            rel = (new_score - oldscore) / np.maximum(new_score,
+                                                      np.float32(1e-9))
+            do_rebuild = bool(rel > np.float32(cfg.rebuild_threshold))
+            if do_rebuild:
+                with trace.span("serial.rebuild", phase="build", round=i):
+                    st.refill()
+                    st.fixpoint(st.sweep_propagate, cfg.max_propagate_iters)
+                oldscore = new_score
+            rsp.annotate(seed=s_v, rebuild=do_rebuild)
         seeds[i], gains[i], scores[i], rebuilds[i] = s_v, gain, new_score, do_rebuild
     res = InfluenceResult(seeds=seeds, est_gains=gains, scores=scores,
                           rebuilds=rebuilds, propagate_iters=build_iters,
@@ -321,8 +330,11 @@ def build_matrix_ring_serial(g: Graph, config: Optional[DiFuserConfig] = None,
                               seed=cfg.seed, model=cfg.model, sampled=sampled)
     part = build_partition_2d(g, x, mu_v, mu_s, seed=cfg.seed, model=cfg.model,
                               plan=plan, pad_mode=pad_mode, sampled=sampled)
-    st = _RingState(part, g, cfg, reg_offset=reg_offset)
-    iters = st.fixpoint(st.sweep_propagate, cfg.max_propagate_iters)
+    with trace.span("serial.build_matrix", phase="build", mu_v=mu_v,
+                    mu_s=mu_s, reg_offset=reg_offset) as sp:
+        st = _RingState(part, g, cfg, reg_offset=reg_offset)
+        iters = st.fixpoint(st.sweep_propagate, cfg.max_propagate_iters)
+        sp.annotate(iters=iters)
     return st.canonical_matrix(g.n_pad), iters, part
 
 
@@ -354,10 +366,15 @@ def repair_plan_shards(g: Graph, config: DiFuserConfig, x: np.ndarray,
     dirty = set(int(v) for v in touched)
     sweeps = 0
     swept: set = set()
-    while dirty and sweeps < config.max_propagate_iters:
-        swept |= dirty
-        dirty = st.sweep_propagate_restricted(dirty)
-        sweeps += 1
+    with trace.span("serial.repair", phase="repair",
+                    touched=len(dirty)) as sp:
+        while dirty and sweeps < config.max_propagate_iters:
+            swept |= dirty
+            with trace.span("serial.repair_sweep", dirty=len(dirty),
+                            sweep=sweeps):
+                dirty = st.sweep_propagate_restricted(dirty)
+            sweeps += 1
+        sp.annotate(sweeps=sweeps, shards_swept=len(swept))
     planned = st.m.transpose(0, 2, 1, 3).reshape(
         plan.mu_v * plan.n_loc, part.mu_s * part.j_loc)
     return planned, sweeps, tuple(sorted(swept))

@@ -28,6 +28,7 @@ from repro.diffusion import resolve as resolve_model
 from repro.graphs.structs import (Graph, GraphDelta, edge_pair_keys,
                                   pad_to_multiple)
 from repro.kernels import ops
+from repro.obs import metrics, trace
 from repro.service.store import SketchStore, StoreEntry, StoreKey
 
 
@@ -109,6 +110,9 @@ def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
     backend (the per-bank kernels assume canonical row order).
     """
     t0 = time.perf_counter()
+    sp = trace.span("delta.apply", phase="repair", timed=True,
+                    added=delta.num_added, removals=delta.num_removed)
+    sp.__enter__()
     entry = store.entry(key)
     m_before = entry.graph.m_real
     # count edges the removals actually hit (a pair absent from the graph, or
@@ -168,6 +172,16 @@ def apply_delta(store: SketchStore, key: StoreKey, delta: GraphDelta,
             rebuilt = True
 
     entry = store.entry(key)
+    sp.annotate(rebuilt=rebuilt, sweeps=repair_sweeps,
+                backend=repair_backend)
+    sp.__exit__(None, None, None)
+    metrics.histogram("delta.repair_sweeps").observe(repair_sweeps)
+    metrics.histogram("delta.apply_s", unit="s").observe(sp.duration_s)
+    if rebuilt:
+        metrics.counter("delta.rebuilds").inc()
+    if entry.plan is not None and entry.plan.mu_v:
+        metrics.gauge("delta.dirty_shard_frac").set(
+            len(plan_shards) / entry.plan.mu_v)
     return DeltaReport(added=delta.num_added, removed=removed,
                        rebuilt=rebuilt, stale=entry.stale,
                        staleness_frac=entry.staleness_frac,

@@ -15,13 +15,13 @@ against an unchanged index is a dictionary hit.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.difuser import DiFuserConfig
 from repro.graphs.structs import Graph
+from repro.obs import metrics, trace
 from repro.service import queries as Q
 from repro.service.store import SketchStore, StoreEntry, StoreKey
 
@@ -160,6 +160,16 @@ class InfluenceEngine:
 
     # -- per-class executors ------------------------------------------------
 
+    @staticmethod
+    def _account(qclass: str, dt: float, batch: int) -> None:
+        """Per-query-class serving metrics: batch latency distribution,
+        amortized per-request cost, request count."""
+        metrics.counter("engine.requests", query=qclass).inc(batch)
+        metrics.histogram("engine.batch_latency_s", unit="s",
+                          query=qclass).observe(dt)
+        metrics.histogram("engine.amortized_s", unit="s",
+                          query=qclass).observe(dt / max(batch, 1))
+
     def _pad_sets(self, sets: list[tuple]) -> list[tuple]:
         """Pad the batch dim to a power of two with empty sets (sentinel-only
         rows are inert) so jit specializations stay O(log max_batch)."""
@@ -169,9 +179,14 @@ class InfluenceEngine:
     def _run_spread(self, entry, requests, chunk, results):
         sets = self._pad_sets([requests[i].query.candidates for i in chunk])
         length = _pow2(max((len(s) for s in sets), default=1))
-        t0 = time.perf_counter()
-        est = Q.spread_estimates(entry, sets, length)
-        dt = time.perf_counter() - t0
+        # timed=True: the engine's latency accounting runs whether or not
+        # tracing is on; sp.sync makes dt cover device execution, not just
+        # dispatch (async-dispatch under-reporting fix)
+        with trace.span("engine.spread_batch", phase="query", timed=True,
+                        batch=len(chunk)) as sp:
+            est = sp.sync(Q.spread_estimates(entry, sets, length))
+        dt = sp.duration_s
+        self._account("SpreadEstimate", dt, len(chunk))
         for j, i in enumerate(chunk):
             results[i] = QueryResult(requests[i].query, float(est[j]), dt,
                                      dt / len(chunk), len(chunk),
@@ -183,9 +198,11 @@ class InfluenceEngine:
         comm = self._pad_sets([requests[i].query.committed for i in chunk])
         length = _pow2(max((len(s) for s in comm), default=1))
         cands = cands + [sentinel] * (len(comm) - len(chunk))
-        t0 = time.perf_counter()
-        gains = Q.marginal_gains(entry, cands, comm, length)
-        dt = time.perf_counter() - t0
+        with trace.span("engine.marginal_batch", phase="query", timed=True,
+                        batch=len(chunk)) as sp:
+            gains = sp.sync(Q.marginal_gains(entry, cands, comm, length))
+        dt = sp.duration_s
+        self._account("MarginalGain", dt, len(chunk))
         for j, i in enumerate(chunk):
             results[i] = QueryResult(requests[i].query, float(gains[j]), dt,
                                      dt / len(chunk), len(chunk),
@@ -201,9 +218,11 @@ class InfluenceEngine:
             flat.extend(vs)
         b = _pow2(max(len(flat), 1))
         flat = flat + [sentinel] * (b - len(flat))
-        t0 = time.perf_counter()
-        est, max_reg = Q.coverage_probes(entry, flat)
-        dt = time.perf_counter() - t0
+        with trace.span("engine.probe_batch", phase="query", timed=True,
+                        batch=len(chunk)) as sp:
+            est, max_reg = sp.sync(Q.coverage_probes(entry, flat))
+        dt = sp.duration_s
+        self._account("CoverageProbe", dt, len(chunk))
         for (off, ln), i in zip(spans, chunk):
             value = {"est": est[off: off + ln].copy(),
                      "max_register": max_reg[off: off + ln].copy()}
@@ -220,15 +239,19 @@ class InfluenceEngine:
             memo_key = (entry.key, k)
             cached = self._topk_memo.get(memo_key)
             if cached is not None and cached[0] == (entry.version, entry.stale):
+                metrics.counter("engine.topk_memo_hits").inc(len(idxs))
                 for i in idxs:
                     results[i] = QueryResult(requests[i].query, cached[1], 0.0,
                                              0.0, len(idxs), backend="memo",
                                              cache_hit=True)
                 continue
             served_by = entry.serving_backend
-            t0 = time.perf_counter()
-            res = Q.top_k_seeds(self.store, entry, k)
-            dt = time.perf_counter() - t0
+            metrics.counter("engine.topk_memo_misses").inc()
+            with trace.span("engine.topk_batch", phase="query", timed=True,
+                            k=k, batch=len(idxs)) as sp:
+                res = sp.sync(Q.top_k_seeds(self.store, entry, k))
+            dt = sp.duration_s
+            self._account("TopKSeeds", dt, len(idxs))
             # top_k_seeds may have rebuilt a stale entry (version bump) —
             # memoize under the *current* state token
             entry = self.store.entry(entry.key)
@@ -252,7 +275,9 @@ def summarize_latencies(results: Sequence[QueryResult]) -> dict:
     return {
         "num_queries": len(results),
         "total_s": total,
-        "qps": len(results) / total if total > 0 else float("inf"),
+        # 0.0, not inf: an empty (or all-memo-hit, total==0) result set has
+        # no measured throughput, and inf poisons JSON artifacts + trend math
+        "qps": len(results) / total if total > 0 else 0.0,
         "p50_ms": float(np.percentile(lat, 50) * 1e3) if len(results) else 0.0,
         "p99_ms": float(np.percentile(lat, 99) * 1e3) if len(results) else 0.0,
         "amortized_ms": total / len(results) * 1e3 if len(results) else 0.0,

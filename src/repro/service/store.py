@@ -30,6 +30,7 @@ from repro.core.difuser import (DiFuserConfig, edge_operands,
                                 normalize_inputs, normalize_x)
 from repro.diffusion import DEFAULT_MODEL
 from repro.graphs.structs import Graph
+from repro.obs import metrics, trace
 from repro.partition import PartitionPlan
 
 
@@ -243,7 +244,11 @@ class StoreEntry:
         canonical = self.matrix      # computed from the current layout
         self.mesh, self.vertex_axis = mesh, vertex_axis
         self.residency = "device"
-        pm = self._place_banks(self._to_plan_order(canonical))
+        with trace.span("store.place_banks", phase="build",
+                        mu_v=self.plan.mu_v) as sp:
+            pm = sp.sync(self._place_banks(self._to_plan_order(canonical)))
+        metrics.counter("store.device_placements").inc()
+        metrics.gauge("store.device_resident_entries").value += 1.0
         self._planned_cache = (self.version, pm)
         self._matrix_cache = (self.version, canonical)
         return self
@@ -254,6 +259,7 @@ class StoreEntry:
             return self
         canonical = jnp.asarray(self.matrix)
         self.residency, self.mesh = "host", None
+        metrics.gauge("store.device_resident_entries").value -= 1.0
         j_loc = self.regs_per_bank
         self.banks = [canonical[:, b * j_loc:(b + 1) * j_loc]
                       for b in range(self.num_banks)]
@@ -379,21 +385,32 @@ class SketchStore:
         j_loc = j // self.num_banks
         t0 = time.perf_counter()
         backend, spec = self._resolve_backend(cfg)
-        # hoisted out of the bank loop: the O(m) model preprocessing +
-        # device upload is identical for every bank (banks split the sample
-        # space, not the graph); sharded backends ignore the hint but the
-        # serving cache (device_edges) wants the operands regardless
-        edges = edge_operands(g_norm, cfg)
-        banks, iters = [], 0
-        for b in range(self.num_banks):
-            m_b, it_b = backend.build_matrix(
-                g_norm, spec, x_norm[b * j_loc:(b + 1) * j_loc],
-                reg_offset=b * j_loc, normalized=True, edges=edges)
-            banks.append(jnp.asarray(m_b))
-            iters = max(iters, it_b)
-        for m_b in banks:
-            m_b.block_until_ready()
-        return banks, iters, time.perf_counter() - t0, edges
+        with trace.span("store.build_banks", phase="build",
+                        banks=self.num_banks, n=g_norm.n, registers=j):
+            # hoisted out of the bank loop: the O(m) model preprocessing +
+            # device upload is identical for every bank (banks split the
+            # sample space, not the graph); sharded backends ignore the hint
+            # but the serving cache (device_edges) wants the operands
+            # regardless
+            edges = edge_operands(g_norm, cfg)
+            banks, iters = [], 0
+            for b in range(self.num_banks):
+                with trace.span("store.build_bank", bank=b,
+                                timed=True) as sp:
+                    m_b, it_b = backend.build_matrix(
+                        g_norm, spec, x_norm[b * j_loc:(b + 1) * j_loc],
+                        reg_offset=b * j_loc, normalized=True, edges=edges)
+                    m_b = sp.sync(jnp.asarray(m_b))
+                banks.append(m_b)
+                iters = max(iters, it_b)
+                metrics.histogram("store.bank_build_s",
+                                  unit="s").observe(sp.duration_s)
+            for m_b in banks:
+                m_b.block_until_ready()
+        dt = time.perf_counter() - t0
+        metrics.counter("store.bank_builds").inc(self.num_banks)
+        metrics.histogram("store.entry_build_s", unit="s").observe(dt)
+        return banks, iters, dt, edges
 
     def rebuild(self, key: StoreKey) -> StoreEntry:
         """Full pristine rebuild from the entry's *current* graph (Alg. 4
@@ -407,6 +424,7 @@ class SketchStore:
         entry.stale = False
         entry.staleness_frac = 0.0
         entry.rebuilds += 1
+        metrics.counter("store.rebuilds").inc()
         entry.prime_edges_cache(edges)
         return entry
 

@@ -94,6 +94,17 @@ def test_engine_batching_matches_single(served):
     assert stats["num_queries"] == len(qs) and stats["p99_ms"] >= stats["p50_ms"]
 
 
+def test_summarize_latencies_empty_results():
+    """No results (or an all-memo-hit batch with zero measured time) must
+    report qps 0.0, not inf — inf poisons the JSON bench artifacts and the
+    trend gate's ratios."""
+    stats = summarize_latencies([])
+    assert stats["num_queries"] == 0
+    assert stats["qps"] == 0.0
+    assert stats["p50_ms"] == 0.0 and stats["p99_ms"] == 0.0
+    assert stats["amortized_ms"] == 0.0 and stats["by_backend"] == {}
+
+
 def test_topk_dedupe_and_memo(served):
     g, cfg, store, engine, key = served
     reqs = [Request(key=key, query=TopKSeeds(4)) for _ in range(3)]
