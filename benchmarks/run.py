@@ -83,12 +83,19 @@ def main() -> None:
 
     if recorder is not None:
         from repro.obs import metrics as obs_metrics
+        from repro.obs import report as obs_report
 
         recorder.stop()
         n_spans = recorder.save_chrome_trace("BENCH_trace.json")
         n_series = obs_metrics.registry().write_jsonl("BENCH_metrics.jsonl")
         print(f"obs.trace,0,{n_spans} spans -> BENCH_trace.json")
         print(f"obs.metrics,0,{n_series} series -> BENCH_metrics.jsonl")
+        # the self-contained HTML perf report CI uploads with the BENCH
+        # artifacts: trajectory tiles, phase breakdown, measured shard skew
+        rpt = obs_report.write_report_from_artifacts(
+            "BENCH_report.html", recorder=recorder,
+            generated=time.strftime("%Y-%m-%d %H:%M UTC", time.gmtime()))
+        print(f"obs.report,0,{rpt}")
 
     if args.baseline_dir:
         from benchmarks import trend

@@ -79,11 +79,15 @@ def main(scale: int = 10, registers: int = 256, k: int = 8, seed: int = 5,
 if __name__ == "__main__":
     import argparse
 
+    from repro.launch.common import add_obs_args, observe
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=10)
     ap.add_argument("--registers", type=int, default=256)
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--out-json", default="BENCH_runtime.json")
+    add_obs_args(ap)
     args = ap.parse_args()
-    main(scale=args.scale, registers=args.registers, k=args.k,
-         out_json=args.out_json)
+    with observe(args):
+        main(scale=args.scale, registers=args.registers, k=args.k,
+             out_json=args.out_json)

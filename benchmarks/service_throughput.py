@@ -168,6 +168,8 @@ def main(scale: int = 14, *, registers: int = 256, k: int = 10,
 
 
 if __name__ == "__main__":
+    from repro.launch.common import add_obs_args, observe
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=14)
     ap.add_argument("--registers", type=int, default=256)
@@ -180,8 +182,10 @@ if __name__ == "__main__":
     ap.add_argument("--mu-v", type=int, default=8,
                     help="row blocks (devices) of the serving mesh")
     ap.add_argument("--out-json", default="")
+    add_obs_args(ap)
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    main(args.scale, registers=args.registers, k=args.k,
-         num_queries=args.queries, backend=args.backend, mu_v=args.mu_v,
-         out_json=args.out_json)
+    with observe(args):
+        main(args.scale, registers=args.registers, k=args.k,
+             num_queries=args.queries, backend=args.backend, mu_v=args.mu_v,
+             out_json=args.out_json)

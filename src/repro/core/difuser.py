@@ -34,6 +34,7 @@ from repro.diffusion.constants import DEFAULT_MODEL
 from repro.graphs.structs import Graph
 from repro.kernels import ops
 from repro.obs import trace
+from repro.utils import roofline
 
 
 def resolve_model(spec: str):
@@ -270,6 +271,11 @@ def build_sketch_matrix(g: Graph, config: Optional[DiFuserConfig] = None,
                 impl=cfg.impl, edge_chunk=cfg.edge_chunk,
                 max_iters=cfg.max_propagate_iters, predicate=predicate)
         sp.sync(m)
+        sp.annotate(iters=int(iters))
+    # bandwidth attribution: per sweep each real edge reads its ~20 B of
+    # operands (src/dst/h/lo/thr) plus one int8 read + write per register
+    nbytes = int(iters) * int(g.m_real) * (20 + 2 * int(x.shape[0]))
+    roofline.annotate_bandwidth(sp, nbytes, sp.duration_s)
     return m, int(iters), x
 
 

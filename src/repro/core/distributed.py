@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from time import perf_counter
 from typing import Optional, Sequence
 
 import jax
@@ -54,7 +55,7 @@ from repro.core.sampling import fused_predicate
 from repro.core.sampling import make_x_vector
 from repro.core.sketch import VISITED
 from repro.graphs.structs import Graph
-from repro.obs import trace
+from repro.obs import shardprof, trace
 # host-side partition build moved to repro.partition; re-exported here for
 # backward compatibility (tests and dryrun historically imported from core)
 from repro.partition import (Partition2D, build_partition_2d,  # noqa: F401
@@ -293,6 +294,25 @@ class DistributedConfig(DiFuserConfig):
     pad_mode: str = "step"          # "step" | "global" bucket padding
 
 
+def _publish_mesh_profile(part, *, phase: str, sweeps: int, wall_s: float,
+                          span) -> None:
+    """Measured-profile publication for the SPMD paths. Mesh shards execute
+    in lockstep inside one XLA program, so per-shard wall time is not
+    separable host-side — the profile carries exact per-(shard, ring step)
+    bucket *bytes* (off the built partition's counts, scaled by the sweep
+    count the fixpoint ran) plus the overall wall time
+    (``per_step_timed=False``; the serial twin supplies measured times)."""
+    if not shardprof.enabled():
+        return
+    from repro.utils import roofline
+
+    prof = shardprof.profile_for_partition(part, backend="mesh", phase=phase)
+    prof.add_partition_bytes(np.asarray(part.p_counts), part.j_loc, sweeps)
+    predicted = part.plan.predicted if part.plan is not None else None
+    mp = shardprof.publish(prof.finish(wall_s), predicted=predicted)
+    roofline.annotate_bandwidth(span, int(mp.step_bytes.sum()), wall_s)
+
+
 def _find_seeds_distributed(g: Graph, k: int, mesh,
                             config: Optional[DistributedConfig] = None,
                             x: Optional[np.ndarray] = None, plan=None):
@@ -347,9 +367,12 @@ def _find_seeds_distributed(g: Graph, k: int, mesh,
                   part.c_h, part.c_w, part.c_r, part.c_t, part.c_l):
         for step in field:
             args.append(jnp.asarray(step))
+    t0 = perf_counter()
     with trace.span("mesh.find_seeds", phase="select", k=k, mu_v=mu_v,
                     mu_s=mu_s, schedule=cfg.schedule) as sp:
         seeds, gains, scores, rebuilds, build_iters = sp.sync(fn(*args))
+    _publish_mesh_profile(part, phase="select", sweeps=int(build_iters),
+                          wall_s=perf_counter() - t0, span=sp)
     res = InfluenceResult(
         seeds=np.asarray(seeds), est_gains=np.asarray(gains), scores=np.asarray(scores),
         rebuilds=np.asarray(rebuilds), propagate_iters=int(build_iters),
@@ -530,11 +553,14 @@ def build_matrix_distributed(g: Graph, mesh,
     for field in (part.p_h, part.p_w, part.p_r, part.p_t, part.p_l):
         for step in field:
             args.append(jnp.asarray(step))
+    t0 = perf_counter()
     with trace.span("mesh.build_matrix", phase="build", mu_v=mu_v,
                     mu_s=mu_s, reg_offset=reg_offset) as sp:
         m_planned, iters = sp.sync(fn(*args))
         # un-permute planned rows back to original-id (canonical) order
         m_canon = sp.sync(m_planned[jnp.asarray(part.plan.perm[: g.n_pad])])
+    _publish_mesh_profile(part, phase="build", sweeps=int(iters),
+                          wall_s=perf_counter() - t0, span=sp)
     return m_canon, int(iters), part
 
 

@@ -65,6 +65,14 @@ def add_common_im_args(ap: argparse.ArgumentParser, *,
                           "jax + devices allow a sharded run, else serial, "
                           "else single)")
     grp.add_argument("--seed", type=int, default=0)
+    add_obs_args(ap)
+    return ap
+
+
+def add_obs_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """Just the ``--trace``/``--metrics`` observability group — for drivers
+    (benchmarks, dryrun) that have their own workload flags but share the
+    :func:`observe` context manager."""
     obs = ap.add_argument_group("observability (repro.obs)")
     obs.add_argument("--trace", default=None, metavar="OUT.json",
                      help="record spans and write Chrome trace-event JSON "

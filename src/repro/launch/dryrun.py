@@ -115,11 +115,15 @@ def _cell_metrics(lowered):
 
 def run_cell(name, mesh, mesh_name, *, out_dir=None, tag="", schedule="ring"):
     """Lower + compile one IM cell, recording cost/memory/collective stats."""
+    from repro.obs import trace
+
     t0 = time.time()
     rec = {"arch": name, "shape": "im_step", "mesh": mesh_name, "ok": False}
     try:
-        lowered, part = lower_im_cell(name, mesh, schedule=schedule)
-        compiled, m = _cell_metrics(lowered)
+        with trace.span("dryrun.cell", phase="plan", arch=name,
+                        mesh=mesh_name, schedule=schedule):
+            lowered, part = lower_im_cell(name, mesh, schedule=schedule)
+            compiled, m = _cell_metrics(lowered)
         mem = compiled.memory_analysis()
         chips = len(mesh.devices.flatten())
         rec.update(
@@ -160,6 +164,9 @@ def main() -> None:
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--schedule", default="ring", choices=["ring", "allgather"])
     ap.add_argument("--tag", default="", help="artifact filename suffix")
+    from repro.launch.common import add_obs_args, observe
+
+    add_obs_args(ap)
     args = ap.parse_args()
 
     meshes = []
@@ -170,14 +177,15 @@ def main() -> None:
 
     failures = 0
     names = list(IM_CELLS) if args.arch == "all" else [args.arch]
-    for mesh_name, mesh in meshes:
-        for name in names:
-            rec = run_cell(name, mesh, mesh_name, out_dir=args.out,
-                           schedule=args.schedule, tag=args.tag)
-            status = "OK " if rec["ok"] else "FAIL"
-            print(f"[{status}] {name:24s} im_step      {mesh_name:12s} "
-                  f"{rec.get('compile_s', '-'):>6}s  {rec.get('error', '')}")
-            failures += 0 if rec["ok"] else 1
+    with observe(args):
+        for mesh_name, mesh in meshes:
+            for name in names:
+                rec = run_cell(name, mesh, mesh_name, out_dir=args.out,
+                               schedule=args.schedule, tag=args.tag)
+                status = "OK " if rec["ok"] else "FAIL"
+                print(f"[{status}] {name:24s} im_step      {mesh_name:12s} "
+                      f"{rec.get('compile_s', '-'):>6}s  {rec.get('error', '')}")
+                failures += 0 if rec["ok"] else 1
     raise SystemExit(1 if failures else 0)
 
 

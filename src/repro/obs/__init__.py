@@ -1,7 +1,7 @@
-"""repro.obs — the seeing layer: tracing + metrics for every execution path.
+"""repro.obs — the seeing layer: tracing, metrics, and closed-loop introspection.
 
-Two dependency-free modules (importable from anywhere in the repo, no jax
-at import time):
+Dependency-light modules (importable from anywhere in the repo, no jax at
+import time):
 
   * :mod:`repro.obs.trace`   — hierarchical spans with a ``sync`` knob
     (``block_until_ready`` on declared outputs at span exit, so GPU/TPU
@@ -11,20 +11,41 @@ at import time):
     fixpoint / select / ring / repair / query);
   * :mod:`repro.obs.metrics` — counters, gauges, and streaming histograms
     (p50/p95/p99 without storing samples) behind a named registry, exported
-    as a JSONL snapshot.
+    as a JSONL snapshot; snapshots from separate processes merge without
+    sample loss (``MetricsRegistry.merge`` / ``from_jsonl``);
+  * :mod:`repro.obs.shardprof` — measured per-shard, per-ring-step profiles
+    from serial/mesh builds and fixpoints, comparable to the planner's
+    predicted ``PlanStats`` (the ``partition.predicted_vs_measured_*``
+    gauges close the plan-vs-reality loop);
+  * :mod:`repro.obs.slo`     — per-query-class latency budgets with
+    rolling-window p99 evaluation, breach counters, and a breach callback;
+  * :mod:`repro.obs.flight`  — an always-on bounded ring of recent spans,
+    dumped to Perfetto-loadable JSON on engine exception or SLO breach
+    (importing this package installs its span listener);
+  * :mod:`repro.obs.report`  — a self-contained HTML perf report stitching
+    the BENCH records, phase breakdown, shard skew, and SLO state.
 
-Drivers expose both via ``--trace OUT.json`` / ``--metrics OUT.jsonl``
-(``python -m repro im|serve``); see docs/observability.md.
+Drivers expose tracing/metrics via ``--trace OUT.json`` /
+``--metrics OUT.jsonl``; see docs/observability.md.
 """
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                counter, gauge, histogram, load_jsonl,
                                registry)
-from repro.obs.trace import (PHASES, Recorder, Span, get_recorder, span,
+from repro.obs.trace import (PHASES, Recorder, Span, add_span_listener,
+                             get_recorder, remove_span_listener, span,
                              traced, tracing_enabled)
+# importing flight installs the always-on span listener (bounded ring)
+from repro.obs.flight import FlightRecorder, get_flight_recorder
+from repro.obs.slo import SLOConfig, SLOWatchdog
+from repro.obs.shardprof import (MeasuredProfile, ShardProfiler,
+                                 last_profile, profiles)
 
 __all__ = [
     "PHASES", "Recorder", "Span", "get_recorder", "span", "traced",
-    "tracing_enabled",
+    "tracing_enabled", "add_span_listener", "remove_span_listener",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "counter", "gauge",
     "histogram", "load_jsonl", "registry",
+    "FlightRecorder", "get_flight_recorder",
+    "SLOConfig", "SLOWatchdog",
+    "MeasuredProfile", "ShardProfiler", "last_profile", "profiles",
 ]

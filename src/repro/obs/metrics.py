@@ -25,6 +25,13 @@ from typing import Dict, Iterable, Optional, Tuple
 _GROWTH = 1.04               # bucket growth factor: <= ~2% relative error
 _LOG_GROWTH = math.log(_GROWTH)
 _V0 = 1e-9                   # smallest resolvable magnitude (1 ns in seconds)
+#: Nudge on the (log-space) bucket index so a value sitting exactly on a
+#: bucket boundary ``_V0 * G^i`` always lands in bucket ``i``. Without it,
+#: ``log(v / _V0) / log(G)`` comes out as ``i - 1e-16`` for ~5% of indices
+#: (libm rounding) and the value mis-buckets one slot low — the bucket-
+#: alignment bug that made two processes disagree about the same observation
+#: when their snapshots were merged.
+_IDX_EPS = 1e-9
 
 
 class Counter:
@@ -38,6 +45,10 @@ class Counter:
 
     def inc(self, n: int = 1) -> None:
         self.value += n
+
+    def merge(self, other: "Counter") -> None:
+        """Fold another process's count in (counts are additive)."""
+        self.value += other.value
 
     def summary(self) -> dict:
         return {"value": self.value}
@@ -54,6 +65,11 @@ class Gauge:
 
     def set(self, v: float) -> None:
         self.value = float(v)
+
+    def merge(self, other: "Gauge") -> None:
+        """Gauges are last-writer-wins: the merged-in snapshot is treated as
+        newer (merge order is the caller's timeline)."""
+        self.value = other.value
 
     def summary(self) -> dict:
         return {"value": self.value}
@@ -84,7 +100,9 @@ class Histogram:
     def _index(v: float) -> int:
         if v <= _V0:
             return -1          # underflow bucket (zeros, negatives)
-        return int(math.log(v / _V0) / _LOG_GROWTH)
+        # _IDX_EPS keeps exact bucket-boundary values in their own bucket
+        # (int() truncation + libm rounding shifted them one slot low)
+        return int(math.log(v / _V0) / _LOG_GROWTH + _IDX_EPS)
 
     @staticmethod
     def _midpoint(idx: int) -> float:
@@ -124,13 +142,50 @@ class Histogram:
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
 
+    def merge(self, other: "Histogram") -> None:
+        """Fold another histogram in without sample loss: bucket counts are
+        added index-by-index (both sides use the identical geometric grid,
+        so no re-binning — and no resolution loss — ever happens), and
+        count/sum/min/max combine exactly. Percentiles of the merged
+        histogram match a single histogram that observed both streams."""
+        for idx, cnt in other.buckets.items():
+            self.buckets[idx] = self.buckets.get(idx, 0) + cnt
+        self.count += other.count
+        self.total += other.total
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        if not self.unit:
+            self.unit = other.unit
+
     def summary(self) -> dict:
+        # "buckets" carries the raw geometric-grid counts (keys are bucket
+        # indices as strings — JSON object keys), which is what makes a
+        # JSONL snapshot mergeable without sample loss
         return {"count": self.count, "sum": self.total,
                 "min": self.min if self.count else 0.0,
                 "max": self.max if self.count else 0.0,
                 "mean": self.mean,
                 "p50": self.percentile(50), "p95": self.percentile(95),
-                "p99": self.percentile(99)}
+                "p99": self.percentile(99),
+                "buckets": {str(i): c for i, c in sorted(self.buckets.items())}}
+
+    @classmethod
+    def from_summary(cls, rec: dict) -> "Histogram":
+        """Reconstruct from a :meth:`summary`-shaped dict (a ``load_jsonl``
+        row). Rows written before bucket serialization existed degrade to a
+        single bucket at the mean (count/sum stay exact)."""
+        h = cls(unit=rec.get("unit", ""))
+        h.count = int(rec.get("count", 0))
+        h.total = float(rec.get("sum", 0.0))
+        if h.count:
+            h.min = float(rec.get("min", 0.0))
+            h.max = float(rec.get("max", 0.0))
+        buckets = rec.get("buckets")
+        if buckets is None and h.count:
+            buckets = {str(cls._index(h.total / h.count)): h.count}
+        for idx, cnt in (buckets or {}).items():
+            h.buckets[int(idx)] = int(cnt)
+        return h
 
 
 _MetricKey = Tuple[str, Tuple[Tuple[str, str], ...]]
@@ -173,6 +228,46 @@ class MetricsRegistry:
     def reset(self) -> None:
         with self._lock:
             self._metrics.clear()
+
+    # -- merge (multi-process aggregation) ---------------------------------
+
+    def merge(self, rows) -> int:
+        """Fold a snapshot into this registry: ``rows`` is either another
+        :class:`MetricsRegistry` or an iterable of ``load_jsonl`` rows.
+        Counters add, gauges take the merged-in value, histograms combine
+        bucket-exact (no sample loss) — this is how per-process metrics from
+        mesh workers or separate CI jobs aggregate into one view. Returns
+        the number of series merged."""
+        if isinstance(rows, MetricsRegistry):
+            rows = rows.snapshot()
+        n = 0
+        for rec in rows:
+            name, tags = rec["name"], rec.get("tags", {})
+            kind = rec.get("kind", "counter")
+            if kind == "counter":
+                other = Counter()
+                other.value = rec.get("value", 0)
+                self.counter(name, **tags).merge(other)
+            elif kind == "gauge":
+                other = Gauge()
+                other.value = float(rec.get("value", 0.0))
+                self.gauge(name, **tags).merge(other)
+            elif kind == "histogram":
+                other = Histogram.from_summary(rec)
+                self.histogram(name, unit=other.unit, **tags).merge(other)
+            else:
+                raise ValueError(f"unknown metric kind in snapshot: {kind!r}")
+            n += 1
+        return n
+
+    @classmethod
+    def from_jsonl(cls, *paths: str) -> "MetricsRegistry":
+        """Build a registry by merging one or more JSONL snapshots (the
+        per-process files mesh/CI jobs write via ``--metrics``)."""
+        reg = cls()
+        for path in paths:
+            reg.merge(load_jsonl(path))
+        return reg
 
     # -- export ------------------------------------------------------------
 

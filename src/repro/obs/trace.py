@@ -149,6 +149,11 @@ class Span:
                 stack.pop()
             if self._recorder is not None:
                 self._recorder._add(self)
+            for fn in _SPAN_LISTENERS:
+                try:
+                    fn(self)
+                except Exception:   # noqa: BLE001 — observers must not break
+                    pass            # the observed workload
         return False
 
 
@@ -158,6 +163,26 @@ class _SpanStack(threading.local):
 
 
 _STACK = _SpanStack()
+
+#: Completion listeners: called with every *real* span (recorded or
+#: ``timed=True``) right after its ``__exit__`` timestamps settle. This is
+#: the flight recorder's tap — it sees measuring spans even while the main
+#: recorder is off. Null spans never reach listeners, so the
+#: tracing-disabled fast path stays allocation-free.
+_SPAN_LISTENERS: List = []
+
+
+def add_span_listener(fn) -> None:
+    """Register ``fn(span)`` to run at every real span completion. Listeners
+    must be cheap and must not raise (exceptions are swallowed — a broken
+    observer must never break the observed workload)."""
+    if fn not in _SPAN_LISTENERS:
+        _SPAN_LISTENERS.append(fn)
+
+
+def remove_span_listener(fn) -> None:
+    if fn in _SPAN_LISTENERS:
+        _SPAN_LISTENERS.remove(fn)
 
 
 class Recorder:

@@ -21,6 +21,7 @@ tie-breaking in selection.
 """
 from __future__ import annotations
 
+from time import perf_counter
 from typing import Optional
 
 import numpy as np
@@ -29,10 +30,11 @@ from repro.core.difuser import DiFuserConfig, InfluenceResult, resolve_model
 from repro.core.sampling import clz32, make_x_vector, register_hash
 from repro.core.sketch import C_HARMONIC, PHI_FM, VISITED
 from repro.graphs.structs import Graph
-from repro.obs import trace
+from repro.obs import shardprof, trace
 from repro.partition.builder import Partition2D, build_partition_2d
 from repro.partition.plan import (PartitionPlan, plan_partition,
                                   sample_edge_sets)
+from repro.utils import roofline
 
 
 def _est_from_sums_np(stat, cnt, total_regs: int, estimator: str):
@@ -60,6 +62,12 @@ class _RingState:
     def __init__(self, part: Partition2D, g: Graph, cfg: DiFuserConfig, *,
                  reg_offset: int = 0, matrix: Optional[np.ndarray] = None):
         self.part, self.cfg = part, cfg
+        #: Optional :class:`repro.obs.shardprof.ShardProfiler`: when set,
+        #: every (shard, ring step) bucket merge is individually timed —
+        #: the serial ring is the one executor where per-shard time is
+        #: physically separable, so this is the measured ground truth the
+        #: predicted PlanStats are checked against.
+        self.profiler = None
         self.pred = resolve_model(cfg.model).predicate
         self.owned = part.owned_ids                        # (mu_v, n_loc)
         self.valid = self.owned < g.n                      # padding rows
@@ -104,6 +112,7 @@ class _RingState:
 
     def sweep_propagate(self) -> bool:
         p = self.part
+        prof = self.profiler
         bufs = (p.p_h, p.p_w, p.p_r, p.p_t, p.p_l)
         out = self.m.copy()
         for v in range(p.mu_v):
@@ -112,12 +121,19 @@ class _RingState:
                 for kk in range(p.mu_v):
                     if bufs[0][kk].shape[-1] == 0:
                         continue
+                    t0 = perf_counter() if prof is not None else 0.0
                     bw, br = bufs[1][kk][v, s], bufs[2][kk][v, s]
                     block = self.m[(v + kk) % p.mu_v, s]
                     contrib = np.where(self._mask(kk, v, s, bufs), block[br],
                                        np.int8(VISITED))
                     np.maximum.at(acc, bw, contrib)
+                    if prof is not None:
+                        prof.record(v, kk, perf_counter() - t0,
+                                    shardprof.bucket_bytes(
+                                        p.p_counts[v, s, kk], p.j_loc))
                 out[v, s] = np.where(self.m[v, s] == VISITED, self.m[v, s], acc)
+        if prof is not None:
+            prof.count_sweep()
         changed = bool((out != self.m).any())
         self.m = out
         return changed
@@ -161,6 +177,7 @@ class _RingState:
 
     def sweep_cascade(self) -> bool:
         p = self.part
+        prof = self.profiler
         bufs = (p.c_h, p.c_w, p.c_r, p.c_t, p.c_l)
         out = self.m.copy()
         for v in range(p.mu_v):
@@ -169,13 +186,20 @@ class _RingState:
                 for kk in range(p.mu_v):
                     if bufs[0][kk].shape[-1] == 0:
                         continue
+                    t0 = perf_counter() if prof is not None else 0.0
                     bw, br = bufs[1][kk][v, s], bufs[2][kk][v, s]
                     block = self.m[(v + kk) % p.mu_v, s]
                     newly = (self._mask(kk, v, s, bufs)
                              & (block[br] == VISITED)).astype(np.uint8)
                     np.maximum.at(acc, bw, newly)
+                    if prof is not None:
+                        prof.record(v, kk, perf_counter() - t0,
+                                    shardprof.bucket_bytes(
+                                        p.c_counts[v, s, kk], p.j_loc))
                 out[v, s] = np.where(acc.astype(bool), np.int8(VISITED),
                                      self.m[v, s])
+        if prof is not None:
+            prof.count_sweep()
         changed = bool((out != self.m).any())
         self.m = out
         return changed
@@ -243,11 +267,22 @@ def _find_seeds_ring_serial(g: Graph, k: int,
     part = build_partition_2d(g, x, mu_v, mu_s, seed=cfg.seed, model=cfg.model,
                               plan=plan, pad_mode=pad_mode, sampled=sampled)
     st = _RingState(part, g, cfg)
+    if shardprof.enabled():
+        st.profiler = shardprof.profile_for_partition(
+            part, backend="serial", phase="fixpoint")
     total_regs = part.mu_s * part.j_loc
     with trace.span("serial.build_fixpoint", phase="fixpoint",
                     mu_v=mu_v, mu_s=mu_s) as sp:
         build_iters = st.fixpoint(st.sweep_propagate, cfg.max_propagate_iters)
         sp.annotate(iters=build_iters)
+    if st.profiler is not None:
+        # null spans report duration 0.0 (tracing off) -> let the profiler
+        # fall back to its own wall clock
+        prof = shardprof.publish(st.profiler.finish(sp.duration_s or None),
+                                 predicted=plan.predicted)
+        roofline.annotate_bandwidth(sp, int(prof.step_bytes.sum()),
+                                    prof.wall_s)
+        st.profiler = None   # rounds reuse the state; profile is the build's
 
     seeds = np.zeros(k, dtype=np.int32)
     gains = np.zeros(k, dtype=np.float32)
@@ -333,8 +368,16 @@ def build_matrix_ring_serial(g: Graph, config: Optional[DiFuserConfig] = None,
     with trace.span("serial.build_matrix", phase="build", mu_v=mu_v,
                     mu_s=mu_s, reg_offset=reg_offset) as sp:
         st = _RingState(part, g, cfg, reg_offset=reg_offset)
+        if shardprof.enabled():
+            st.profiler = shardprof.profile_for_partition(
+                part, backend="serial", phase="build")
         iters = st.fixpoint(st.sweep_propagate, cfg.max_propagate_iters)
         sp.annotate(iters=iters)
+    if st.profiler is not None:
+        prof = shardprof.publish(st.profiler.finish(sp.duration_s or None),
+                                 predicted=plan.predicted)
+        roofline.annotate_bandwidth(sp, int(prof.step_bytes.sum()),
+                                    prof.wall_s)
     return st.canonical_matrix(g.n_pad), iters, part
 
 

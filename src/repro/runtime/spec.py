@@ -65,6 +65,15 @@ class RunSpec:
     vertex_axis: str = "data"          # mesh axis names (mesh backend)
     sim_axes: Tuple[str, ...] = ("model",)
 
+    # ---- serving objectives ----
+    # per-query-class p99 latency budgets as ((class, budget_ms), ...) —
+    # tuple-of-tuples keeps the spec frozen/hashable. Consumed by
+    # InfluenceEngine (repro.obs.slo watchdog: rolling-window p99, breach
+    # counters, flight-recorder dump on breach); empty = no objectives.
+    # Not part of _SKETCH_FIELDS/_EXEC_FIELDS, so it never leaks into the
+    # legacy config conversions.
+    slo: Tuple[Tuple[str, float], ...] = ()
+
     @property
     def num_shards(self) -> int:
         """Total shard-grid size the spec asks for (1 = unsharded)."""

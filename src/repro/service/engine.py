@@ -21,7 +21,8 @@ import numpy as np
 
 from repro.core.difuser import DiFuserConfig
 from repro.graphs.structs import Graph
-from repro.obs import metrics, trace
+from repro.obs import flight, metrics, trace
+from repro.obs.slo import SLOConfig, SLOWatchdog
 from repro.service import queries as Q
 from repro.service.store import SketchStore, StoreEntry, StoreKey
 
@@ -73,7 +74,7 @@ class InfluenceEngine:
     """Accepts a stream of mixed queries and executes them in padded batches."""
 
     def __init__(self, store: Optional[SketchStore] = None, max_batch: int = 256,
-                 backend=None, spec=None):
+                 backend=None, spec=None, slo=None):
         # explicit None check: an empty SketchStore is falsy (__len__ == 0)
         # backend/spec (repro.runtime) configure the engine-owned store's
         # build strategy; an explicitly passed store keeps its own
@@ -89,6 +90,26 @@ class InfluenceEngine:
         # the *value* means a delta/rebuild overwrites instead of stranding
         # old-version entries, so the memo is bounded by distinct (key, k)
         self._topk_memo: dict[tuple, tuple] = {}
+        # SLO budgets: explicit `slo` (SLOConfig / {class: p99_ms} mapping /
+        # (class, p99_ms) pairs) wins; else inherited from spec.slo. With
+        # budgets configured, every batch latency feeds the watchdog and a
+        # rising-edge breach dumps the flight ring (Perfetto-loadable
+        # post-mortem of the offending window).
+        if slo is None and spec is not None:
+            slo = getattr(spec, "slo", None)
+        cfg = SLOConfig.coerce(slo)
+        self.slo = (SLOWatchdog(cfg, on_breach=self._on_slo_breach)
+                    if cfg is not None else None)
+
+    @staticmethod
+    def _on_slo_breach(qclass, p99_ms, budget_ms, watchdog) -> None:
+        flight.dump(f"slo-breach-{qclass}-p99-{p99_ms:.1f}ms"
+                    f"-budget-{budget_ms:.1f}ms")
+
+    def slo_summary(self) -> dict:
+        """Per-class SLO state (empty when no budgets are configured) —
+        what the perf report's SLO section renders."""
+        return self.slo.summary() if self.slo is not None else {}
 
     # ------------------------------------------------------------------
     # Admission
@@ -138,20 +159,28 @@ class InfluenceEngine:
         for i, req in enumerate(requests):
             groups.setdefault((req.key, type(req.query).__name__), []).append(i)
 
-        for (key, qname), idxs in groups.items():
-            entry = self.store.entry(key)
-            for lo in range(0, len(idxs), self.max_batch):
-                chunk = idxs[lo: lo + self.max_batch]
-                if qname == "TopKSeeds":
-                    self._run_topk(entry, requests, chunk, results)
-                elif qname == "SpreadEstimate":
-                    self._run_spread(entry, requests, chunk, results)
-                elif qname == "MarginalGain":
-                    self._run_marginal(entry, requests, chunk, results)
-                elif qname == "CoverageProbe":
-                    self._run_probe(entry, requests, chunk, results)
-                else:  # pragma: no cover
-                    raise TypeError(f"unknown query type: {qname}")
+        try:
+            for (key, qname), idxs in groups.items():
+                entry = self.store.entry(key)
+                for lo in range(0, len(idxs), self.max_batch):
+                    chunk = idxs[lo: lo + self.max_batch]
+                    if qname == "TopKSeeds":
+                        self._run_topk(entry, requests, chunk, results)
+                    elif qname == "SpreadEstimate":
+                        self._run_spread(entry, requests, chunk, results)
+                    elif qname == "MarginalGain":
+                        self._run_marginal(entry, requests, chunk, results)
+                    elif qname == "CoverageProbe":
+                        self._run_probe(entry, requests, chunk, results)
+                    else:  # pragma: no cover
+                        raise TypeError(f"unknown query type: {qname}")
+        except Exception as e:
+            # post-mortem capture: the flight ring holds the spans leading
+            # up to the fault; dump never raises, then the fault propagates
+            metrics.counter("engine.exceptions",
+                            error=type(e).__name__).inc()
+            flight.dump(f"engine-exception-{type(e).__name__}")
+            raise
         return results  # type: ignore[return-value]
 
     def __call__(self, key: StoreKey, query: Q.Query) -> QueryResult:
@@ -160,15 +189,17 @@ class InfluenceEngine:
 
     # -- per-class executors ------------------------------------------------
 
-    @staticmethod
-    def _account(qclass: str, dt: float, batch: int) -> None:
+    def _account(self, qclass: str, dt: float, batch: int) -> None:
         """Per-query-class serving metrics: batch latency distribution,
-        amortized per-request cost, request count."""
+        amortized per-request cost, request count — and the SLO watchdog's
+        rolling window when budgets are configured."""
         metrics.counter("engine.requests", query=qclass).inc(batch)
         metrics.histogram("engine.batch_latency_s", unit="s",
                           query=qclass).observe(dt)
         metrics.histogram("engine.amortized_s", unit="s",
                           query=qclass).observe(dt / max(batch, 1))
+        if self.slo is not None:
+            self.slo.observe(qclass, dt)
 
     def _pad_sets(self, sets: list[tuple]) -> list[tuple]:
         """Pad the batch dim to a power of two with empty sets (sentinel-only

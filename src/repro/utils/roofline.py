@@ -72,6 +72,20 @@ class Roofline:
         }
 
 
+def annotate_bandwidth(sp, nbytes: int, seconds: float) -> float:
+    """Attach achieved GB/s and fraction-of-roof (vs :data:`HBM_BW`) to a
+    trace span, so Perfetto lanes carry bandwidth attribution next to the
+    wall time. ``sp`` may be a null span (tracing disabled) — ``annotate``
+    is then a no-op and only the return value (GB/s) is meaningful. Returns
+    0.0 for degenerate timings instead of raising."""
+    if seconds <= 0 or nbytes <= 0:
+        return 0.0
+    gbps = nbytes / seconds / 1e9
+    sp.annotate(achieved_gbps=round(gbps, 3),
+                frac_of_roof=round(gbps * 1e9 / HBM_BW, 6))
+    return gbps
+
+
 def model_flops(cfg, shape) -> float:
     """MODEL_FLOPS for the cell: 6·N_active·D for training, 2·N_active·D for
     inference (D = tokens processed in the lowered step)."""

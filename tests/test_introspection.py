@@ -1,0 +1,396 @@
+"""Closed-loop introspection: shard profiles, SLO watchdog, flight recorder,
+metrics merge, and the HTML perf report.
+
+The flight recorder and metrics registry are process-global; every test that
+mutates them restores the quiet state in a finally block so the rest of the
+suite keeps seeing the zero-overhead path.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.difuser import DiFuserConfig
+from repro.graphs import rmat_graph
+from repro.obs import flight, metrics, shardprof, trace
+from repro.obs.slo import SLOConfig, SLOWatchdog
+
+
+@pytest.fixture
+def quiet_flight(tmp_path):
+    """Point the global flight recorder at tmp_path with a clean ring and
+    dump budget; restore the defaults afterwards."""
+    fr = flight.get_flight_recorder()
+    old_dir, old_max = fr.out_dir, fr.max_dumps
+    fr.clear()
+    fr.dump_count, fr.dumps = 0, []
+    flight.configure(out_dir=str(tmp_path), max_dumps=8)
+    try:
+        yield fr
+    finally:
+        fr.clear()
+        fr.dump_count, fr.dumps = 0, []
+        flight.configure(out_dir=old_dir, max_dumps=old_max, enabled=True)
+
+
+@pytest.fixture
+def shard_profiling():
+    shardprof.clear()
+    shardprof.set_enabled(True)
+    try:
+        yield
+    finally:
+        shardprof.set_enabled(False)
+        shardprof.clear()
+
+
+# ---------------------------------------------------------------------------
+# metrics: histogram merge + JSONL round trip
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_merge_equals_combined_stream():
+    a = metrics.Histogram()
+    b = metrics.Histogram()
+    c = metrics.Histogram()
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(-6, 1.5, 400)
+    for x in xs[:250]:
+        a.observe(float(x))
+    for x in xs[250:]:
+        b.observe(float(x))
+    for x in xs:
+        c.observe(float(x))
+    a.merge(b)
+    assert a.count == c.count == 400
+    for q in (50, 90, 99):
+        assert a.percentile(q) == pytest.approx(c.percentile(q))
+
+
+def test_histogram_bucket_boundaries_are_index_exact():
+    h = metrics.Histogram()
+    # boundary values land in their own bucket, not the one below (the
+    # epsilon-alignment fix); i=0 is the <=V0 underflow bucket by design
+    for i in range(1, 800):
+        v = metrics._V0 * metrics._GROWTH ** i
+        assert h._index(v) == i, f"boundary {i} misaligned"
+
+
+def test_registry_jsonl_merge_roundtrip(tmp_path):
+    r1 = metrics.MetricsRegistry()
+    r2 = metrics.MetricsRegistry()
+    r1.counter("reqs", path="a").inc(3)
+    r2.counter("reqs", path="a").inc(4)
+    r1.gauge("imb").set(1.5)
+    r2.gauge("imb").set(2.5)
+    for x in (0.001, 0.002, 0.004):
+        r1.histogram("lat").observe(x)
+    for x in (0.008, 0.016):
+        r2.histogram("lat").observe(x)
+    p1, p2 = tmp_path / "m1.jsonl", tmp_path / "m2.jsonl"
+    r1.write_jsonl(str(p1))
+    r2.write_jsonl(str(p2))
+
+    merged = metrics.MetricsRegistry.from_jsonl(str(p1), str(p2))
+    snap = {(rec["name"], tuple(sorted(rec.get("tags", {}).items()))): rec
+            for rec in merged.snapshot()}
+    assert snap[("reqs", (("path", "a"),))]["value"] == 7
+    assert snap[("imb", ())]["value"] == 2.5          # gauges: last wins
+    lat = snap[("lat", ())]
+    assert lat["count"] == 5
+    assert lat["max"] == pytest.approx(0.016)
+    # and the merged percentile matches the combined stream
+    direct = metrics.Histogram()
+    for x in (0.001, 0.002, 0.004, 0.008, 0.016):
+        direct.observe(x)
+    assert lat["p99"] == pytest.approx(direct.percentile(99))
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_flight_ring_is_bounded_and_captures_timed_spans(quiet_flight):
+    fr = quiet_flight
+    flight.configure(capacity=16)
+    try:
+        assert not trace.get_recorder().enabled
+        for i in range(40):   # timed spans are real even with tracing off
+            with trace.span("tick", phase="query", timed=True, i=i):
+                pass
+        assert len(fr) == 16
+        names = [e["attrs"]["i"] for e in fr.events()]
+        assert names == list(range(24, 40))   # oldest evicted first
+    finally:
+        flight.configure(capacity=flight.DEFAULT_CAPACITY)
+
+
+def test_flight_dump_is_chrome_trace_with_reason(quiet_flight, tmp_path):
+    with trace.span("work", phase="build", timed=True):
+        pass
+    path = flight.dump("unit-test reason!")
+    assert path is not None and os.path.exists(path)
+    assert "unit-test" in os.path.basename(path)
+    doc = json.load(open(path))
+    evs = doc["traceEvents"]
+    assert any(e["ph"] == "X" and e["name"] == "work" for e in evs)
+    inst = [e for e in evs if e["ph"] == "i"]
+    assert inst and "unit-test" in inst[0]["args"]["reason"]
+    assert doc["metadata"]["reason"] == "unit-test reason!"
+
+
+def test_flight_dump_rate_limit(quiet_flight):
+    fr = quiet_flight
+    fr.max_dumps = 2
+    with trace.span("w", phase="query", timed=True):
+        pass
+    assert flight.dump("one") is not None
+    assert flight.dump("two") is not None
+    assert flight.dump("three") is None     # over budget: dropped, no raise
+    assert fr.dump_count == 2
+
+
+def test_engine_exception_dumps_flight_and_reraises(quiet_flight, monkeypatch):
+    from repro.service import InfluenceEngine, TopKSeeds
+    from repro.service import queries as Q
+
+    g = rmat_graph(6, edge_factor=8, seed=0, setting="w1")
+    eng = InfluenceEngine()
+    key = eng.register(g, DiFuserConfig(num_registers=32, seed=0))
+
+    def boom(*a, **k):
+        raise RuntimeError("Boom")
+
+    monkeypatch.setattr(Q, "spread_estimates", boom)
+    eng.submit(key, Q.SpreadEstimate((1, 2)))
+    before = metrics.registry().counter(
+        "engine.exceptions", error="RuntimeError").value
+    with pytest.raises(RuntimeError, match="Boom"):
+        eng.run()
+    after = metrics.registry().counter(
+        "engine.exceptions", error="RuntimeError").value
+    assert after == before + 1
+    assert len(quiet_flight.dumps) == 1
+    assert "engine-exception-RuntimeError" in quiet_flight.dumps[0]
+    doc = json.load(open(quiet_flight.dumps[0]))
+    assert any(e["ph"] == "X" for e in doc["traceEvents"])
+
+
+def test_slo_breach_dumps_flight_e2e(quiet_flight):
+    """An impossible budget breaches on real engine traffic; the breach
+    callback dumps the ring exactly once (rising edge)."""
+    from repro.service import InfluenceEngine
+    from repro.service import queries as Q
+
+    g = rmat_graph(6, edge_factor=8, seed=0, setting="w1")
+    eng = InfluenceEngine(slo=SLOConfig(
+        budgets=(("SpreadEstimate", 1e-6),), window=16, min_samples=3))
+    key = eng.register(g, DiFuserConfig(num_registers=32, seed=0))
+    for i in range(5):   # one batch per call -> one watchdog sample each
+        eng(key, Q.SpreadEstimate((i + 1,)))
+    summ = eng.slo_summary()
+    assert summ["_breach_count"] == 1          # rising edge fires once
+    assert summ["SpreadEstimate"]["in_breach"]
+    assert (summ["SpreadEstimate"]["window_p99_ms"]
+            > summ["SpreadEstimate"]["budget_ms"])
+    assert len(quiet_flight.dumps) == 1
+    assert "slo-breach-SpreadEstimate" in quiet_flight.dumps[0]
+
+
+# ---------------------------------------------------------------------------
+# SLO watchdog (unit)
+# ---------------------------------------------------------------------------
+
+
+def test_slo_config_coerce_forms():
+    assert SLOConfig.coerce(None) is None
+    assert SLOConfig.coerce(()) is None
+    assert SLOConfig.coerce({}) is None
+    cfg = SLOConfig.coerce({"TopKSeeds": 50.0})
+    assert cfg.budget_ms("TopKSeeds") == 50.0
+    assert cfg.budget_ms("Other") is None
+    cfg2 = SLOConfig.coerce((("A", 1.0), ("B", 2.0)))
+    assert cfg2.budget_ms("B") == 2.0
+    assert SLOConfig.coerce(cfg2) is cfg2
+
+
+def test_slo_watchdog_rising_edge_and_recovery():
+    hits = []
+    wd = SLOWatchdog(SLOConfig(budgets=(("q", 10.0),), window=8,
+                               min_samples=2),
+                     on_breach=lambda qc, p99, bud, w: hits.append((qc, p99)))
+    assert not wd.observe("q", 0.001)      # 1ms, under budget
+    for _ in range(8):
+        wd.observe("q", 0.050)             # 50ms >> 10ms budget
+    # rising edge fired exactly once across the excursion
+    assert len(hits) == 1 and hits[0][0] == "q"
+    assert wd.in_breach("q")
+    for _ in range(16):                    # window drains back under budget
+        wd.observe("q", 0.001)
+    assert not wd.in_breach("q")
+    for _ in range(8):                     # second excursion -> second edge
+        wd.observe("q", 0.050)
+    assert len(hits) == 2
+    # unbudgeted classes are observed but never breach
+    assert not wd.observe("unbudgeted", 999.0)
+
+
+def test_slo_min_samples_gates_warmup():
+    wd = SLOWatchdog(SLOConfig(budgets=(("q", 1.0),), min_samples=5))
+    for _ in range(4):
+        assert not wd.observe("q", 1.0)    # 1000ms over budget, but warming
+    assert wd.observe("q", 1.0)            # 5th sample arms the watchdog
+
+
+def test_runspec_carries_slo_to_engine():
+    from repro.runtime import RunSpec
+    from repro.service import InfluenceEngine
+
+    spec = RunSpec.from_config(DiFuserConfig(num_registers=32),
+                               backend="single")
+    spec = spec.with_(slo=(("TopKSeeds", 250.0),))
+    eng = InfluenceEngine(spec=spec)
+    assert eng.slo is not None
+    assert eng.slo.config.budget_ms("TopKSeeds") == 250.0
+
+
+# ---------------------------------------------------------------------------
+# shard profiles: predicted vs measured on a skewed RMAT
+# ---------------------------------------------------------------------------
+
+
+def _serial_profile(g, strategy):
+    from repro.partition.serial import _find_seeds_ring_serial
+
+    res, _ = _find_seeds_ring_serial(
+        g, 2, DiFuserConfig(num_registers=64, seed=0),
+        mu_v=4, mu_s=1, strategy=strategy)
+    prof = shardprof.last_profile()
+    assert prof is not None
+    return res, prof
+
+
+def test_measured_profile_degree_beats_block_on_skewed_rmat(shard_profiling):
+    g = rmat_graph(8, edge_factor=8, a=0.65, b=0.15, c=0.15, seed=3,
+                   setting="w1")
+    res_blk, blk = _serial_profile(g, "block")
+    res_deg, deg = _serial_profile(g, "degree")
+    # strategies agree on the answer...
+    assert np.array_equal(res_blk.seeds, res_deg.seeds)
+    # ...but the measured byte skew separates them: the degree planner
+    # spreads hub traffic, block concentrates it
+    assert blk.bytes_imbalance() > 1.2
+    assert deg.bytes_imbalance() < blk.bytes_imbalance() * 0.8
+    # the serial ring times each bucket merge individually
+    assert blk.per_step_timed and deg.per_step_timed
+    assert blk.phase == "fixpoint" and blk.backend == "serial"
+    assert blk.step_seconds.shape == (4, 4)
+    assert float(blk.step_seconds.sum()) > 0.0
+    assert int(blk.step_bytes.sum()) > 0
+    # skew table: header + one row per vertex shard
+    table = blk.skew_table()
+    assert "bytes_imb" in table
+    assert sum(line.lstrip().startswith(tuple("0123"))
+               for line in table.splitlines()) == 4
+
+
+def test_predicted_vs_measured_gauges_published(shard_profiling):
+    g = rmat_graph(8, edge_factor=8, a=0.65, b=0.15, c=0.15, seed=3,
+                   setting="w1")
+    _serial_profile(g, "block")
+    snap = {(rec["name"], tuple(sorted(rec.get("tags", {}).items())))
+            for rec in metrics.registry().snapshot()}
+    labels = (("backend", "serial"), ("strategy", "block"))
+    for name in ("partition.measured_edge_imb",
+                 "partition.measured_time_imb",
+                 "partition.achieved_gbps",
+                 "partition.predicted_vs_measured_edge_imb",
+                 "partition.predicted_vs_measured_bucket_imb"):
+        assert (name, labels) in snap, f"missing gauge {name}"
+    # measured bytes are proportional to the planner's per-edge counts, so
+    # the edge-imbalance ratio is a consistency check: it must be ~1
+    ratio = metrics.registry().gauge(
+        "partition.predicted_vs_measured_edge_imb",
+        backend="serial", strategy="block").value
+    assert ratio == pytest.approx(1.0, rel=0.05)
+
+
+def test_mesh_profile_bytes_only(shard_profiling):
+    """The SPMD mesh path can't time per-step host-side; it publishes a
+    bytes-only profile derived from the partition's real edge counts."""
+    prof = shardprof.ShardProfiler(2, 2, backend="mesh", phase="build",
+                                   strategy="block")
+    counts = np.arange(8, dtype=np.int64).reshape(2, 2, 2) + 1
+    prof.add_partition_bytes(counts, j_loc=16, sweeps=3)
+    p = prof.finish(wall_s=0.5)
+    assert not p.per_step_timed
+    per_edge = shardprof.bucket_bytes(1, 16)
+    assert int(p.step_bytes.sum()) == int(counts.sum()) * per_edge * 3
+    # time imbalance falls back to bytes imbalance when steps aren't timed
+    assert p.time_imbalance() == pytest.approx(p.bytes_imbalance())
+    assert p.achieved_gbps() > 0.0
+
+
+def test_profile_ring_is_bounded(shard_profiling):
+    for i in range(80):
+        prof = shardprof.ShardProfiler(2, 1, backend="serial", phase="build")
+        prof.record(0, 0, 0.001, 100)
+        shardprof.publish(prof.finish(wall_s=0.01))
+    assert len(shardprof.profiles()) == 64
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+
+def test_write_report_smoke(tmp_path, shard_profiling):
+    from repro.obs import report
+
+    g = rmat_graph(7, edge_factor=8, seed=1, setting="w1")
+    _serial_profile(g, "block")
+    wd = SLOWatchdog(SLOConfig(budgets=(("TopKSeeds", 10.0),), min_samples=1))
+    wd.observe("TopKSeeds", 0.002)
+    runtime = {"backends": {"serial": {"available": True,
+                                       "seeds_per_s_warm": 12.5,
+                                       "cold_s": 1.0, "warm_s": 0.8,
+                                       "store_build_s": 0.2}}}
+    service = {"qps": 120.0, "wall_s": 1.6,
+               "host": {"p50_ms": 4.0, "p99_ms": 9.0, "qps": 120.0},
+               "device": None}
+    events = [{"name": "build", "phase": "build", "depth": 0,
+               "ts_s": 0.0, "dur_s": 1.25, "attrs": {}}]
+    out = tmp_path / "report.html"
+    report.write_report(str(out), title="unit", runtime=runtime,
+                        service=service, events=events,
+                        metrics_rows=metrics.registry().snapshot(),
+                        profiles=shardprof.profiles(),
+                        slo=wd.summary(), generated="2026-08-09")
+    html = out.read_text()
+    assert "<svg" in html and "prefers-color-scheme" in html
+    assert "Shard skew" in html and "SLO" in html
+    assert "TopKSeeds" in html
+    assert len(html) > 4000
+
+
+def test_write_report_empty_inputs_never_error(tmp_path):
+    from repro.obs import report
+
+    out = tmp_path / "empty.html"
+    report.write_report(str(out))
+    html = out.read_text()
+    assert "<html" in html and len(html) > 500
+
+
+def test_write_report_from_artifacts(tmp_path, monkeypatch):
+    from repro.obs import report
+
+    monkeypatch.chdir(tmp_path)
+    (tmp_path / "BENCH_runtime.json").write_text(json.dumps(
+        {"backends": {"single": {"available": True,
+                                 "seeds_per_s_warm": 5.0}}}))
+    out = report.write_report_from_artifacts("r.html", generated="now")
+    assert os.path.exists(out)
+    assert "single" in open(out).read()
