@@ -1,40 +1,61 @@
-"""Kernel microbenchmarks: per-sweep timings of the five DiFuseR kernels
-(ref implementations under XLA:CPU — on TPU the same harness times the
-Pallas kernels with interpret=False).
+"""Kernel microbenchmarks: tuned-vs-default per-sweep timings of the DiFuseR
+kernels (ref implementations under XLA:CPU — on TPU the same harness times
+the Pallas kernels with interpret=False).
 
-derived: throughput in (edge, register) pairs per second for the sweeps.
+The three tunable sweep families go through :func:`repro.tune.autotune`, so
+every row reports the hard-coded default against the measured winner (same
+timing discipline: min-of-N, device-synced spans, roofline-annotated GB/s)
+and the winners land in the persistent ``TUNE_cache.json``. With
+``out_json`` the full records are written as ``BENCH_kernels.json`` —
+a first-class artifact :mod:`benchmarks.trend` gates on.
+
+derived: tuned-over-default speedup for the tuned families; throughput for
+the untuned kernels.
 """
 from __future__ import annotations
+
+import json
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timed
-from repro.core.sampling import make_x_vector, weight_to_threshold
-from repro.graphs import rmat_graph
 from repro.kernels import ops
+from repro.graphs import rmat_graph
+from repro.runtime.spec import RunSpec
+from repro.tune import SWEEP_FAMILIES, autotune, default_cache
 
 
-def main(scale: int = 12, registers: int = 512) -> None:
+def main(scale: int = 12, registers: int = 512,
+         out_json: str | None = None) -> dict:
     g = rmat_graph(scale, edge_factor=8, seed=71, setting="w1").sorted_by_dst()
-    x = jnp.asarray(make_x_vector(registers, seed=3))
-    src, dst = jnp.asarray(g.src), jnp.asarray(g.dst)
-    thr = jnp.asarray(weight_to_threshold(g.weight))
-    m = ops.sketch_fill(jnp.zeros((g.n_pad, registers), jnp.int8))
-    pairs = g.m * registers
+    spec = RunSpec(num_registers=registers, seed=3)
+    records = autotune(g, spec, backend="single",
+                       families=SWEEP_FAMILIES, cache=default_cache())
+    for family, rec in records.items():
+        emit(f"kernel.{family}.default", rec["default_us"], "hard-coded")
+        emit(f"kernel.{family}.tuned", rec["tuned_us"],
+             f"{rec['speedup']:.3g}x @ {rec['tuned_gbps']:.3g} GB/s "
+             f"({rec['frac_of_roof']:.2%} of roof)")
 
+    # the two untuned (vertex-dimension) kernels, timed as before
+    m = ops.sketch_fill(jnp.zeros((g.n_pad, registers), jnp.int8), seed=3)
     block = jax.block_until_ready
-    _, us = timed(lambda: block(ops.sketch_fill(m)), warmup=2, iters=5)
+    _, us = timed(lambda: block(ops.sketch_fill(m, seed=3)), warmup=2, iters=5)
     emit("kernel.sketch_fill", us, f"{g.n_pad * registers / (us/1e6):.3g} regs/s")
-    _, us = timed(lambda: block(ops.fused_sample(src, dst, thr, x)), warmup=2, iters=5)
-    emit("kernel.fused_sample", us, f"{pairs / (us/1e6):.3g} pair/s")
-    _, us = timed(lambda: block(ops.propagate_sweep(m, src, dst, thr, x)), warmup=2, iters=5)
-    emit("kernel.propagate_sweep", us, f"{pairs / (us/1e6):.3g} pair/s")
-    mv = m.at[0].set(-1)
-    _, us = timed(lambda: block(ops.cascade_sweep(mv, src, dst, thr, x)), warmup=2, iters=5)
-    emit("kernel.cascade_sweep", us, f"{pairs / (us/1e6):.3g} pair/s")
+    fill_us = us
     _, us = timed(lambda: block(ops.cardinality_stats(m)), warmup=2, iters=5)
-    emit("kernel.cardinality_stats", us, f"{g.n_pad * registers / (us/1e6):.3g} regs/s")
+    emit("kernel.cardinality_stats", us,
+         f"{g.n_pad * registers / (us/1e6):.3g} regs/s")
+
+    doc = {"scale": scale, "registers": registers, "edges": int(g.m),
+           "kernels": records,
+           "untuned": {"sketch_fill": {"us": round(fill_us, 3)},
+                       "cardinality_stats": {"us": round(us, 3)}}}
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+    return doc
 
 
 if __name__ == "__main__":

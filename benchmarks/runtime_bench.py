@@ -22,12 +22,14 @@ from repro.obs import trace
 
 
 def main(scale: int = 10, registers: int = 256, k: int = 8, seed: int = 5,
-         mu_v: int = 2, mu_s: int = 2, out_json: str = "") -> dict:
+         mu_v: int = 2, mu_s: int = 2, out_json: str = "",
+         tuning: str = "off") -> dict:
     from repro.runtime import (InfluenceSession, RunSpec, available_backends,
                                get_backend)
 
     g = rmat_graph(scale, edge_factor=8, seed=seed, setting="w1")
-    base = RunSpec(num_registers=registers, seed=seed, mu_v=mu_v, mu_s=mu_s)
+    base = RunSpec(num_registers=registers, seed=seed, mu_v=mu_v, mu_s=mu_s,
+                   tuning=tuning)
     record: dict = {"graph": f"rmat:{scale}", "n": int(g.n),
                     "m": int(g.m_real), "registers": registers, "k": k,
                     "backends": {}}
@@ -79,15 +81,16 @@ def main(scale: int = 10, registers: int = 256, k: int = 8, seed: int = 5,
 if __name__ == "__main__":
     import argparse
 
-    from repro.launch.common import add_obs_args, observe
+    from repro.launch.common import add_obs_args, add_tuning_arg, observe
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=10)
     ap.add_argument("--registers", type=int, default=256)
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--out-json", default="BENCH_runtime.json")
+    add_tuning_arg(ap)
     add_obs_args(ap)
     args = ap.parse_args()
     with observe(args):
         main(scale=args.scale, registers=args.registers, k=args.k,
-             out_json=args.out_json)
+             out_json=args.out_json, tuning=args.tuning)

@@ -10,10 +10,10 @@ baseline directory is configured (``--baseline-dir`` / the
 of the previous run) and exits non-zero when any tracked metric moved the
 wrong way by more than ``threshold`` (20% by default). Metrics carry a
 direction: throughput metrics (per-backend cold/warm seeds/sec from
-``BENCH_runtime.json``, host/device qps from ``BENCH_service.json``) are
-higher-is-better and regress on drops; tail-latency metrics (host/device
-p99 ms from ``BENCH_service.json``) are lower-is-better and regress on
-rises. A missing baseline (first run, expired artifact) skips cleanly: the
+``BENCH_runtime.json``, host/device qps from ``BENCH_service.json``,
+tuned-kernel speedups from ``BENCH_kernels.json``) are higher-is-better and
+regress on drops; tail-latency/sweep-time metrics (host/device p99 ms,
+per-family tuned_us) are lower-is-better and regress on rises. A missing baseline (first run, expired artifact) skips cleanly: the
 gate compares trajectories, it doesn't demand one exists.
 """
 from __future__ import annotations
@@ -25,7 +25,8 @@ from typing import Iterator, Optional
 
 from benchmarks.common import emit
 
-DEFAULT_FILES = ("BENCH_runtime.json", "BENCH_service.json")
+DEFAULT_FILES = ("BENCH_runtime.json", "BENCH_service.json",
+                 "BENCH_kernels.json")
 
 
 def _load(path: str) -> Optional[dict]:
@@ -63,8 +64,20 @@ def _service_metrics(rec: dict) -> Iterator[tuple[str, float, str]]:
             yield f"{row}.p99_ms", float(stats["p99_ms"]), LOWER
 
 
+def _kernel_metrics(rec: dict) -> Iterator[tuple[str, float, str]]:
+    """(metric name, value, direction) per tuned kernel family: tuned sweep
+    time (lower-is-better) and tuned-over-default speedup (higher — a
+    speedup collapsing toward 1x means the tuner stopped finding wins)."""
+    for family, r in (rec.get("kernels") or {}).items():
+        if r.get("tuned_us"):
+            yield f"{family}.tuned_us", float(r["tuned_us"]), LOWER
+        if r.get("speedup"):
+            yield f"{family}.speedup", float(r["speedup"]), HIGHER
+
+
 _METRICS = {"BENCH_runtime.json": _runtime_metrics,
-            "BENCH_service.json": _service_metrics}
+            "BENCH_service.json": _service_metrics,
+            "BENCH_kernels.json": _kernel_metrics}
 
 
 def compare(baseline_dir: str, files=DEFAULT_FILES, *,

@@ -30,6 +30,7 @@ IM_API_MODULES = (
     "repro.diffusion",
     "repro.partition",
     "repro.service",
+    "repro.tune",
     "repro.graphs",
     "repro.baselines",
     "repro.configs",

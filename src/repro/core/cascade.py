@@ -22,13 +22,15 @@ from repro.kernels import ops
 
 
 @partial(jax.jit, static_argnames=("seed", "impl", "edge_chunk", "max_iters",
-                                   "predicate"))
+                                   "predicate", "edge_block", "reg_tile"))
 def cascade_from_seed(m, seed_vertex, src, dst, thr, x, h=None, lo=None, *,
                       seed: int = 0, impl: str = "ref", edge_chunk: int = 2048,
-                      max_iters: int = 64, predicate=None):
+                      max_iters: int = 64, predicate=None,
+                      edge_block: int = 0, reg_tile: int = 0):
     """Mark the seed visited in all sims and close under sampled edges.
 
-    Returns (m, iters_used).
+    Returns (m, iters_used). ``edge_chunk``/``edge_block``/``reg_tile`` are
+    performance-only tile knobs (see core.simulate.propagate_to_fixpoint).
     """
     m = m.at[seed_vertex, :].set(jnp.int8(VISITED))
 
@@ -40,7 +42,8 @@ def cascade_from_seed(m, seed_vertex, src, dst, thr, x, h=None, lo=None, *,
         m_cur, _, it = carry
         m_new = ops.cascade_sweep(m_cur, src, dst, thr, x, seed=seed, impl=impl,
                                   edge_chunk=edge_chunk, h=h, lo=lo,
-                                  predicate=predicate)
+                                  predicate=predicate, edge_block=edge_block,
+                                  reg_tile=reg_tile)
         changed = jnp.any(m_new != m_cur)
         return m_new, changed, it + 1
 

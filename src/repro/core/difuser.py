@@ -59,6 +59,11 @@ class DiFuserConfig:
     impl: str = "ref"                  # "ref" | "pallas"
     sort_x: bool = True                # FASST ordering (§4.1)
     model: str = DEFAULT_MODEL         # diffusion model spec (repro.diffusion)
+    # ---- performance-only tile knobs (repro.tune feeds measured winners
+    # through these; 0 = follow the library default; results invariant) ----
+    cascade_chunk: int = 0             # cascade-sweep scan chunk (0: edge_chunk)
+    edge_block: int = 0                # pallas edge tile (0: kernels EDGE_BLOCK)
+    reg_tile: int = 0                  # pallas register tile (0: kernels REG_TILE)
 
 
 @dataclasses.dataclass
@@ -89,7 +94,8 @@ def _init_registers(n_pad: int, n_real: int, num_regs: int) -> jnp.ndarray:
 
 def _seed_rounds(m, src, dst, h, lo, thr, x, *, k, n_real, num_regs, seed,
                  estimator, impl, edge_chunk, max_prop, max_casc,
-                 rebuild_threshold, predicate=None):
+                 rebuild_threshold, predicate=None, cascade_chunk=0,
+                 edge_block=0, reg_tile=0):
     """Alg. 4 lines 7-23: K rounds of {select, cascade, score, lazy-rebuild}
     starting from an already-propagated register matrix ``m``.
 
@@ -103,8 +109,10 @@ def _seed_rounds(m, src, dst, h, lo, thr, x, *, k, n_real, num_regs, seed,
         sums = _select.local_sums(m, impl=impl)
         s, gain = _select.finish_select(sums, num_regs, n_real, estimator=estimator)
         m, _ = cascade_from_seed(m, s, src, dst, thr, x, h, lo, seed=seed,
-                                 impl=impl, edge_chunk=edge_chunk,
-                                 max_iters=max_casc, predicate=predicate)
+                                 impl=impl,
+                                 edge_chunk=cascade_chunk or edge_chunk,
+                                 max_iters=max_casc, predicate=predicate,
+                                 edge_block=edge_block, reg_tile=reg_tile)
         visited = count_visited(m, n_real).astype(jnp.float32)
         new_score = visited / jnp.float32(num_regs)
         rel = (new_score - oldscore) / jnp.maximum(new_score, 1e-9)
@@ -114,7 +122,8 @@ def _seed_rounds(m, src, dst, h, lo, thr, x, *, k, n_real, num_regs, seed,
             m2 = ops.sketch_fill(m, reg_offset=0, seed=seed, impl=impl)
             m2, _ = propagate_to_fixpoint(m2, src, dst, thr, x, h, lo, seed=seed,
                                           impl=impl, edge_chunk=edge_chunk,
-                                          max_iters=max_prop, predicate=predicate)
+                                          max_iters=max_prop, predicate=predicate,
+                                          edge_block=edge_block, reg_tile=reg_tile)
             return m2, new_score
 
         def keep(m):
@@ -129,45 +138,53 @@ def _seed_rounds(m, src, dst, h, lo, thr, x, *, k, n_real, num_regs, seed,
 
 
 def _build_matrix(src, dst, h, lo, thr, x, n_pad, *, n_real, num_regs, seed, impl,
-                  edge_chunk, max_prop, reg_offset=0, predicate=None):
+                  edge_chunk, max_prop, reg_offset=0, predicate=None,
+                  edge_block=0, reg_tile=0):
     """Alg. 4 lines 3-6: init + fill + propagate-to-fixpoint. Returns (m, iters)."""
     m = _init_registers(n_pad, n_real, num_regs)
     m = ops.sketch_fill(m, reg_offset=reg_offset, seed=seed, impl=impl)
     return propagate_to_fixpoint(
         m, src, dst, thr, x, h, lo, seed=seed, impl=impl, edge_chunk=edge_chunk,
-        max_iters=max_prop, predicate=predicate)
+        max_iters=max_prop, predicate=predicate, edge_block=edge_block,
+        reg_tile=reg_tile)
 
 
 def _find_seeds(src, dst, h, lo, thr, x, n_pad, *, k, n_real, num_regs, seed,
                 estimator, impl, edge_chunk, max_prop, max_casc,
-                rebuild_threshold, predicate=None):
+                rebuild_threshold, predicate=None, cascade_chunk=0,
+                edge_block=0, reg_tile=0):
     m, build_iters = _build_matrix(
         src, dst, h, lo, thr, x, n_pad, n_real=n_real, num_regs=num_regs,
         seed=seed, impl=impl, edge_chunk=edge_chunk, max_prop=max_prop,
-        predicate=predicate)
+        predicate=predicate, edge_block=edge_block, reg_tile=reg_tile)
     seeds, gains, scores, rebuilds = _seed_rounds(
         m, src, dst, h, lo, thr, x, k=k, n_real=n_real, num_regs=num_regs,
         seed=seed, estimator=estimator, impl=impl, edge_chunk=edge_chunk,
         max_prop=max_prop, max_casc=max_casc,
-        rebuild_threshold=rebuild_threshold, predicate=predicate)
+        rebuild_threshold=rebuild_threshold, predicate=predicate,
+        cascade_chunk=cascade_chunk, edge_block=edge_block, reg_tile=reg_tile)
     return seeds, gains, scores, rebuilds, build_iters
 
 
+#: the performance-only tile statics shared by the jitted drivers
+_TILE_STATICS = ("cascade_chunk", "edge_block", "reg_tile")
+
 _find_seeds_jit = partial(jax.jit, static_argnames=(
     "k", "n_real", "n_pad", "num_regs", "seed", "estimator", "impl", "edge_chunk",
-    "max_prop", "max_casc", "rebuild_threshold", "predicate"))(
+    "max_prop", "max_casc", "rebuild_threshold", "predicate") + _TILE_STATICS)(
     lambda src, dst, h, lo, thr, x, *, n_pad, **kw: _find_seeds(
         src, dst, h, lo, thr, x, n_pad, **kw))
 
 _build_matrix_jit = partial(jax.jit, static_argnames=(
     "n_pad", "n_real", "num_regs", "seed", "impl", "edge_chunk", "max_prop",
-    "reg_offset", "predicate"))(
+    "reg_offset", "predicate", "edge_block", "reg_tile"))(
     lambda src, dst, h, lo, thr, x, *, n_pad, **kw: _build_matrix(
         src, dst, h, lo, thr, x, n_pad, **kw))
 
 _seed_rounds_jit = partial(jax.jit, static_argnames=(
     "k", "n_real", "num_regs", "seed", "estimator", "impl", "edge_chunk",
-    "max_prop", "max_casc", "rebuild_threshold", "predicate"))(_seed_rounds)
+    "max_prop", "max_casc", "rebuild_threshold", "predicate") + _TILE_STATICS)(
+    _seed_rounds)
 
 
 def _find_seeds_single(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
@@ -187,7 +204,9 @@ def _find_seeds_single(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
             edge_chunk=cfg.edge_chunk, max_prop=cfg.max_propagate_iters,
             max_casc=cfg.max_cascade_iters,
             rebuild_threshold=cfg.rebuild_threshold,
-            predicate=resolve_model(cfg.model).predicate))
+            predicate=resolve_model(cfg.model).predicate,
+            cascade_chunk=cfg.cascade_chunk, edge_block=cfg.edge_block,
+            reg_tile=cfg.reg_tile))
     return InfluenceResult(
         seeds=np.asarray(seeds), est_gains=np.asarray(gains),
         scores=np.asarray(scores), rebuilds=np.asarray(rebuilds),
@@ -264,12 +283,14 @@ def build_sketch_matrix(g: Graph, config: Optional[DiFuserConfig] = None,
                 src, dst, h, lo, thr, jnp.asarray(x), n_pad=g.n_pad, n_real=g.n,
                 num_regs=x.shape[0], seed=cfg.seed, impl=cfg.impl,
                 edge_chunk=cfg.edge_chunk, max_prop=cfg.max_propagate_iters,
-                reg_offset=reg_offset, predicate=predicate)
+                reg_offset=reg_offset, predicate=predicate,
+                edge_block=cfg.edge_block, reg_tile=cfg.reg_tile)
         else:
             m, iters = propagate_to_fixpoint(
                 init_matrix, src, dst, thr, jnp.asarray(x), h, lo, seed=cfg.seed,
                 impl=cfg.impl, edge_chunk=cfg.edge_chunk,
-                max_iters=cfg.max_propagate_iters, predicate=predicate)
+                max_iters=cfg.max_propagate_iters, predicate=predicate,
+                edge_block=cfg.edge_block, reg_tile=cfg.reg_tile)
         sp.sync(m)
         sp.annotate(iters=int(iters))
     # bandwidth attribution: per sweep each real edge reads its ~20 B of
@@ -303,7 +324,9 @@ def find_seeds_warm(g: Graph, k: int, config: Optional[DiFuserConfig] = None,
             estimator=cfg.estimator, impl=cfg.impl, edge_chunk=cfg.edge_chunk,
             max_prop=cfg.max_propagate_iters, max_casc=cfg.max_cascade_iters,
             rebuild_threshold=cfg.rebuild_threshold,
-            predicate=resolve_model(cfg.model).predicate))
+            predicate=resolve_model(cfg.model).predicate,
+            cascade_chunk=cfg.cascade_chunk, edge_block=cfg.edge_block,
+            reg_tile=cfg.reg_tile))
     return InfluenceResult(
         seeds=np.asarray(seeds), est_gains=np.asarray(gains),
         scores=np.asarray(scores), rebuilds=np.asarray(rebuilds),

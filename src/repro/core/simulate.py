@@ -23,11 +23,16 @@ from repro.kernels import ops
 
 
 @partial(jax.jit, static_argnames=("seed", "impl", "edge_chunk", "max_iters",
-                                   "predicate"))
+                                   "predicate", "edge_block", "reg_tile"))
 def propagate_to_fixpoint(m, src, dst, thr, x, h=None, lo=None, *, seed: int = 0,
                           impl: str = "ref", edge_chunk: int = 2048,
-                          max_iters: int = 64, predicate=None):
-    """Run SIMULATE sweeps until convergence. Returns (m, iters_used)."""
+                          max_iters: int = 64, predicate=None,
+                          edge_block: int = 0, reg_tile: int = 0):
+    """Run SIMULATE sweeps until convergence. Returns (m, iters_used).
+
+    ``edge_chunk`` (ref impl) and ``edge_block``/``reg_tile`` (pallas impl,
+    0 = kernel default) are performance-only tile knobs — repro.tune feeds
+    measured winners through them; results are invariant."""
 
     def cond(carry):
         _, changed, it = carry
@@ -37,7 +42,8 @@ def propagate_to_fixpoint(m, src, dst, thr, x, h=None, lo=None, *, seed: int = 0
         m_cur, _, it = carry
         m_new = ops.propagate_sweep(m_cur, src, dst, thr, x, seed=seed, impl=impl,
                                     edge_chunk=edge_chunk, h=h, lo=lo,
-                                    predicate=predicate)
+                                    predicate=predicate, edge_block=edge_block,
+                                    reg_tile=reg_tile)
         changed = jnp.any(m_new != m_cur)
         return m_new, changed, it + 1
 

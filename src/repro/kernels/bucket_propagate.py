@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.sampling import fused_predicate
-from repro.kernels.common import EDGE_BLOCK, REG_TILE, pick_block
+from repro.kernels.common import (EDGE_BLOCK, REG_TILE, clamp_block,
+                                  pad_amount)
 
 VISITED = -1
 
@@ -67,10 +68,21 @@ def bucket_propagate_pallas(acc, block, h, w, r, t, x, lo=None, *,
         predicate = fused_predicate
     n_loc, j_loc = acc.shape
     n_edges = h.shape[0]
-    reg_tile = pick_block(j_loc, reg_tile)
-    edge_block = pick_block(n_edges, edge_block)
-    grid = (j_loc // reg_tile, n_edges // edge_block)
-    return pl.pallas_call(
+    reg_tile = clamp_block(j_loc, reg_tile)
+    edge_block = clamp_block(n_edges, edge_block)
+    # pad the bucket axis with predicate-dead edges (t=0 never fires) and the
+    # register axis with VISITED columns — bit-identical, any block shape
+    epad = pad_amount(n_edges, edge_block)
+    if epad:
+        h, w, r, t, lo = (jnp.pad(a, (0, epad)) for a in (h, w, r, t, lo))
+    rpad = pad_amount(j_loc, reg_tile)
+    if rpad:
+        x = jnp.pad(x, (0, rpad))
+        acc = jnp.pad(acc, ((0, 0), (0, rpad)), constant_values=VISITED)
+        block = jnp.pad(block, ((0, 0), (0, rpad)), constant_values=VISITED)
+    jp = j_loc + rpad
+    grid = (jp // reg_tile, (n_edges + epad) // edge_block)
+    out = pl.pallas_call(
         partial(_bucket_kernel, edge_block=edge_block, predicate=predicate),
         grid=grid,
         in_specs=[
@@ -84,6 +96,7 @@ def bucket_propagate_pallas(acc, block, h, w, r, t, x, lo=None, *,
             pl.BlockSpec((n_loc, reg_tile), lambda j, e: (0, j)),
         ],
         out_specs=pl.BlockSpec((n_loc, reg_tile), lambda j, e: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((n_loc, j_loc), jnp.int8),
+        out_shape=jax.ShapeDtypeStruct((n_loc, jp), jnp.int8),
         interpret=interpret,
     )(h, w, r, t, lo, x, block, acc)
+    return out[:, :j_loc] if rpad else out

@@ -23,7 +23,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.sampling import edge_hash, fused_predicate
-from repro.kernels.common import EDGE_BLOCK, REG_TILE, pick_block
+from repro.kernels.common import EDGE_BLOCK, REG_TILE, clamp_block
+from repro.kernels.sketch_propagate import (pad_edge_operands,
+                                            pad_register_axis)
 
 VISITED = -1  # python literal: weak-typed inside kernels (no captured consts)
 
@@ -69,11 +71,13 @@ def cascade_sweep_pallas(m, src, dst, thr, x, h=None, lo=None, *, seed: int = 0,
         predicate = fused_predicate
     n_pad, num_regs = m.shape
     num_edges = src.shape[0]
-    reg_tile = pick_block(num_regs, reg_tile)
-    edge_block = pick_block(num_edges, edge_block)
-    assert num_edges % edge_block == 0 and num_regs % reg_tile == 0
-    grid = (num_regs // reg_tile, num_edges // edge_block)
-    return pl.pallas_call(
+    reg_tile = clamp_block(num_regs, reg_tile)
+    edge_block = clamp_block(num_edges, edge_block)
+    src, dst, h, lo, thr = pad_edge_operands(src, dst, h, lo, thr, edge_block)
+    m_in, x = pad_register_axis(m, x, reg_tile)
+    regs_pad = x.shape[0]
+    grid = (regs_pad // reg_tile, src.shape[0] // edge_block)
+    out = pl.pallas_call(
         partial(_cascade_kernel, edge_block=edge_block, predicate=predicate),
         grid=grid,
         in_specs=[
@@ -86,6 +90,7 @@ def cascade_sweep_pallas(m, src, dst, thr, x, h=None, lo=None, *, seed: int = 0,
             pl.BlockSpec((n_pad, reg_tile), lambda r, e: (0, r)),
         ],
         out_specs=pl.BlockSpec((n_pad, reg_tile), lambda r, e: (0, r)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, num_regs), jnp.int8),
+        out_shape=jax.ShapeDtypeStruct((n_pad, regs_pad), jnp.int8),
         interpret=interpret,
-    )(src, dst, h, lo, thr, x, m)
+    )(src, dst, h, lo, thr, x, m_in)
+    return out[:, :num_regs] if regs_pad != num_regs else out

@@ -22,11 +22,37 @@ VERTEX_BLOCK = 256
 
 
 def pick_block(n: int, target: int) -> int:
-    """Largest divisor of ``n`` that is <= ``target`` (block-shape helper)."""
+    """Largest divisor of ``n`` that is <= ``target`` (block-shape helper).
+
+    Divisor search degrades badly on near-prime ``n`` (worst case block=1 —
+    scalar grid steps). The edge-dimension kernels therefore no longer use
+    it: they clamp the block with :func:`clamp_block` and pad operands up to
+    a block multiple with predicate-dead filler (``pad_amount``). Kept for
+    the vertex-dimension kernels (sketch_fill / cardinality_stats), whose
+    ``n_pad`` is already padded by the graph layer.
+    """
     b = min(n, target)
     while n % b != 0:
         b -= 1
     return b
+
+
+def clamp_block(n: int, block: int) -> int:
+    """Block size actually used for an ``n``-long axis: at least 1, at most
+    ``n`` (a block larger than the axis is one full-axis block)."""
+    return max(1, min(int(block), int(n)))
+
+
+def pad_amount(n: int, block: int) -> int:
+    """Trailing padding that rounds ``n`` up to a multiple of ``block``.
+
+    Edge operands padded this way use width-0 filler (``thr = 0``): the
+    universal interval predicate ``((X ^ h) - lo) mod 2^32 < thr`` can never
+    fire with ``thr == 0``, so a padded edge contributes the max-merge
+    identity (VISITED) to propagate sweeps and never marks anything in
+    cascade sweeps — results are bit-identical to the unpadded axis.
+    """
+    return (-int(n)) % int(block)
 
 
 def kmix32(x: jnp.ndarray) -> jnp.ndarray:

@@ -24,7 +24,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.sampling import edge_hash, fused_predicate
-from repro.kernels.common import EDGE_BLOCK, REG_TILE, pick_block
+from repro.kernels.common import EDGE_BLOCK, REG_TILE, clamp_block
+from repro.kernels.sketch_propagate import (pad_edge_operands,
+                                            pad_register_axis)
 
 
 def _fused_sample_kernel(h_ref, lo_ref, thr_ref, x_ref, out_ref, *, predicate):
@@ -49,10 +51,13 @@ def fused_sample_pallas(src, dst, thr, x, h=None, lo=None, *, seed: int = 0,
         predicate = fused_predicate
     num_edges = src.shape[0]
     num_regs = x.shape[0]
-    edge_block = pick_block(num_edges, edge_block)
-    reg_tile = pick_block(num_regs, reg_tile)
-    grid = (num_edges // edge_block, num_regs // reg_tile)
-    return pl.pallas_call(
+    edge_block = clamp_block(num_edges, edge_block)
+    reg_tile = clamp_block(num_regs, reg_tile)
+    src, dst, h, lo, thr = pad_edge_operands(src, dst, h, lo, thr, edge_block)
+    _, x = pad_register_axis(None, x, reg_tile)
+    edges_pad, regs_pad = h.shape[0], x.shape[0]
+    grid = (edges_pad // edge_block, regs_pad // reg_tile)
+    out = pl.pallas_call(
         partial(_fused_sample_kernel, predicate=predicate),
         grid=grid,
         in_specs=[
@@ -62,6 +67,9 @@ def fused_sample_pallas(src, dst, thr, x, h=None, lo=None, *, seed: int = 0,
             pl.BlockSpec((reg_tile,), lambda e, r: (r,)),
         ],
         out_specs=pl.BlockSpec((edge_block, reg_tile), lambda e, r: (e, r)),
-        out_shape=jax.ShapeDtypeStruct((num_edges, num_regs), jnp.uint8),
+        out_shape=jax.ShapeDtypeStruct((edges_pad, regs_pad), jnp.uint8),
         interpret=interpret,
     )(h, lo, thr, x)
+    if edges_pad != num_edges or regs_pad != num_regs:
+        out = out[:num_edges, :num_regs]
+    return out

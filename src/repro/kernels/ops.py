@@ -20,7 +20,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.common import pick_block
+from repro.kernels.common import EDGE_BLOCK, REG_TILE
 from repro.kernels.cascade_step import cascade_sweep_pallas
 from repro.kernels.fused_sample import fused_sample_pallas
 from repro.kernels.sketch_cardinality import cardinality_stats_pallas
@@ -31,12 +31,15 @@ _INTERPRET = True  # flipped to False on real TPU deployments
 
 
 def fused_sample(src, dst, thr, x, *, seed: int = 0, impl: str = "ref",
-                 h=None, lo=None, predicate=None):
+                 h=None, lo=None, predicate=None,
+                 edge_block: int = 0, reg_tile: int = 0):
     if impl == "ref":
         return _ref.fused_sample_ref(src, dst, thr, x, h, lo, seed=seed,
                                      predicate=predicate)
     return fused_sample_pallas(src, dst, thr, x, h, lo, seed=seed,
-                               predicate=predicate, interpret=_INTERPRET)
+                               predicate=predicate, interpret=_INTERPRET,
+                               edge_block=edge_block or EDGE_BLOCK,
+                               reg_tile=reg_tile or REG_TILE)
 
 
 def sketch_fill(m, *, reg_offset: int = 0, seed: int = 0, impl: str = "ref"):
@@ -46,23 +49,29 @@ def sketch_fill(m, *, reg_offset: int = 0, seed: int = 0, impl: str = "ref"):
 
 
 def propagate_sweep(m, src, dst, thr, x, *, seed: int = 0, impl: str = "ref",
-                    edge_chunk: int = 2048, h=None, lo=None, predicate=None):
+                    edge_chunk: int = 2048, h=None, lo=None, predicate=None,
+                    edge_block: int = 0, reg_tile: int = 0):
     if impl == "ref":
         return _ref.propagate_sweep_ref(
             m, src, dst, thr, x, h, lo, seed=seed, predicate=predicate,
-            edge_chunk=pick_block(src.shape[0], edge_chunk))
+            edge_chunk=edge_chunk)
     return propagate_sweep_pallas(m, src, dst, thr, x, h, lo, seed=seed,
-                                  predicate=predicate, interpret=_INTERPRET)
+                                  predicate=predicate, interpret=_INTERPRET,
+                                  edge_block=edge_block or EDGE_BLOCK,
+                                  reg_tile=reg_tile or REG_TILE)
 
 
 def cascade_sweep(m, src, dst, thr, x, *, seed: int = 0, impl: str = "ref",
-                  edge_chunk: int = 2048, h=None, lo=None, predicate=None):
+                  edge_chunk: int = 2048, h=None, lo=None, predicate=None,
+                  edge_block: int = 0, reg_tile: int = 0):
     if impl == "ref":
         return _ref.cascade_sweep_ref(
             m, src, dst, thr, x, h, lo, seed=seed, predicate=predicate,
-            edge_chunk=pick_block(src.shape[0], edge_chunk))
+            edge_chunk=edge_chunk)
     return cascade_sweep_pallas(m, src, dst, thr, x, h, lo, seed=seed,
-                                predicate=predicate, interpret=_INTERPRET)
+                                predicate=predicate, interpret=_INTERPRET,
+                                edge_block=edge_block or EDGE_BLOCK,
+                                reg_tile=reg_tile or REG_TILE)
 
 
 def cardinality_stats(m, *, impl: str = "ref"):

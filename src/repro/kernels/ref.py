@@ -26,6 +26,22 @@ import jax.numpy as jnp
 
 from repro.core.sampling import edge_hash, fused_predicate
 from repro.core.sketch import C_HARMONIC, VISITED
+from repro.kernels.common import clamp_block, pad_amount
+
+
+def _chunked(src, dst, h, lo, thr, edge_chunk: int):
+    """Reshape edge operands to (n_chunks, edge_chunk), padding the tail
+    chunk with predicate-dead edges (thr=0 never fires — see
+    ``common.pad_amount``) so any chunk size is legal, not just divisors.
+    Returns (xs, edge_chunk_used)."""
+    num_edges = src.shape[0]
+    edge_chunk = clamp_block(num_edges, edge_chunk)
+    pad = pad_amount(num_edges, edge_chunk)
+    ops = (src, dst, h, lo, thr)
+    if pad:
+        ops = tuple(jnp.pad(a, (0, pad)) for a in ops)
+    n_chunks = (num_edges + pad) // edge_chunk
+    return tuple(a.reshape(n_chunks, edge_chunk) for a in ops), edge_chunk
 
 
 def _edge_args(src, dst, thr, h, lo, predicate, seed):
@@ -80,10 +96,7 @@ def propagate_sweep_ref(m: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
     Visited registers are sticky. Jacobi: gathers read the input ``m``.
     """
     h, lo, predicate = _edge_args(src, dst, thr, h, lo, predicate, seed)
-    num_edges = src.shape[0]
-    assert num_edges % edge_chunk == 0, (num_edges, edge_chunk)
-    n_chunks = num_edges // edge_chunk
-    xs = tuple(a.reshape(n_chunks, edge_chunk) for a in (src, dst, h, lo, thr))
+    xs, _ = _chunked(src, dst, h, lo, thr, edge_chunk)
 
     def body(acc, chunk):
         s, d, hh, ll, t = chunk
@@ -108,10 +121,7 @@ def cascade_sweep_ref(m: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
     M[v, j] <- VISITED. Jacobi semantics as above.
     """
     h, lo, predicate = _edge_args(src, dst, thr, h, lo, predicate, seed)
-    num_edges = src.shape[0]
-    assert num_edges % edge_chunk == 0
-    n_chunks = num_edges // edge_chunk
-    xs = tuple(a.reshape(n_chunks, edge_chunk) for a in (src, dst, h, lo, thr))
+    xs, _ = _chunked(src, dst, h, lo, thr, edge_chunk)
     vis = m == VISITED
 
     def body(acc, chunk):

@@ -39,9 +39,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.sampling import edge_hash, fused_predicate
-from repro.kernels.common import EDGE_BLOCK, REG_TILE, pick_block
+from repro.kernels.common import (EDGE_BLOCK, REG_TILE, clamp_block,
+                                 pad_amount)
 
 VISITED = -1  # python literal: weak-typed inside kernels (no captured consts)
+
+
+def pad_edge_operands(src, dst, h, lo, thr, edge_block: int):
+    """Round the edge axis up to a multiple of ``edge_block`` with
+    predicate-dead filler (thr=0 never fires, so padded edges contribute the
+    max-merge identity) — any block size is legal, including on prime edge
+    counts where the old largest-divisor search degraded to block=1."""
+    pad = pad_amount(src.shape[0], edge_block)
+    if pad:
+        src, dst, h, lo, thr = (jnp.pad(a, (0, pad))
+                                for a in (src, dst, h, lo, thr))
+    return src, dst, h, lo, thr
+
+
+def pad_register_axis(m, x, reg_tile: int):
+    """Round the register axis up to a multiple of ``reg_tile``: padded x
+    slots are 0 and the padded matrix columns VISITED (sticky under
+    max-merge), so they never change and are sliced off by the caller."""
+    pad = pad_amount(x.shape[0], reg_tile)
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        if m is not None:
+            m = jnp.pad(m, ((0, 0), (0, pad)), constant_values=VISITED)
+    return m, x
 
 
 def _propagate_kernel(src_ref, dst_ref, h_ref, lo_ref, thr_ref, x_ref, m_ref,
@@ -87,11 +112,13 @@ def propagate_sweep_pallas(m, src, dst, thr, x, h=None, lo=None, *, seed: int = 
         predicate = fused_predicate
     n_pad, num_regs = m.shape
     num_edges = src.shape[0]
-    reg_tile = pick_block(num_regs, reg_tile)
-    edge_block = pick_block(num_edges, edge_block)
-    assert num_edges % edge_block == 0 and num_regs % reg_tile == 0
-    grid = (num_regs // reg_tile, num_edges // edge_block)
-    return pl.pallas_call(
+    reg_tile = clamp_block(num_regs, reg_tile)
+    edge_block = clamp_block(num_edges, edge_block)
+    src, dst, h, lo, thr = pad_edge_operands(src, dst, h, lo, thr, edge_block)
+    m_in, x = pad_register_axis(m, x, reg_tile)
+    regs_pad = x.shape[0]
+    grid = (regs_pad // reg_tile, src.shape[0] // edge_block)
+    out = pl.pallas_call(
         partial(_propagate_kernel, edge_block=edge_block, predicate=predicate),
         grid=grid,
         in_specs=[
@@ -104,6 +131,7 @@ def propagate_sweep_pallas(m, src, dst, thr, x, h=None, lo=None, *, seed: int = 
             pl.BlockSpec((n_pad, reg_tile), lambda r, e: (0, r)),
         ],
         out_specs=pl.BlockSpec((n_pad, reg_tile), lambda r, e: (0, r)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, num_regs), jnp.int8),
+        out_shape=jax.ShapeDtypeStruct((n_pad, regs_pad), jnp.int8),
         interpret=interpret,
-    )(src, dst, h, lo, thr, x, m)
+    )(src, dst, h, lo, thr, x, m_in)
+    return out[:, :num_regs] if regs_pad != num_regs else out

@@ -64,9 +64,25 @@ def add_common_im_args(ap: argparse.ArgumentParser, *,
                           "(repro.runtime registry; 'auto' picks mesh when "
                           "jax + devices allow a sharded run, else serial, "
                           "else single)")
+    add_tuning_arg(grp)
     grp.add_argument("--seed", type=int, default=0)
     add_obs_args(ap)
     return ap
+
+
+def add_tuning_arg(ap) -> None:
+    """The shared ``--tuning`` flag (``RunSpec.tuning`` / :mod:`repro.tune`).
+
+    Accepts an ``ArgumentParser`` or an argument group; drivers that build
+    their own workload flags (dryrun, runtime_bench) call this directly."""
+    ap.add_argument("--tuning", default="off",
+                    choices=("off", "cached", "auto"),
+                    help="measured kernel tuning (repro.tune): off = "
+                         "hard-coded defaults; cached = apply TUNE_cache."
+                         "json winners (a miss falls back to the defaults); "
+                         "auto = measure misses on the actual graph and "
+                         "persist winners. Performance-only: results are "
+                         "bit-identical across modes")
 
 
 def add_obs_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:

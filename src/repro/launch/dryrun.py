@@ -48,7 +48,24 @@ IM_CELLS = {
 }
 
 
-def lower_im_cell(name: str, mesh, *, k: int = 4, schedule: str = "ring"):
+def _tuned_local_sweeps(name: str, tuning: str) -> int:
+    """Cached ``bucket_propagate`` winner for a cell's edge count (the one
+    tuned knob that survives a shapes-only lowering). ``tuning="auto"``
+    cannot measure here — there is no real graph — so both non-off modes
+    read the cache and fall back to 0 (today's default) on a miss."""
+    if tuning == "off":
+        return 0
+    from repro.tune import cache_key, default_cache
+
+    _, m, _, _ = IM_CELLS[name]
+    cfg = default_cache().lookup(cache_key(
+        "bucket_propagate", backend="mesh", impl="ref", model="wc",
+        num_edges=int(m)))
+    return int(cfg.local_sweeps) if cfg is not None else 0
+
+
+def lower_im_cell(name: str, mesh, *, k: int = 4, schedule: str = "ring",
+                  local_sweeps: int = 0):
     """Lower the full distributed DiFuseR loop with ShapeDtypeStruct inputs
     (no host graph build — bucket sizes come from the duplication model)."""
     from jax.sharding import PartitionSpec as P
@@ -80,7 +97,8 @@ def lower_im_cell(name: str, mesh, *, k: int = 4, schedule: str = "ring"):
 
     maker = _make_distributed_fn(
         part, k=k, vertex_axis=vertex_axis, sim_axes=sim_axes, estimator="hll",
-        rebuild_threshold=0.01, max_prop=24, max_casc=24, seed=0, schedule=schedule)
+        rebuild_threshold=0.01, max_prop=24, max_casc=24, seed=0,
+        schedule=schedule, local_sweeps=local_sweeps)
     body = maker(mesh)
 
     sim_spec = sim_axes if len(sim_axes) > 1 else sim_axes[0]
@@ -113,7 +131,8 @@ def _cell_metrics(lowered):
     }
 
 
-def run_cell(name, mesh, mesh_name, *, out_dir=None, tag="", schedule="ring"):
+def run_cell(name, mesh, mesh_name, *, out_dir=None, tag="", schedule="ring",
+             local_sweeps=0):
     """Lower + compile one IM cell, recording cost/memory/collective stats."""
     from repro.obs import trace
 
@@ -122,7 +141,8 @@ def run_cell(name, mesh, mesh_name, *, out_dir=None, tag="", schedule="ring"):
     try:
         with trace.span("dryrun.cell", phase="plan", arch=name,
                         mesh=mesh_name, schedule=schedule):
-            lowered, part = lower_im_cell(name, mesh, schedule=schedule)
+            lowered, part = lower_im_cell(name, mesh, schedule=schedule,
+                                          local_sweeps=local_sweeps)
             compiled, m = _cell_metrics(lowered)
         mem = compiled.memory_analysis()
         chips = len(mesh.devices.flatten())
@@ -164,8 +184,9 @@ def main() -> None:
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--schedule", default="ring", choices=["ring", "allgather"])
     ap.add_argument("--tag", default="", help="artifact filename suffix")
-    from repro.launch.common import add_obs_args, observe
+    from repro.launch.common import add_obs_args, add_tuning_arg, observe
 
+    add_tuning_arg(ap)
     add_obs_args(ap)
     args = ap.parse_args()
 
@@ -181,7 +202,9 @@ def main() -> None:
         for mesh_name, mesh in meshes:
             for name in names:
                 rec = run_cell(name, mesh, mesh_name, out_dir=args.out,
-                               schedule=args.schedule, tag=args.tag)
+                               schedule=args.schedule, tag=args.tag,
+                               local_sweeps=_tuned_local_sweeps(name,
+                                                                args.tuning))
                 status = "OK " if rec["ok"] else "FAIL"
                 print(f"[{status}] {name:24s} im_step      {mesh_name:12s} "
                       f"{rec.get('compile_s', '-'):>6}s  {rec.get('error', '')}")

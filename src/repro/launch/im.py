@@ -62,7 +62,8 @@ def _run(args) -> dict:
         num_registers=args.registers, seed=args.seed, model=args.model,
         sort_x=not args.no_fasst, fasst=not args.no_fasst,
         backend=args.backend, mu_v=mu_v, mu_s=mu_s,
-        partition=args.partition, schedule=args.schedule)
+        partition=args.partition, schedule=args.schedule,
+        tuning=args.tuning)
 
     t0 = time.time()
     report = run_im(g, args.k, spec)

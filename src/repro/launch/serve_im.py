@@ -87,7 +87,8 @@ def _run(args) -> dict:
                    model=args.model, backend=args.backend,
                    residency=args.residency,
                    mu_v=args.plan_shards if wants_device else 1, mu_s=1,
-                   partition=args.partition if args.partition else "block")
+                   partition=args.partition if args.partition else "block",
+                   tuning=args.tuning)
     sess = InfluenceSession(g, spec,
                             store=SketchStore(num_banks=args.banks, spec=spec))
 

@@ -10,7 +10,10 @@ next to the BENCH artifacts:
   * predicted-vs-measured shard skew from :mod:`repro.obs.shardprof` —
     per-shard relative load bars for the latest profile plus an
     imbalance table over every captured profile;
-  * the SLO watchdog summary (per-class window p99 vs budget, status).
+  * the SLO watchdog summary (per-class window p99 vs budget, status);
+  * the kernel-tuning table from the :mod:`repro.tune` cache — per
+    workload key, the config that measured fastest, default vs tuned
+    time, achieved GB/s and fraction of the bandwidth roof.
 
 Everything renders as inline SVG/CSS (system sans, no scripts, no network),
 so the report opens anywhere — including the CI artifact viewer. Charts
@@ -341,6 +344,60 @@ def _section_slo(slo) -> str:
             f'<table>{hdr}{"".join(trs)}</table></div>')
 
 
+def _cfg_label(cfg: dict) -> str:
+    """Compact KernelConfig rendering: only the knobs that differ from the
+    all-defaults config ('defaults' when none do)."""
+    parts = []
+    if cfg.get("edge_block"):
+        parts.append(f"eb={cfg['edge_block']}")
+    if cfg.get("reg_tile"):
+        parts.append(f"rt={cfg['reg_tile']}")
+    if cfg.get("local_sweeps"):
+        parts.append(f"ls={cfg['local_sweeps']}")
+    if cfg.get("pad_mode", "step") != "step":
+        parts.append(f"pad={cfg['pad_mode']}")
+    return " ".join(parts) if parts else "defaults"
+
+
+def _section_tuning(tuning) -> str:
+    """Measured kernel winners (the repro.tune cache): what config was
+    chosen per workload key, and the evidence — default vs tuned time,
+    achieved GB/s, fraction of the HBM roof."""
+    if not tuning:
+        return ('<div class="card"><h2>Kernel tuning</h2><p class="empty">'
+                'no tuning cache captured (run with --tuning auto or seed '
+                'TUNE_cache.json)</p></div>')
+    hdr = ("<tr><th>workload key</th><th>chosen config</th>"
+           "<th>default</th><th>tuned</th><th>speedup</th>"
+           "<th>GB/s</th><th>roof</th></tr>")
+    trs = []
+    for key, entry in sorted(tuning.items()):
+        cfg = _cfg_label(entry.get("config", {}))
+        m = entry.get("measurement") or {}
+        if m:
+            speedup = float(m.get("speedup", 1.0))
+            trs.append(
+                "<tr>"
+                f"<td>{_esc(key)}</td><td>{_esc(cfg)}</td>"
+                f"<td>{float(m.get('default_us', 0)):,.0f} µs</td>"
+                f"<td>{float(m.get('tuned_us', 0)):,.0f} µs</td>"
+                f"<td>{_status(speedup >= 0.999, f'{speedup:.2f}x')}</td>"
+                f"<td>{float(m.get('tuned_gbps', 0)):.2f}</td>"
+                f"<td>{float(m.get('frac_of_roof', 0)) * 100:.1f}%</td>"
+                "</tr>")
+        else:
+            trs.append(
+                "<tr>"
+                f"<td>{_esc(key)}</td><td>{_esc(cfg)}</td>"
+                f"<td colspan=5>{_status(None, 'no measurement recorded')}"
+                f"</td></tr>")
+    return (f'<div class="card"><h2>Kernel tuning</h2>'
+            f'<p class="sub">measured winners per workload key '
+            f'(family|backend|impl|model|edge-bucket) from the repro.tune '
+            f'cache; speedup = default time / tuned time on the same '
+            f'operands</p><table>{hdr}{"".join(trs)}</table></div>')
+
+
 def _section_backends(runtime) -> str:
     if not runtime or not runtime.get("backends"):
         return ""
@@ -371,6 +428,7 @@ def write_report(path: str, *, title: str = "repro perf report",
                  metrics_rows: Optional[Iterable[dict]] = None,
                  profiles: Optional[Iterable] = None,
                  slo: Optional[dict] = None,
+                 tuning: Optional[dict] = None,
                  generated: str = "") -> str:
     """Render the report to ``path`` and return the path. Every section is
     optional — missing streams render as labelled empty states, never
@@ -390,6 +448,7 @@ def write_report(path: str, *, title: str = "repro perf report",
         _section_backends(runtime),
         _section_phases(events),
         _section_skew(profiles, metrics_rows),
+        _section_tuning(tuning),
         _section_slo(slo),
         "</body></html>",
     ]
@@ -401,11 +460,13 @@ def write_report(path: str, *, title: str = "repro perf report",
 def write_report_from_artifacts(path: str = "BENCH_report.html", *,
                                 runtime_json: str = "BENCH_runtime.json",
                                 service_json: str = "BENCH_service.json",
+                                tuning_json: str = "TUNE_cache.json",
                                 recorder=None, slo: Optional[dict] = None,
                                 generated: str = "") -> str:
     """The harness entry point: stitch whatever the run left behind — the
-    ``BENCH_*`` JSON records on disk, the live trace recorder's spans, the
-    global metrics registry, and the shard-profile ring."""
+    ``BENCH_*`` JSON records on disk, the tuning cache, the live trace
+    recorder's spans, the global metrics registry, and the shard-profile
+    ring."""
     from repro.obs import metrics, shardprof, trace
 
     def _load(p):
@@ -414,6 +475,12 @@ def write_report_from_artifacts(path: str = "BENCH_report.html", *,
                 return json.load(f)
         except (OSError, ValueError):
             return None
+
+    tuning = None
+    if os.path.exists(tuning_json):
+        from repro.tune.cache import TuningCache
+
+        tuning = TuningCache(tuning_json).records() or None
 
     rec = recorder if recorder is not None else trace.get_recorder()
     return write_report(
@@ -424,4 +491,5 @@ def write_report_from_artifacts(path: str = "BENCH_report.html", *,
         metrics_rows=metrics.registry().snapshot(),
         profiles=shardprof.profiles(),
         slo=slo,
+        tuning=tuning,
         generated=generated)

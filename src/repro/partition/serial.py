@@ -68,6 +68,12 @@ class _RingState:
         #: physically separable, so this is the measured ground truth the
         #: predicted PlanStats are checked against.
         self.profiler = None
+        #: Extra comm-free sweeps before each full ring sweep (the serial
+        #: twin of ``DistributedConfig.local_sweeps``): only the kk=0
+        #: self-shard buckets are merged, so no cross-shard block is read.
+        #: Result-invariant — extra monotone sweeps toward the unique
+        #: max-merge fixpoint (repro.tune may raise it; 0 = historical).
+        self.local_sweeps = 0
         self.pred = resolve_model(cfg.model).predicate
         self.owned = part.owned_ids                        # (mu_v, n_loc)
         self.valid = self.owned < g.n                      # padding rows
@@ -110,7 +116,31 @@ class _RingState:
         return self.pred(bh[:, None], bl[:, None], bt[:, None],
                          self.part.x_shards[s][None, :])
 
+    def sweep_local(self) -> bool:
+        """One comm-free propagate sweep: merge only the kk=0 buckets (edges
+        whose read block is the writing shard's own rows). The device twin
+        is the ``local_sweeps`` prologue of the shard_map ring body."""
+        p = self.part
+        bufs = (p.p_h, p.p_w, p.p_r, p.p_t, p.p_l)
+        if bufs[0][0].shape[-1] == 0:
+            return False
+        out = self.m.copy()
+        for v in range(p.mu_v):
+            for s in range(p.mu_s):
+                acc = self.m[v, s].copy()
+                bw, br = bufs[1][0][v, s], bufs[2][0][v, s]
+                contrib = np.where(self._mask(0, v, s, bufs),
+                                   self.m[v, s][br], np.int8(VISITED))
+                np.maximum.at(acc, bw, contrib)
+                out[v, s] = np.where(self.m[v, s] == VISITED, self.m[v, s], acc)
+        changed = bool((out != self.m).any())
+        self.m = out
+        return changed
+
     def sweep_propagate(self) -> bool:
+        for _ in range(self.local_sweeps):   # comm-free prologue (tunable)
+            if not self.sweep_local():
+                break
         p = self.part
         prof = self.profiler
         bufs = (p.p_h, p.p_w, p.p_r, p.p_t, p.p_l)
@@ -249,7 +279,7 @@ def _find_seeds_ring_serial(g: Graph, k: int,
                             strategy: str = "block",
                             plan: Optional[PartitionPlan] = None,
                             x: Optional[np.ndarray] = None,
-                            pad_mode: str = "step"):
+                            pad_mode: str = "step", local_sweeps: int = 0):
     """Serial-ring Alg. 4 driver (the ``serial`` runtime backend's body).
 
     Returns ``(InfluenceResult, Partition2D)`` like the distributed path;
@@ -267,6 +297,7 @@ def _find_seeds_ring_serial(g: Graph, k: int,
     part = build_partition_2d(g, x, mu_v, mu_s, seed=cfg.seed, model=cfg.model,
                               plan=plan, pad_mode=pad_mode, sampled=sampled)
     st = _RingState(part, g, cfg)
+    st.local_sweeps = int(local_sweeps)
     if shardprof.enabled():
         st.profiler = shardprof.profile_for_partition(
             part, backend="serial", phase="fixpoint")
@@ -344,7 +375,8 @@ def build_matrix_ring_serial(g: Graph, config: Optional[DiFuserConfig] = None,
                              mu_v: int = 2, mu_s: int = 1,
                              strategy: str = "block",
                              plan: Optional[PartitionPlan] = None,
-                             pad_mode: str = "step", reg_offset: int = 0):
+                             pad_mode: str = "step", reg_offset: int = 0,
+                             local_sweeps: int = 0):
     """Alg. 4 lines 3-6 on the serial ring: fill + propagate-to-fixpoint.
 
     Expects ``g`` dst-sorted and ``x`` canonical (sorted). Returns
@@ -368,6 +400,7 @@ def build_matrix_ring_serial(g: Graph, config: Optional[DiFuserConfig] = None,
     with trace.span("serial.build_matrix", phase="build", mu_v=mu_v,
                     mu_s=mu_s, reg_offset=reg_offset) as sp:
         st = _RingState(part, g, cfg, reg_offset=reg_offset)
+        st.local_sweeps = int(local_sweeps)
         if shardprof.enabled():
             st.profiler = shardprof.profile_for_partition(
                 part, backend="serial", phase="build")

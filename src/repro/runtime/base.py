@@ -43,6 +43,23 @@ class BackendUnavailable(RuntimeError):
     """The requested backend cannot run in this environment/spec."""
 
 
+def apply_tuning(g: Optional[Graph], spec: RunSpec,
+                 backend_name: str) -> RunSpec:
+    """The backends' tuning hook: overlay measured kernel-config winners
+    onto ``spec`` per its ``tuning`` mode (see :mod:`repro.tune`).
+
+    ``tuning="off"`` short-circuits here without importing the tuner —
+    the historical zero-overhead path. Tuned fields are performance-only
+    (tile shapes, scan chunks, ring schedule), so results are identical
+    whichever spec comes back.
+    """
+    if getattr(spec, "tuning", "off") == "off" or g is None:
+        return spec
+    from repro.tune import resolve_spec
+
+    return resolve_spec(g, spec, backend=backend_name)
+
+
 @dataclasses.dataclass(frozen=True)
 class BackendCapabilities:
     """What a backend reports about itself (the ``supports`` fast facts)."""

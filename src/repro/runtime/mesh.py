@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.graphs.structs import Graph
 from repro.runtime.base import (Backend, BackendCapabilities, RunReport,
-                                register_backend)
+                                apply_tuning, register_backend)
 from repro.runtime.spec import RunSpec
 from repro.utils.jax_compat import JAX_HAS_AXIS_TYPE
 
@@ -79,8 +79,11 @@ class MeshBackend(Backend):
         from repro.core import distributed as _dist
 
         mesh = self._mesh_for(spec, mesh)
-        cfg = spec.distributed_config()
         t0 = time.perf_counter()
+        # tuned on the serial ring twin — same bucket schedule, so the
+        # (local_sweeps, pad_mode) ranking transfers to the device path
+        spec = apply_tuning(g, spec, self.name)
+        cfg = spec.distributed_config()
         res, part = _dist._find_seeds_distributed(g, k, mesh, cfg, x, plan=plan)
         return RunReport(result=res, backend=self.name, spec=spec,
                          partition=part, wall_s=time.perf_counter() - t0)
@@ -93,6 +96,7 @@ class MeshBackend(Backend):
         self._check(g, spec)
         from repro.core import distributed as _dist
 
+        spec = apply_tuning(g, spec, self.name)
         cfg = spec.distributed_config()
         if not normalized:
             from repro.core.difuser import normalize_inputs

@@ -17,7 +17,7 @@ import numpy as np
 from repro.graphs.structs import Graph
 from repro.partition import serial as _serial
 from repro.runtime.base import (Backend, BackendCapabilities, RunReport,
-                                register_backend)
+                                apply_tuning, register_backend)
 from repro.runtime.spec import RunSpec
 
 
@@ -46,11 +46,13 @@ class SerialRingBackend(Backend):
     def find_seeds(self, g: Graph, k: int, spec: RunSpec, *,
                    x: Optional[np.ndarray] = None, mesh=None,
                    plan=None) -> RunReport:
-        mu_v, mu_s = _grid(spec)
         t0 = time.perf_counter()
+        spec = apply_tuning(g, spec, self.name)
+        mu_v, mu_s = _grid(spec)
         res, part = _serial._find_seeds_ring_serial(
             g, k, spec.difuser_config(), mu_v=mu_v, mu_s=mu_s,
-            strategy=spec.partition, plan=plan, x=x, pad_mode=spec.pad_mode)
+            strategy=spec.partition, plan=plan, x=x, pad_mode=spec.pad_mode,
+            local_sweeps=spec.local_sweeps)
         return RunReport(result=res, backend=self.name, spec=spec,
                          partition=part, wall_s=time.perf_counter() - t0)
 
@@ -59,6 +61,7 @@ class SerialRingBackend(Backend):
                      edges=None, mesh=None):
         # ``edges`` (single-backend device operands) and ``mesh`` are not
         # applicable: the ring build re-buckets per x-slice on host.
+        spec = apply_tuning(g, spec, self.name)
         cfg = spec.difuser_config()
         if not normalized:
             from repro.core.difuser import normalize_inputs
@@ -69,7 +72,8 @@ class SerialRingBackend(Backend):
             mu_s = 1   # bank slice narrower than the sim grid: keep it whole
         m, iters, _ = _serial.build_matrix_ring_serial(
             g, cfg, x, mu_v=mu_v, mu_s=mu_s, strategy=spec.partition,
-            pad_mode=spec.pad_mode, reg_offset=reg_offset)
+            pad_mode=spec.pad_mode, reg_offset=reg_offset,
+            local_sweeps=spec.local_sweeps)
         return m, iters
 
     def fixpoint(self, m, g: Graph, spec: RunSpec, x: np.ndarray, *,

@@ -17,7 +17,7 @@ from repro.core.cascade import cascade_from_seed
 from repro.core.simulate import propagate_to_fixpoint
 from repro.graphs.structs import Graph
 from repro.runtime.base import (Backend, BackendCapabilities, RunReport,
-                                register_backend)
+                                apply_tuning, register_backend)
 from repro.runtime.spec import RunSpec
 
 
@@ -40,6 +40,7 @@ class SingleDeviceBackend(Backend):
                    x: Optional[np.ndarray] = None, mesh=None,
                    plan=None) -> RunReport:
         t0 = time.perf_counter()
+        spec = apply_tuning(g, spec, self.name)
         res = _difuser._find_seeds_single(g, k, spec.difuser_config(), x)
         return RunReport(result=res, backend=self.name, spec=spec,
                          partition=None, wall_s=time.perf_counter() - t0)
@@ -47,6 +48,7 @@ class SingleDeviceBackend(Backend):
     def build_matrix(self, g: Graph, spec: RunSpec, x: np.ndarray, *,
                      reg_offset: int = 0, normalized: bool = False,
                      edges=None, mesh=None):
+        spec = apply_tuning(g, spec, self.name)
         m, iters, _ = _difuser.build_sketch_matrix(
             g, spec.difuser_config(), x, reg_offset=reg_offset,
             normalized=normalized, edges=edges)
@@ -54,7 +56,7 @@ class SingleDeviceBackend(Backend):
 
     def fixpoint(self, m, g: Graph, spec: RunSpec, x: np.ndarray, *,
                  edges=None):
-        cfg = spec.difuser_config()
+        cfg = apply_tuning(g, spec, self.name).difuser_config()
         if edges is None:
             edges = _difuser.edge_operands(g, cfg)
         src, dst, h, lo, thr = edges
@@ -62,20 +64,22 @@ class SingleDeviceBackend(Backend):
             m, src, dst, thr, jnp.asarray(np.asarray(x, np.uint32)), h, lo,
             seed=cfg.seed, impl=cfg.impl, edge_chunk=cfg.edge_chunk,
             max_iters=cfg.max_propagate_iters,
-            predicate=_difuser.resolve_model(cfg.model).predicate)
+            predicate=_difuser.resolve_model(cfg.model).predicate,
+            edge_block=cfg.edge_block, reg_tile=cfg.reg_tile)
 
     def cascade(self, m, seed_vertex: int, g: Graph, spec: RunSpec,
                 x: np.ndarray, *, edges=None):
-        cfg = spec.difuser_config()
+        cfg = apply_tuning(g, spec, self.name).difuser_config()
         if edges is None:
             edges = _difuser.edge_operands(g, cfg)
         src, dst, h, lo, thr = edges
         return cascade_from_seed(
             m, seed_vertex, src, dst, thr,
             jnp.asarray(np.asarray(x, np.uint32)), h, lo, seed=cfg.seed,
-            impl=cfg.impl, edge_chunk=cfg.edge_chunk,
+            impl=cfg.impl, edge_chunk=cfg.cascade_chunk or cfg.edge_chunk,
             max_iters=cfg.max_cascade_iters,
-            predicate=_difuser.resolve_model(cfg.model).predicate)
+            predicate=_difuser.resolve_model(cfg.model).predicate,
+            edge_block=cfg.edge_block, reg_tile=cfg.reg_tile)
 
 
 register_backend(SingleDeviceBackend())

@@ -23,10 +23,12 @@ from typing import Optional, Tuple
 from repro.core.difuser import DiFuserConfig
 from repro.diffusion.constants import DEFAULT_MODEL
 
-#: DiFuserConfig field names (the result-affecting half of a RunSpec).
+#: DiFuserConfig field names (the result-affecting half of a RunSpec, plus
+#: the performance-only tile knobs that ride in the same config).
 _SKETCH_FIELDS = ("num_registers", "seed", "estimator", "rebuild_threshold",
                   "max_propagate_iters", "max_cascade_iters", "edge_chunk",
-                  "impl", "sort_x", "model")
+                  "impl", "sort_x", "model", "cascade_chunk", "edge_block",
+                  "reg_tile")
 
 #: DistributedConfig-only field names shared with RunSpec.
 _EXEC_FIELDS = ("vertex_axis", "sim_axes", "schedule", "fasst",
@@ -48,6 +50,11 @@ class RunSpec:
     impl: str = "ref"                  # "ref" | "pallas"
     sort_x: bool = True                # FASST sample ordering
     model: str = DEFAULT_MODEL         # diffusion model spec (repro.diffusion)
+    # performance-only tile knobs (0 = library default; repro.tune writes
+    # measured winners here — results are invariant by the kernel contract)
+    cascade_chunk: int = 0             # cascade scan chunk (ref impl)
+    edge_block: int = 0                # pallas edge tile
+    reg_tile: int = 0                  # pallas register tile
 
     # ---- execution strategy ----
     backend: str = "auto"              # "auto" | registered backend name
@@ -73,6 +80,17 @@ class RunSpec:
     # Not part of _SKETCH_FIELDS/_EXEC_FIELDS, so it never leaks into the
     # legacy config conversions.
     slo: Tuple[Tuple[str, float], ...] = ()
+
+    # ---- measurement-driven kernel tuning (repro.tune) ----
+    # "off"    — exact historical behaviour, no cache reads, no measuring
+    # "cached" — apply TuningCache winners when present (deterministic
+    #            fallback to the spec's own values on a miss)
+    # "auto"   — like "cached", but a miss measures candidates against the
+    #            actual graph and persists the winner
+    # Performance-only by contract: seed sets and sketch matrices are
+    # bit-identical across all three modes (tier-1 property-tested). Like
+    # ``slo``, not part of _SKETCH_FIELDS/_EXEC_FIELDS.
+    tuning: str = "off"
 
     @property
     def num_shards(self) -> int:

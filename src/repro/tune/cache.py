@@ -1,0 +1,157 @@
+"""Persistent tuning cache: measured kernel-config winners keyed by workload.
+
+One JSON file maps ``kernel-family × backend × impl × diffusion-model ×
+size-bucket`` to the :class:`~repro.tune.config.KernelConfig` that measured
+fastest, together with the measurement record that justified it (default vs
+tuned seconds, achieved GB/s, fraction of the bandwidth roof). Sizes are
+bucketed to the next power of two so a cache tuned on one RMAT scale serves
+its neighbors; a lookup miss falls back deterministically to today's
+hard-coded defaults (``tuning="cached"`` on a cold cache is bit- and
+schedule-identical to ``tuning="off"``).
+
+The file lives at ``TUNE_cache.json`` in the working directory by default
+(override with ``REPRO_TUNE_CACHE``); CI uploads it next to the BENCH_*
+artifacts so fast-mode bench runs reuse the measured winners instead of
+re-timing.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+from repro.tune.config import KernelConfig
+
+#: schema version of the on-disk JSON
+CACHE_VERSION = 1
+
+#: default on-disk location (cwd-relative, like the BENCH_* artifacts)
+DEFAULT_CACHE_PATH = "TUNE_cache.json"
+
+#: environment override for the cache path ("" disables persistence)
+CACHE_ENV = "REPRO_TUNE_CACHE"
+
+
+def size_bucket(num_edges: int) -> int:
+    """Round an edge count up to the next power of two (min 256).
+
+    Buckets keep the key space small and let a cache measured at one graph
+    scale serve nearby scales; the kernels themselves clamp any tile to the
+    actual operand size, so an over-sized winner degrades gracefully.
+    """
+    n = max(int(num_edges), 1)
+    b = 256
+    while b < n:
+        b <<= 1
+    return b
+
+
+def cache_key(family: str, *, backend: str, impl: str, model: str,
+              num_edges: int) -> str:
+    """The canonical lookup key: ``family|backend|impl|model|e<bucket>``."""
+    return "|".join((family, backend, impl, model,
+                     f"e{size_bucket(num_edges)}"))
+
+
+class TuningCache:
+    """JSON-backed map of cache key → (winning config, measurement record)."""
+
+    def __init__(self, path: Optional[str] = DEFAULT_CACHE_PATH):
+        self.path = path or None
+        self._entries: Dict[str, dict] = {}
+        self._loaded = False
+
+    # ------------------------------------------------------------------
+    # persistence
+    # ------------------------------------------------------------------
+
+    def load(self) -> "TuningCache":
+        """Read the JSON file if present; silently empty on any problem."""
+        self._loaded = True
+        if not self.path or not os.path.exists(self.path):
+            return self
+        try:
+            with open(self.path, "r", encoding="utf-8") as fh:
+                doc = json.load(fh)
+            if int(doc.get("version", 0)) == CACHE_VERSION:
+                entries = doc.get("entries", {})
+                if isinstance(entries, dict):
+                    self._entries = {str(k): dict(v)
+                                     for k, v in entries.items()}
+        except (OSError, ValueError):
+            self._entries = {}
+        return self
+
+    def save(self) -> None:
+        """Write back to ``self.path`` (no-op when persistence is disabled)."""
+        if not self.path:
+            return
+        doc = {"version": CACHE_VERSION, "entries": self._entries}
+        tmp = f"{self.path}.tmp"
+        with open(tmp, "w", encoding="utf-8") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def _ensure_loaded(self) -> None:
+        if not self._loaded:
+            self.load()
+
+    # ------------------------------------------------------------------
+    # lookup / record
+    # ------------------------------------------------------------------
+
+    def lookup(self, key: str) -> Optional[KernelConfig]:
+        """The winning config for ``key``, or None on a miss."""
+        self._ensure_loaded()
+        entry = self._entries.get(key)
+        if entry is None:
+            return None
+        try:
+            return KernelConfig.from_dict(entry.get("config", {}))
+        except (TypeError, ValueError):
+            return None
+
+    def record(self, key: str) -> Optional[dict]:
+        """The full measurement record for ``key`` (config + timings)."""
+        self._ensure_loaded()
+        entry = self._entries.get(key)
+        return dict(entry) if entry is not None else None
+
+    def put(self, key: str, config: KernelConfig, *,
+            measurement: Optional[dict] = None) -> None:
+        """Store a winner (and its evidence) under ``key``."""
+        self._ensure_loaded()
+        entry = {"config": config.to_dict()}
+        if measurement:
+            entry["measurement"] = dict(measurement)
+        self._entries[key] = entry
+
+    def records(self) -> Dict[str, dict]:
+        """All entries, keyed by cache key (copies; for reporting)."""
+        self._ensure_loaded()
+        return {k: dict(v) for k, v in self._entries.items()}
+
+    def __len__(self) -> int:
+        self._ensure_loaded()
+        return len(self._entries)
+
+
+_default: Optional[TuningCache] = None
+
+
+def default_cache() -> TuningCache:
+    """Process-wide cache at ``$REPRO_TUNE_CACHE`` or ``TUNE_cache.json``.
+
+    Setting ``REPRO_TUNE_CACHE=""`` disables persistence (in-memory only).
+    """
+    global _default
+    path = os.environ.get(CACHE_ENV, DEFAULT_CACHE_PATH)
+    if _default is None or _default.path != (path or None):
+        _default = TuningCache(path)
+    return _default
+
+
+def reset_default_cache() -> None:
+    """Drop the process-wide cache singleton (tests)."""
+    global _default
+    _default = None

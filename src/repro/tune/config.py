@@ -1,0 +1,176 @@
+"""Kernel tuning search space: one :class:`KernelConfig` per kernel family.
+
+The four hot-path kernel families (``fused_sample``, ``sketch_propagate``,
+``cascade_step``, ``bucket_propagate``) historically ran with one hard-coded
+tiling (``kernels.common.EDGE_BLOCK/REG_TILE``, ``edge_chunk=2048`` for the
+jnp oracles) and ``local_sweeps=0``, regardless of backend, diffusion model,
+or problem size. A :class:`KernelConfig` names the knobs the autotuner may
+move; all of them are performance-only — seed sets and sketch matrices are
+bit-identical across every config by the kernel contract (Jacobi max-merge
+is shape/chunk/schedule-invariant; bucket padding and extra comm-free
+sweeps are result-invariant), which tests/test_property.py holds as a
+tier-1 property.
+
+Candidate generation is *seeded from measurements* rather than brute-forced:
+``schedule_candidates`` reads the planner's :class:`PlanStats` (ring bytes
+per sweep, pad waste) and the last published
+:class:`~repro.obs.shardprof.MeasuredProfile` (measured per-bucket bytes) to
+decide which ``local_sweeps``/``pad_mode`` values are even worth timing —
+the PR-7 observability loop closed back into execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+#: kernel families the tuner knows how to time and thread
+KERNEL_FAMILIES = ("fused_sample", "sketch_propagate", "cascade_step",
+                   "bucket_propagate")
+
+#: families whose knob is the single-device sweep tiling
+SWEEP_FAMILIES = ("fused_sample", "sketch_propagate", "cascade_step")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One point of the per-family search space.
+
+    ``edge_block`` — edges per tile: the ``lax.scan`` chunk for the jnp
+    oracle sweeps (``edge_chunk``), the Pallas BlockSpec edge tile for the
+    kernel bodies. 0 = library default (2048 / ``kernels.common.EDGE_BLOCK``).
+    ``reg_tile`` — registers per lane tile (Pallas impl only; 0 = default).
+    ``local_sweeps`` — comm-free block-Jacobi sweeps per ring exchange
+    (``bucket_propagate`` family; consumed by the ring fixpoints).
+    ``pad_mode`` — bucket padding policy of the 2-D partition
+    (``bucket_propagate`` family; "step" | "global").
+    """
+
+    edge_block: int = 0
+    reg_tile: int = 0
+    local_sweeps: int = 0
+    pad_mode: str = "step"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KernelConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+
+#: today's hard-coded defaults, per family — what ``tuning="off"`` runs and
+#: what every measured speedup is reported against
+DEFAULT_CONFIGS = {
+    "fused_sample": KernelConfig(),
+    "sketch_propagate": KernelConfig(),
+    "cascade_step": KernelConfig(),
+    "bucket_propagate": KernelConfig(),
+}
+
+
+def sweep_candidates(num_edges: int, *, impl: str = "ref",
+                     default_chunk: int = 2048) -> Tuple[KernelConfig, ...]:
+    """Tile candidates for the single-device sweep families.
+
+    ref impl: the knob is the scan chunk — powers of two below and above
+    the default plus the full edge count (no scan at all). The small end
+    matters most: a chunk's working set is ``chunk x num_registers``
+    intermediates, so at high register counts the 2048 default falls out of
+    cache and 128/256 measure 1.2-1.3x faster. pallas impl: a small
+    (edge_block, reg_tile) grid around the library defaults.
+    """
+    if impl == "pallas":
+        cands = []
+        for eb in (256, 512, 1024):
+            for rt in (128, 256):
+                cands.append(KernelConfig(edge_block=min(eb, num_edges),
+                                          reg_tile=rt))
+        return tuple(dict.fromkeys(cands))
+    chunks = {c for c in (128, 256, 512, 2048, 8192)
+              if c <= max(num_edges, 128)}
+    chunks.add(default_chunk)
+    chunks.add(num_edges)            # full sweep: no scan at all
+    return tuple(KernelConfig(edge_block=int(c)) for c in sorted(chunks))
+
+
+def schedule_candidates(stats=None, profile=None, *,
+                        pad_mode: str = "step",
+                        max_local_sweeps: int = 2) -> Tuple[KernelConfig, ...]:
+    """``(local_sweeps, pad_mode)`` candidates for ``bucket_propagate``,
+    seeded from measured signals instead of the full grid:
+
+    * ``local_sweeps`` > 0 is only worth timing when exchanges are a
+      non-trivial share of sweep traffic. ``stats.ring_bytes_per_sweep``
+      (planner-predicted or measured :class:`PlanStats`) against the
+      measured per-bucket bytes of the last published
+      :class:`MeasuredProfile` gives that comm fraction; without a profile
+      the conservative (0, 1) pair is explored.
+    * ``pad_mode="global"`` re-pads every bucket to the global max — only a
+      candidate when the measured step-mode pad waste is already small
+      (< 10%), otherwise global padding strictly inflates it.
+    """
+    sweeps = [0]
+    comm_frac = None
+    if stats is not None and getattr(stats, "ring_bytes_per_sweep", 0):
+        ring = float(stats.ring_bytes_per_sweep)
+        local = None
+        if profile is not None:
+            try:
+                import numpy as np
+
+                per_sweep = max(int(getattr(profile, "sweeps", 0)), 1)
+                local = float(np.asarray(profile.step_bytes).sum()) / per_sweep
+            except Exception:
+                local = None
+        if local and local > 0:
+            comm_frac = ring / (ring + local)
+        else:
+            comm_frac = None
+    if comm_frac is None:
+        sweeps.append(1)                      # no measurement: probe one step
+    else:
+        if comm_frac > 0.05:
+            sweeps.append(1)
+        if comm_frac > 0.20 and max_local_sweeps >= 2:
+            sweeps.append(2)
+    pads = [pad_mode]
+    waste = getattr(stats, "pad_waste_frac", None) if stats is not None else None
+    if pad_mode == "step" and waste is not None and waste < 0.10:
+        pads.append("global")
+    out = []
+    for pm in pads:
+        for ls in sweeps:
+            out.append(KernelConfig(local_sweeps=int(ls), pad_mode=pm))
+    return tuple(dict.fromkeys(out))
+
+
+def spec_overrides(family: str, cfg: KernelConfig, spec) -> dict:
+    """Translate a family's winning :class:`KernelConfig` into
+    :class:`~repro.runtime.spec.RunSpec` field overrides.
+
+    ref impl: ``edge_block`` is the scan chunk — ``edge_chunk`` for the
+    propagate/build sweeps, ``cascade_chunk`` for the cascade sweeps.
+    pallas impl: the (edge_block, reg_tile) tile pair is shared by all
+    single-device kernels (one pair per traced program), tuned by the
+    ``sketch_propagate`` winner. ``bucket_propagate`` owns the ring
+    schedule knobs.
+    """
+    if family == "sketch_propagate":
+        if spec.impl == "pallas":
+            return {"edge_block": cfg.edge_block or 0,
+                    "reg_tile": cfg.reg_tile or 0}
+        return {"edge_chunk": cfg.edge_block or spec.edge_chunk}
+    if family == "cascade_step":
+        if spec.impl == "pallas":
+            return {}                  # tiles follow the propagate winner
+        return {"cascade_chunk": cfg.edge_block or 0}
+    if family == "bucket_propagate":
+        return {"local_sweeps": int(cfg.local_sweeps),
+                "pad_mode": cfg.pad_mode}
+    return {}                          # fused_sample: no spec-level knob (ref)
+
+
+def default_config(family: str) -> KernelConfig:
+    """Deterministic fallback on a cache miss: today's hard-coded defaults."""
+    return DEFAULT_CONFIGS.get(family, KernelConfig())

@@ -233,3 +233,69 @@ def test_repair_plan_shards_equals_rebuild_all_backends(mi, si, adds, seed):
 
     if _mesh_repair_ready():
         np.testing.assert_array_equal(repaired_matrix("mesh"), serial_m)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-config bit-identity (ISSUE 8): the knobs the autotuner moves —
+# scan chunks, cascade chunks, ring local_sweeps, bucket pad_mode — are
+# performance-only. Seed sets, gains, and the canonical sketch matrix are
+# byte-identical across every sampled KernelConfig x diffusion model x
+# backend. The mesh twin executes under the AxisType guard (the
+# test-jax-latest CI job); its ring consumes the same (local_sweeps,
+# pad_mode) knobs through DistributedConfig.
+# ---------------------------------------------------------------------------
+
+_TUNE_MODELS = ["wc", "ic:0.2", "lt", "dic:0.5"]
+#: RunSpec overrides the tuner could emit (spec_overrides output space);
+#: {} is today's defaults — the baseline every other point must match
+_TUNE_OVERRIDES = [
+    {},
+    {"edge_chunk": 7, "cascade_chunk": 7},
+    {"edge_chunk": 128, "cascade_chunk": 512},
+    {"edge_chunk": 1 << 20},                   # >= m: one unscanned sweep
+    {"local_sweeps": 1},
+    {"local_sweeps": 2, "pad_mode": "global"},
+]
+
+_tune_baselines: dict = {}
+
+
+def _tune_run(model, backend, overrides):
+    from repro.graphs import rmat_graph
+    from repro.runtime import InfluenceSession, RunSpec
+
+    g = _tune_baselines.setdefault(
+        "graph", rmat_graph(6, edge_factor=4, seed=11, setting="w1"))
+    spec = RunSpec(num_registers=32, seed=11, model=model, backend=backend,
+                   mu_v=2 if backend != "single" else 1,
+                   mu_s=2 if backend != "single" else 1,
+                   **overrides)
+    sess = InfluenceSession(g, spec)
+    res = sess.find_seeds(3)
+    m, _, _ = sess.build_sketch_matrix()
+    return np.asarray(res.seeds), np.asarray(res.est_gains), np.asarray(m)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=len(_TUNE_MODELS) - 1),
+       st.integers(min_value=1, max_value=len(_TUNE_OVERRIDES) - 1),
+       st.sampled_from(["single", "serial"]))
+def test_kernel_config_bit_identity(mi, ci, backend):
+    """Property: any tuner-reachable RunSpec override produces seeds, gains,
+    and a canonical matrix byte-identical to the hard-coded defaults, for
+    every diffusion model on every always-available backend."""
+    model = _TUNE_MODELS[mi]
+    base_key = (model, backend)
+    if base_key not in _tune_baselines:
+        _tune_baselines[base_key] = _tune_run(model, backend, {})
+    seeds0, gains0, m0 = _tune_baselines[base_key]
+    seeds, gains, m = _tune_run(model, backend, _TUNE_OVERRIDES[ci])
+    np.testing.assert_array_equal(seeds, seeds0)
+    np.testing.assert_array_equal(gains, gains0)
+    np.testing.assert_array_equal(m, m0)
+
+    if backend == "serial" and _mesh_repair_ready():
+        m_seeds, m_gains, m_m = _tune_run(model, "mesh", _TUNE_OVERRIDES[ci])
+        np.testing.assert_array_equal(m_seeds, seeds0)
+        np.testing.assert_array_equal(m_gains, gains0)
+        np.testing.assert_array_equal(m_m, m0)
