@@ -62,6 +62,13 @@ def _service_metrics(rec: dict) -> Iterator[tuple[str, float, str]]:
             yield f"{row}.qps", float(stats["qps"]), HIGHER
         if stats.get("p99_ms"):
             yield f"{row}.p99_ms", float(stats["p99_ms"]), LOWER
+    # async admission pipeline: sustained open-loop throughput and e2e tail
+    stats = rec.get("async")
+    if stats:
+        if stats.get("sustained_qps"):
+            yield "async.sustained_qps", float(stats["sustained_qps"]), HIGHER
+        if stats.get("p99_ms"):
+            yield "async.p99_ms", float(stats["p99_ms"]), LOWER
 
 
 def _kernel_metrics(rec: dict) -> Iterator[tuple[str, float, str]]:

@@ -67,6 +67,19 @@ def run(argv=None) -> dict:
     ap.add_argument("--queries", type=int, default=1000)
     ap.add_argument("--topk", type=int, default=10, help="k for TopKSeeds queries")
     ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--async", dest="serve_async", action="store_true",
+                    help="serve through AsyncInfluenceEngine: futures + "
+                         "deadline-driven micro-batching, builds/repairs "
+                         "off the serving path (results bit-identical to "
+                         "the synchronous engine)")
+    ap.add_argument("--deadline-ms", type=float, default=50.0,
+                    help="per-query end-to-end SLO for --async (flush "
+                         "window = deadline/4; misses are counted and "
+                         "watchdogged)")
+    ap.add_argument("--max-resident", type=float, default=0.0,
+                    help="device budget in MB for --async multi-graph "
+                         "tenancy (0 = unbounded); cost-aware eviction "
+                         "keeps resident store bytes under it")
     ap.add_argument("--save", default="", help="persist the index npz here")
     args = ap.parse_args(argv)
     # --trace/--metrics wrap the whole serve run: build + query spans land
@@ -124,11 +137,35 @@ def _run(args) -> dict:
         print(f"plan attached: {plan.predicted.describe()} "
               f"({plan.mu_v} row blocks x {shard_bytes} B resident)")
 
-    for q in make_workload(g.n, args.queries, k=args.topk, seed=args.seed + 7):
-        engine.submit(key, q)
-    t0 = time.perf_counter()
-    results = engine.run()
-    wall_s = time.perf_counter() - t0
+    workload = make_workload(g.n, args.queries, k=args.topk, seed=args.seed + 7)
+    admission = {}
+    if getattr(args, "serve_async", False):
+        from repro.service import AsyncInfluenceEngine
+
+        import dataclasses as _dc
+        spec = _dc.replace(spec, serve_async=True,
+                           deadline_ms=args.deadline_ms,
+                           max_resident_mb=args.max_resident)
+        aeng = AsyncInfluenceEngine(engine, deadline_ms=args.deadline_ms,
+                                    max_resident_mb=args.max_resident,
+                                    spec=spec)
+        t0 = time.perf_counter()
+        futures = [aeng.submit(key, q) for q in workload]
+        aeng.drain()
+        wall_s = time.perf_counter() - t0
+        results = [f.result() for f in futures]
+        admission = aeng.admission_summary()
+        print(f"async: deadline {args.deadline_ms:.0f}ms  "
+              f"e2e p99 {admission['e2e_p99_ms']:.2f}ms  "
+              f"miss rate {admission['deadline_miss_rate']:.1%}  "
+              f"flushes {admission['flushes']}")
+        aeng.close()
+    else:
+        for q in workload:
+            engine.submit(key, q)
+        t0 = time.perf_counter()
+        results = engine.run()
+        wall_s = time.perf_counter() - t0
     stats = summarize_latencies(results)
 
     amortized = wall_s / max(args.queries, 1)
@@ -145,12 +182,16 @@ def _run(args) -> dict:
         print(f"index saved to {args.save}")
     # **stats first: its amortized-based "qps" (memo hits cost 0s) must not
     # clobber the wall-clock qps reported here and printed above
-    return {**stats, "cold_s": cold_s, "build_s": entry.build_time_s,
-            "wall_s": wall_s, "qps": args.queries / wall_s,
-            "amortized_s": amortized, "speedup": speedup,
-            "backend": sess.last_report.backend,
-            "residency": entry.residency,
-            "serving": entry.serving_backend}
+    out = {**stats, "cold_s": cold_s, "build_s": entry.build_time_s,
+           "wall_s": wall_s, "qps": args.queries / wall_s,
+           "amortized_s": amortized, "speedup": speedup,
+           "backend": sess.last_report.backend,
+           "residency": entry.residency,
+           "serving": entry.serving_backend}
+    if admission:
+        admission.pop("queue_depth_timeline", None)
+        out["admission"] = admission
+    return out
 
 
 if __name__ == "__main__":

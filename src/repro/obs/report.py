@@ -10,6 +10,9 @@ next to the BENCH artifacts:
   * predicted-vs-measured shard skew from :mod:`repro.obs.shardprof` —
     per-shard relative load bars for the latest profile plus an
     imbalance table over every captured profile;
+  * the async admission pipeline's health (queue depth over time,
+    deadline-miss rate, eviction churn, swap latency) from the service
+    record's ``async`` blob + the metrics registry;
   * the SLO watchdog summary (per-class window p99 vs budget, status);
   * the kernel-tuning table from the :mod:`repro.tune` cache — per
     workload key, the config that measured fastest, default vs tuned
@@ -344,6 +347,107 @@ def _section_slo(slo) -> str:
             f'<table>{hdr}{"".join(trs)}</table></div>')
 
 
+def _depth_sparkline(timeline, *, width: int = 720) -> str:
+    """Queue depth over time as a filled step line — the admission view.
+    ``timeline`` is [(seconds since engine start, depth), ...]."""
+    pts = [(float(t), float(d)) for t, d in timeline or []]
+    if not pts:
+        return '<p class="empty">no queue-depth timeline captured</p>'
+    t0, t1 = pts[0][0], pts[-1][0]
+    span = max(t1 - t0, 1e-9)
+    dmax = max(max(d for _, d in pts), 1.0)
+    plot_h, base_y, left = 90, 110, 46
+    plot_w = width - left - 10
+    xy = [(left + (t - t0) / span * plot_w,
+           base_y - d / dmax * plot_h) for t, d in pts]
+    line = " ".join(f"{x:.1f},{y:.1f}" for x, y in xy)
+    area = (f"{left:.1f},{base_y} " + line
+            + f" {left + plot_w:.1f},{base_y}")
+    parts = [f'<svg viewBox="0 0 {width} 132" width="100%" role="img" '
+             f'aria-label="queue depth over time">',
+             f'<line x1="{left}" y1="{base_y}" x2="{left + plot_w}" '
+             f'y2="{base_y}" stroke="var(--axis)" stroke-width="1"/>',
+             f'<polygon points="{area}" fill="var(--s1)" opacity="0.15"/>',
+             f'<polyline points="{line}" fill="none" stroke="var(--s1)" '
+             f'stroke-width="1.5"><title>queue depth, {len(pts)} samples '
+             f'over {span:.2f}s (peak {dmax:.0f})</title></polyline>',
+             f'<text class="val" x="{left - 6}" '
+             f'y="{base_y - plot_h + 4}" text-anchor="end">{dmax:.0f}</text>',
+             f'<text class="muted" x="{left - 6}" y="{base_y + 4}" '
+             f'text-anchor="end">0</text>',
+             f'<text class="muted" x="{left}" y="{base_y + 16}">'
+             f'{t0:.2f}s</text>',
+             f'<text class="muted" x="{left + plot_w}" y="{base_y + 16}" '
+             f'text-anchor="end">{t1:.2f}s</text>',
+             "</svg>"]
+    return "".join(parts)
+
+
+def _metric_value(metrics_rows, name: str) -> float:
+    """Sum of a counter/gauge across its tag series (0.0 when absent)."""
+    return sum(float(r.get("value", 0.0)) for r in metrics_rows or []
+               if r.get("name") == name)
+
+
+def _section_admission(service, metrics_rows) -> str:
+    """The async serving pipeline's admission health: queue depth over
+    time, deadline misses, eviction churn, and double-buffered swap
+    latency. Fed by the benchmark's ``async`` blob (admission_summary())
+    plus the live metrics registry."""
+    adm = (service or {}).get("async") or (service or {}).get("admission")
+    if not adm:
+        return ('<div class="card"><h2>Admission</h2><p class="empty">no '
+                'async admission stats captured (serve with --async or run '
+                'the service benchmark)</p></div>')
+    body = []
+    miss_rate = float(adm.get("deadline_miss_rate", 0.0))
+    tiles = [
+        _tile("sustained qps", _fmt(adm.get("sustained_qps", 0.0)),
+              "open-loop completed / wall") if adm.get("sustained_qps")
+        else "",
+        _tile("e2e p99", f"{float(adm.get('e2e_p99_ms', adm.get('p99_ms', 0))):.1f}"
+              f"<small>ms</small>",
+              f"deadline {float(adm.get('deadline_ms', 0)):.0f}ms"),
+        _tile("deadline misses", _fmt(adm.get("deadline_misses", 0)),
+              f"{miss_rate:.1%} of {_fmt(adm.get('completed', 0))} served"),
+        _tile("flushes", _fmt(adm.get("flushes", 0)),
+              f"{_fmt(adm.get('cross_entry_batches', 0))} cross-entry"),
+    ]
+    body.append(f'<div class="tiles">{"".join(t for t in tiles if t)}</div>')
+    body.append(_depth_sparkline(adm.get("queue_depth_timeline")))
+
+    evictions = _metric_value(metrics_rows, "store.evictions")
+    rebuilds = _metric_value(metrics_rows, "store.evicted_rebuilds")
+    swaps = _metric_value(metrics_rows, "store.swaps")
+    stalls = float(adm.get("admission_stalls", 0) or 0)
+    swap_hist = next((r for r in metrics_rows or []
+                      if r.get("name") == "store.swap_s"), None)
+    rows = [("evictions", f"{evictions:.0f}",
+             f"{rebuilds:.0f} transparent rebuilds on touch"),
+            ("swaps", f"{swaps:.0f}",
+             "double-buffered delta/rebuild installs"),
+            ("admission stalls", f"{stalls:.0f}",
+             "flight-ring dumps on oldest-wait blowout")]
+    if swap_hist:
+        rows.append(("swap latency",
+                     f"{float(swap_hist.get('p99', 0)) * 1e3:.2f} ms p99",
+                     f"mean {float(swap_hist.get('mean', 0)) * 1e3:.2f} ms "
+                     f"over {int(swap_hist.get('count', 0))} swaps"))
+    if adm.get("budget_bytes"):
+        rows.append(("resident bytes",
+                     f"{_fmt(adm.get('resident_bytes', 0))} "
+                     f"/ {_fmt(adm['budget_bytes'])}",
+                     "store banks vs eviction budget"))
+    hdr = "<tr><th>signal</th><th>value</th><th>detail</th></tr>"
+    trs = ["<tr>" f"<td>{_esc(n)}</td><td>{v}</td>"
+           f'<td class="sub">{_esc(d)}</td></tr>' for n, v, d in rows]
+    body.append(f'<table>{hdr}{"".join(trs)}</table>')
+    return (f'<div class="card"><h2>Admission</h2>'
+            f'<p class="sub">async serving pipeline: micro-batch queue '
+            f'depth, deadline misses, tenancy eviction, swap latency</p>'
+            f'{"".join(body)}</div>')
+
+
 def _cfg_label(cfg: dict) -> str:
     """Compact KernelConfig rendering: only the knobs that differ from the
     all-defaults config ('defaults' when none do)."""
@@ -448,6 +552,7 @@ def write_report(path: str, *, title: str = "repro perf report",
         _section_backends(runtime),
         _section_phases(events),
         _section_skew(profiles, metrics_rows),
+        _section_admission(service, metrics_rows),
         _section_tuning(tuning),
         _section_slo(slo),
         "</body></html>",

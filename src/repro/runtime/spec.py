@@ -81,6 +81,18 @@ class RunSpec:
     # legacy config conversions.
     slo: Tuple[Tuple[str, float], ...] = ()
 
+    # ---- async serving (repro.service.async_engine) ----
+    # serve_async routes launch/serve_im through AsyncInfluenceEngine:
+    # deadline-driven micro-batching, builds/repairs double-buffered off the
+    # serving path, cost-aware eviction. deadline_ms is the end-to-end SLO
+    # per query (0 = best effort, default 50ms inside the async engine);
+    # max_resident_mb caps resident store bytes (0 = unbounded, no evictor).
+    # Results are bit-identical to the synchronous path by contract; like
+    # ``slo``, none of these are _SKETCH_FIELDS/_EXEC_FIELDS.
+    serve_async: bool = False
+    deadline_ms: float = 0.0
+    max_resident_mb: float = 0.0
+
     # ---- measurement-driven kernel tuning (repro.tune) ----
     # "off"    — exact historical behaviour, no cache reads, no measuring
     # "cached" — apply TuningCache winners when present (deterministic

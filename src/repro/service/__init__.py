@@ -1,15 +1,23 @@
 """Online influence query service: persistent sketch store, batched query
-engine, and incremental graph-delta repair over the DiFuseR index."""
+engine, incremental graph-delta repair, and the async admission pipeline
+(deadline-driven micro-batching, double-buffered builds/repairs, cost-aware
+eviction) over the DiFuseR index."""
+from repro.service.async_engine import AsyncInfluenceEngine
 from repro.service.delta import DeltaReport, apply_delta
 from repro.service.engine import (InfluenceEngine, QueryResult, Request,
                                   summarize_latencies)
+from repro.service.eviction import CostAwareEvictor
 from repro.service.queries import (CoverageProbe, MarginalGain, SpreadEstimate,
                                    TopKSeeds)
-from repro.service.store import SketchStore, StoreEntry, StoreKey
+from repro.service.scheduler import AsyncRequest, MicroBatchScheduler
+from repro.service.store import (EvictionRecipe, SketchStore, StoreEntry,
+                                 StoreKey)
 
 __all__ = [
-    "SketchStore", "StoreEntry", "StoreKey",
+    "SketchStore", "StoreEntry", "StoreKey", "EvictionRecipe",
     "TopKSeeds", "SpreadEstimate", "MarginalGain", "CoverageProbe",
     "InfluenceEngine", "QueryResult", "Request", "summarize_latencies",
     "DeltaReport", "apply_delta",
+    "AsyncInfluenceEngine", "MicroBatchScheduler", "AsyncRequest",
+    "CostAwareEvictor",
 ]

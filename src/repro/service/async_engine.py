@@ -1,0 +1,510 @@
+"""Async influence serving: admission queue + overlapped mutation + tenancy.
+
+The synchronous :class:`~repro.service.engine.InfluenceEngine` batches then
+blocks: a cold bank build stalls every query behind it, and the store grows
+without bound. This module is the production admission path in front of it:
+
+* **Deadline-driven micro-batching** — ``submit`` returns a ``Future``
+  immediately; a :class:`~repro.service.scheduler.MicroBatchScheduler`
+  coalesces compatible requests per ``(store key, query class)`` and the
+  serve thread flushes each bucket when it fills or its flush window (a
+  quarter of the e2e deadline by default) expires.
+* **Overlapped builds and repairs** — ``register_async`` /
+  ``apply_delta_async`` / ``rebuild_async`` run on a dedicated mutation
+  thread against a :meth:`SketchStore.shadow` double buffer: queries keep
+  serving version N off the resident entry while N+1 propagates in the
+  shadow; :meth:`SketchStore.swap_entry` installs it atomically. In-flight
+  batches snapshotted entry N and finish against it.
+* **Cost-aware eviction** — with a device budget configured, a
+  :class:`~repro.service.eviction.CostAwareEvictor` keeps resident bytes
+  under it; evicted entries rebuild transparently on next touch.
+* **Cross-entry dispatch** — SpreadEstimate buckets against *different*
+  host-resident graphs with the same register geometry are concatenated
+  (row-offset) into one device round-trip.
+
+The async layer reorders work but never changes it: every result is
+bit-identical to what the synchronous engine returns for the same query
+against the same entry version (tests/test_async_service.py holds the
+line). Observability: queue-depth gauge + timeline, deadline-miss
+counters, an SLO watchdog on end-to-end latency, and a flight-recorder
+dump on admission stalls.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.difuser import DiFuserConfig
+from repro.graphs.structs import Graph, GraphDelta
+from repro.obs import flight, metrics, trace
+from repro.obs.slo import SLOConfig, SLOWatchdog
+from repro.service.delta import apply_delta
+from repro.service.engine import InfluenceEngine, QueryResult, Request, _pow2
+from repro.service.eviction import CostAwareEvictor
+from repro.service.scheduler import AsyncRequest, MicroBatchScheduler
+from repro.service.store import SketchStore, StoreEntry, StoreKey
+
+
+@dataclasses.dataclass
+class _Mutation:
+    kind: str            # "build" | "repair" | "rebuild"
+    label: str           # span attribute (graph key or "")
+    fn: object
+    future: Future
+    on_done: object = None   # called under the engine lock after fn
+
+
+class AsyncInfluenceEngine:
+    """Future-returning admission front for an :class:`InfluenceEngine`."""
+
+    def __init__(self, engine: Optional[InfluenceEngine] = None, *,
+                 store: Optional[SketchStore] = None, max_batch: int = 256,
+                 deadline_ms: Optional[float] = None,
+                 flush_window_s: Optional[float] = None,
+                 max_resident_mb: Optional[float] = None,
+                 backend=None, spec=None, slo=None):
+        if engine is None:
+            engine = InfluenceEngine(store=store, max_batch=max_batch,
+                                     backend=backend, spec=spec, slo=slo)
+        self.engine = engine
+        self.store = engine.store
+        # RunSpec async knobs are the defaults; explicit kwargs win
+        if deadline_ms is None:
+            deadline_ms = float(getattr(spec, "deadline_ms", 0.0) or 0.0) or 50.0
+        if max_resident_mb is None:
+            max_resident_mb = float(getattr(spec, "max_resident_mb", 0.0) or 0.0)
+        self.deadline_ms = float(deadline_ms)
+        if flush_window_s is None:
+            flush_window_s = self.deadline_ms / 4.0 / 1e3
+        self._sched = MicroBatchScheduler(max_batch=max_batch,
+                                          flush_window_s=flush_window_s)
+        self.evictor = (CostAwareEvictor(int(max_resident_mb * 2**20))
+                        if max_resident_mb and max_resident_mb > 0 else None)
+        self._watchdog = SLOWatchdog(SLOConfig.coerce({"e2e": self.deadline_ms}),
+                                     on_breach=self._on_e2e_breach)
+
+        self._cv = threading.Condition()
+        self._mut_q: collections.deque[_Mutation] = collections.deque()
+        self._rebuilding: set[StoreKey] = set()
+        self._outstanding = 0          # unresolved futures (queries + mutations)
+        self._closed = False
+        self._stalled = False
+        self._concat_cache: Optional[tuple] = None  # (signature, concat matrix)
+
+        # admission telemetry (admission_summary() / obs report "Admission")
+        self._t0 = time.monotonic()
+        self._depth_timeline: collections.deque = collections.deque(maxlen=4096)
+        self._e2e_s: collections.deque = collections.deque(maxlen=200_000)
+        self._completed = 0
+        self._misses = 0
+        self._flushes = 0
+        self._cross_batches = 0
+        self._stall_dumps = 0
+
+        self._serve_thread = threading.Thread(
+            target=self._serve_loop, name="im-serve", daemon=True)
+        self._mut_thread = threading.Thread(
+            target=self._mutate_loop, name="im-mutate", daemon=True)
+        self._serve_thread.start()
+        self._mut_thread.start()
+
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
+
+    def submit(self, key: StoreKey, query, *,
+               deadline_ms: Optional[float] = None) -> Future:
+        """Enqueue a query; resolves to the same :class:`QueryResult` the
+        sync engine would return. Rejects unknown keys up front (evicted
+        keys are known — they rebuild transparently at flush time)."""
+        if key not in self.store:
+            raise KeyError(f"store key not registered with this engine: {key}")
+        dl = self.deadline_ms if deadline_ms is None else float(deadline_ms)
+        fut: Future = Future()
+        now = time.monotonic()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("AsyncInfluenceEngine is closed")
+            req = self._sched.make_request(
+                key, query, fut, now,
+                deadline_t=(now + dl / 1e3) if dl > 0 else None)
+            self._outstanding += 1
+            full = self._sched.offer(req)
+            depth = self._sched.depth()
+            self._record_depth(depth)
+            # wake the serve thread only when it could act sooner than its
+            # scheduled timeout: the bucket just filled, or the queue was
+            # empty (indefinite wait). Any other pending bucket already has
+            # an earlier-or-equal flush deadline driving the timeout.
+            if full or depth == 1:
+                self._cv.notify_all()
+        if self.evictor is not None:
+            self.evictor.touch(key)
+        return fut
+
+    def register_async(self, g: Graph,
+                       config: Optional[DiFuserConfig] = None) -> Future:
+        """Cold-admit a graph: the bank build runs on the mutation thread
+        (serving continues) and the future resolves to the StoreKey."""
+        def fn():
+            entry = self.store.get_or_build(g, config)
+            if self.evictor is not None:
+                self.evictor.touch(entry.key)
+            return entry.key
+        return self._submit_mutation(_Mutation(
+            "build", g.content_key()[:12], fn, Future()))
+
+    def apply_delta_async(self, key: StoreKey, delta: GraphDelta,
+                          **kwargs) -> Future:
+        """Double-buffered delta repair: propagate into a shadow clone of
+        the entry, then atomically swap version N+1 in. Resolves to the
+        DeltaReport."""
+        def fn():
+            shadow = self.store.shadow(key)
+            rep = apply_delta(shadow, key, delta, **kwargs)
+            self._before_swap(key)
+            self.store.swap_entry(key, shadow.entry(key))
+            return rep
+        return self._submit_mutation(_Mutation(
+            "repair", key.graph_key[:12], fn, Future()))
+
+    def rebuild_async(self, key: StoreKey, *, _on_done=None) -> Future:
+        """Double-buffered pristine rebuild (shadow build → swap)."""
+        def fn():
+            shadow = self.store.shadow(key)
+            entry = shadow.rebuild(key)
+            self._before_swap(key)
+            self.store.swap_entry(key, entry)
+            return entry
+        return self._submit_mutation(_Mutation(
+            "rebuild", key.graph_key[:12], fn, Future(), on_done=_on_done))
+
+    def _before_swap(self, key: StoreKey) -> None:
+        """Test hook: runs on the mutation thread after the shadow is ready
+        and immediately before the swap — tests override it to submit (and
+        resolve) queries mid-build, proving serving overlapped the build."""
+
+    # ------------------------------------------------------------------
+    # Lifecycle
+    # ------------------------------------------------------------------
+
+    def drain(self, timeout_s: float = 300.0) -> None:
+        """Block until every submitted future (queries + mutations) has
+        resolved."""
+        deadline = time.monotonic() + timeout_s
+        with self._cv:
+            while self._outstanding > 0:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"{self._outstanding} requests still outstanding")
+                self._cv.wait(timeout=min(remaining, 0.05))
+
+    def close(self, timeout_s: float = 60.0) -> None:
+        """Stop both threads; queued work is flushed on the way out."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._cv.notify_all()
+        self._serve_thread.join(timeout=timeout_s)
+        self._mut_thread.join(timeout=timeout_s)
+
+    def __enter__(self) -> "AsyncInfluenceEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    # Serve thread
+    # ------------------------------------------------------------------
+
+    def _serve_loop(self) -> None:
+        while True:
+            with self._cv:
+                batches = self._sched.take_due(time.monotonic())
+                while not batches and not self._closed:
+                    nxt = self._sched.next_flush_t()
+                    now = time.monotonic()
+                    self._cv.wait(timeout=None if nxt is None
+                                  else max(nxt - now, 1e-4))
+                    batches = self._sched.take_due(time.monotonic())
+                if not batches and self._closed:
+                    batches = self._sched.take_all()
+                    if not batches and not self._mut_q:
+                        return
+                self._record_depth(self._sched.depth())
+                stall_s = self._sched.oldest_wait_s(time.monotonic())
+            self._check_stall(stall_s)
+            if batches:
+                self._execute_flush(batches)
+
+    def _execute_flush(self, batches: list) -> None:
+        runnable: list[tuple[StoreEntry, list[AsyncRequest]]] = []
+        for bucket in batches:
+            key, qclass = bucket[0].key, bucket[0].qclass
+            try:
+                entry = self.store.entry(key)  # transparent evicted rebuild
+            except Exception as e:  # noqa: BLE001 — fail the bucket only
+                self._fail_bucket(bucket, e)
+                continue
+            if self.evictor is not None:
+                self.evictor.touch(key)
+            if qclass == "TopKSeeds" and entry.stale and not self._closed:
+                # don't block the serve thread on a full rebuild: kick it
+                # to the mutation thread, park the bucket until the swap
+                self._rebuild_and_hold(key, bucket)
+                continue
+            runnable.append((entry, bucket))
+
+        runnable = self._dispatch_cross_entry(runnable)
+        for entry, bucket in runnable:
+            try:
+                self._run_bucket(entry, bucket)
+            except Exception as e:  # noqa: BLE001
+                self._fail_bucket(bucket, e)
+        if self.evictor is not None:
+            protect = {r.key for _, b in runnable for r in b}
+            try:
+                self.evictor.enforce(self.store, protect=protect)
+            except Exception:  # noqa: BLE001 — budget pressure must not
+                pass           # fail serving
+
+    def _run_bucket(self, entry: StoreEntry,
+                    bucket: Sequence[AsyncRequest]) -> None:
+        reqs = [Request(key=r.key, query=r.query) for r in bucket]
+        results: list = [None] * len(bucket)
+        t0 = time.monotonic()
+        for lo in range(0, len(bucket), self.engine.max_batch):
+            idxs = list(range(lo, min(lo + self.engine.max_batch, len(bucket))))
+            self.engine.execute_chunk(entry, reqs, idxs, results)
+        now = time.monotonic()
+        metrics.counter("async.flushes", query=bucket[0].qclass).inc()
+        self._flushes += 1
+        for r, res in zip(bucket, results):
+            self._finish(r, res, now)
+        self._done(len(bucket))
+
+    def _rebuild_and_hold(self, key: StoreKey,
+                          bucket: Sequence[AsyncRequest]) -> None:
+        with self._cv:
+            self._sched.hold(key, "TopKSeeds")
+            self._sched.requeue(bucket)
+            already = key in self._rebuilding
+            if not already:
+                self._rebuilding.add(key)
+        if already:
+            return
+        metrics.counter("async.stale_rebuilds").inc()
+
+        def on_done():   # runs under the engine lock when the swap lands
+            self._rebuilding.discard(key)
+            self._sched.release(key, "TopKSeeds")
+        self.rebuild_async(key, _on_done=on_done)
+
+    # ------------------------------------------------------------------
+    # Cross-entry dispatch
+    # ------------------------------------------------------------------
+
+    def _dispatch_cross_entry(self, runnable: list) -> list:
+        """Merge SpreadEstimate buckets against different host-resident
+        entries with identical register geometry (same J, same estimator)
+        into one concatenated device round-trip. Returns the buckets left
+        for per-entry execution."""
+        by_sig: dict[tuple, list] = {}
+        rest: list = []
+        for entry, bucket in runnable:
+            if (bucket[0].qclass == "SpreadEstimate"
+                    and entry.residency == "host"):
+                sig = (int(entry.x.shape[0]), entry.cfg.estimator)
+                by_sig.setdefault(sig, []).append((entry, bucket))
+            else:
+                rest.append((entry, bucket))
+        for groups in by_sig.values():
+            if len(groups) < 2:       # one entry — the plain path is the
+                rest.extend(groups)   # same round-trip count
+                continue
+            try:
+                self._run_cross_spread(groups)
+            except Exception as e:  # noqa: BLE001
+                for _, bucket in groups:
+                    self._fail_bucket(bucket, e)
+        return rest
+
+    def _run_cross_spread(self, groups: list) -> None:
+        from repro.service.queries import _spread_batch
+        total_regs = int(groups[0][0].x.shape[0])
+        estimator = groups[0][0].cfg.estimator
+        # stable order so the concat-matrix cache key is deterministic
+        groups = sorted(groups,
+                        key=lambda g: dataclasses.astuple(g[0].key))
+        sig = tuple((dataclasses.astuple(e.key), e.version) for e, _ in groups)
+        if self._concat_cache is None or self._concat_cache[0] != sig:
+            self._concat_cache = (sig, jnp.concatenate(
+                [e.matrix for e, _ in groups], axis=0))
+        mat = self._concat_cache[1]
+
+        rows: list[tuple] = []
+        sentinels: list[int] = []
+        flat: list[AsyncRequest] = []
+        off = 0
+        for entry, bucket in groups:
+            sent = entry.graph.n_pad - 1 + off
+            for r in bucket:
+                rows.append(tuple(v + off for v in r.query.candidates))
+                sentinels.append(sent)
+                flat.append(r)
+            off += int(entry.graph.n_pad)
+
+        b = _pow2(len(rows))
+        length = _pow2(max((len(c) for c in rows), default=1))
+        # per-row sentinel padding: each row pads with *its own* entry's
+        # sentinel row (all-VISITED in its block), so the merged registers
+        # are exactly the single-entry batch's — bit-identical values
+        arr = np.empty((b, length), dtype=np.int32)
+        for i in range(b):
+            arr[i, :] = sentinels[i] if i < len(rows) else sentinels[0]
+            if i < len(rows) and rows[i]:
+                arr[i, : len(rows[i])] = rows[i]
+        with trace.span("async.cross_spread", phase="query", timed=True,
+                        batch=len(rows), entries=len(groups)) as sp:
+            vals = sp.sync(_spread_batch(mat, jnp.asarray(arr),
+                                         total_regs=total_regs,
+                                         estimator=estimator))
+        dt = sp.duration_s
+        vals = np.asarray(vals)
+        metrics.counter("engine.cross_entry_batches").inc()
+        self._cross_batches += 1
+        self.engine._account("SpreadEstimate", dt, len(flat))
+        now = time.monotonic()
+        for i, r in enumerate(flat):
+            self._finish(r, QueryResult(r.query, float(vals[i]), dt,
+                                        dt / len(flat), len(flat),
+                                        backend="cross:host"), now)
+        self._done(len(flat))
+
+    # ------------------------------------------------------------------
+    # Mutation thread
+    # ------------------------------------------------------------------
+
+    def _submit_mutation(self, mut: _Mutation) -> Future:
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("AsyncInfluenceEngine is closed")
+            self._outstanding += 1
+            self._mut_q.append(mut)
+            self._cv.notify_all()
+        return mut.future
+
+    def _mutate_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._mut_q and not self._closed:
+                    self._cv.wait()
+                if not self._mut_q:
+                    return
+                mut = self._mut_q.popleft()
+            try:
+                with trace.span(f"async.{mut.kind}", phase="service",
+                                timed=True, key=mut.label):
+                    res = mut.fn()
+                mut.future.set_result(res)
+            except Exception as e:  # noqa: BLE001
+                metrics.counter("async.mutation_errors", kind=mut.kind).inc()
+                mut.future.set_exception(e)
+            if self.evictor is not None:
+                try:
+                    self.evictor.enforce(self.store)
+                except Exception:  # noqa: BLE001
+                    pass
+            with self._cv:
+                if mut.on_done is not None:
+                    try:
+                        mut.on_done()
+                    except Exception:  # noqa: BLE001
+                        pass
+                self._outstanding -= 1
+                self._cv.notify_all()
+
+    # ------------------------------------------------------------------
+    # Accounting
+    # ------------------------------------------------------------------
+
+    def _finish(self, req: AsyncRequest, result: QueryResult,
+                now: float) -> None:
+        e2e = now - req.enqueue_t
+        self._e2e_s.append(e2e)
+        self._completed += 1
+        metrics.histogram("async.e2e_s", unit="s",
+                          query=req.qclass).observe(e2e)
+        if req.deadline_t is not None and now > req.deadline_t:
+            self._misses += 1
+            metrics.counter("async.deadline_misses", query=req.qclass).inc()
+        self._watchdog.observe("e2e", e2e)
+        req.future.set_result(result)
+
+    def _fail_bucket(self, bucket: Sequence[AsyncRequest], exc) -> None:
+        for r in bucket:
+            r.future.set_exception(exc)
+        self._done(len(bucket))
+
+    def _done(self, n: int) -> None:
+        with self._cv:
+            self._outstanding -= n
+            self._cv.notify_all()
+
+    def _record_depth(self, depth: int) -> None:
+        metrics.gauge("async.queue_depth").set(float(depth))
+        self._depth_timeline.append((time.monotonic() - self._t0, depth))
+
+    def _check_stall(self, oldest_wait_s: float) -> None:
+        """Rising-edge admission-stall detector: the oldest queued request
+        waiting far past the deadline means flushes stopped keeping up —
+        dump the flight ring once per episode for the post-mortem."""
+        thresh = max(10.0 * self.deadline_ms / 1e3, 1.0)
+        if oldest_wait_s > thresh:
+            if not self._stalled:
+                self._stalled = True
+                self._stall_dumps += 1
+                metrics.counter("async.admission_stalls").inc()
+                flight.dump(f"admission-stall-{oldest_wait_s * 1e3:.0f}ms")
+        else:
+            self._stalled = False
+
+    @staticmethod
+    def _on_e2e_breach(qclass, p99_ms, budget_ms, watchdog) -> None:
+        flight.dump(f"async-e2e-p99-{p99_ms:.1f}ms-budget-{budget_ms:.1f}ms")
+
+    def admission_summary(self) -> dict:
+        """Queue/deadline/tenancy state for the perf report's Admission
+        section and the throughput benchmark's async blob."""
+        e2e = np.asarray(self._e2e_s, dtype=np.float64)
+        pct = (lambda q: float(np.percentile(e2e, q) * 1e3)) if len(e2e) \
+            else (lambda q: 0.0)
+        return {
+            "completed": self._completed,
+            "deadline_ms": self.deadline_ms,
+            "deadline_misses": self._misses,
+            "deadline_miss_rate": (self._misses / self._completed
+                                   if self._completed else 0.0),
+            "e2e_p50_ms": pct(50),
+            "e2e_p95_ms": pct(95),
+            "e2e_p99_ms": pct(99),
+            "flushes": self._flushes,
+            "cross_entry_batches": self._cross_batches,
+            "admission_stalls": self._stall_dumps,
+            "queue_depth_timeline": [(round(t, 4), d)
+                                     for t, d in self._depth_timeline],
+            "resident_bytes": self.store.resident_bytes(),
+            "budget_bytes": (self.evictor.budget_bytes
+                             if self.evictor is not None else None),
+            "slo": self._watchdog.summary(),
+        }

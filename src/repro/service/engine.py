@@ -100,6 +100,15 @@ class InfluenceEngine:
         cfg = SLOConfig.coerce(slo)
         self.slo = (SLOWatchdog(cfg, on_breach=self._on_slo_breach)
                     if cfg is not None else None)
+        # a swap (double-buffered delta/rebuild landing) must retire memoized
+        # top-k results for that key immediately — the version token already
+        # rejects them on lookup, but dropping eagerly keeps the memo from
+        # accumulating dead versions across key churn
+        self.store.add_swap_hook(self._on_store_swap)
+
+    def _on_store_swap(self, key, old, new) -> None:
+        for mk in [mk for mk in self._topk_memo if mk[0] == key]:
+            del self._topk_memo[mk]
 
     @staticmethod
     def _on_slo_breach(qclass, p99_ms, budget_ms, watchdog) -> None:
@@ -163,17 +172,8 @@ class InfluenceEngine:
             for (key, qname), idxs in groups.items():
                 entry = self.store.entry(key)
                 for lo in range(0, len(idxs), self.max_batch):
-                    chunk = idxs[lo: lo + self.max_batch]
-                    if qname == "TopKSeeds":
-                        self._run_topk(entry, requests, chunk, results)
-                    elif qname == "SpreadEstimate":
-                        self._run_spread(entry, requests, chunk, results)
-                    elif qname == "MarginalGain":
-                        self._run_marginal(entry, requests, chunk, results)
-                    elif qname == "CoverageProbe":
-                        self._run_probe(entry, requests, chunk, results)
-                    else:  # pragma: no cover
-                        raise TypeError(f"unknown query type: {qname}")
+                    self.execute_chunk(entry, requests,
+                                       idxs[lo: lo + self.max_batch], results)
         except Exception as e:
             # post-mortem capture: the flight ring holds the spans leading
             # up to the fault; dump never raises, then the fault propagates
@@ -186,6 +186,26 @@ class InfluenceEngine:
     def __call__(self, key: StoreKey, query: Q.Query) -> QueryResult:
         """Convenience single-query path (batch of one)."""
         return self.run([Request(key=key, query=query)])[0]
+
+    def execute_chunk(self, entry: StoreEntry, requests: Sequence[Request],
+                      chunk: Sequence[int], results: list) -> None:
+        """Execute one homogeneous chunk (same entry, same query class)
+        against a *snapshotted* entry, writing ``QueryResult``s into
+        ``results`` at the chunk's indices. This is the unit the async
+        scheduler flushes: it takes the entry object rather than the key so
+        in-flight batches finish against the version they started with even
+        if a double-buffered swap lands mid-execution."""
+        qname = type(requests[chunk[0]].query).__name__
+        if qname == "TopKSeeds":
+            self._run_topk(entry, requests, chunk, results)
+        elif qname == "SpreadEstimate":
+            self._run_spread(entry, requests, chunk, results)
+        elif qname == "MarginalGain":
+            self._run_marginal(entry, requests, chunk, results)
+        elif qname == "CoverageProbe":
+            self._run_probe(entry, requests, chunk, results)
+        else:  # pragma: no cover
+            raise TypeError(f"unknown query type: {qname}")
 
     # -- per-class executors ------------------------------------------------
 
@@ -283,9 +303,11 @@ class InfluenceEngine:
                 res = sp.sync(Q.top_k_seeds(self.store, entry, k))
             dt = sp.duration_s
             self._account("TopKSeeds", dt, len(idxs))
-            # top_k_seeds may have rebuilt a stale entry (version bump) —
-            # memoize under the *current* state token
-            entry = self.store.entry(entry.key)
+            # top_k_seeds may have rebuilt a stale entry — store.rebuild
+            # mutates in place, so the *executed* entry object carries the
+            # bumped token. Memoize under it, not a fresh store lookup: a
+            # concurrent swap to N+1 mid-execution must not file version-N
+            # results under the N+1 token.
             self._topk_memo[memo_key] = ((entry.version, entry.stale), res)
             for j, i in enumerate(idxs):
                 results[i] = QueryResult(requests[i].query, res, dt,

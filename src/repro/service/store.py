@@ -17,10 +17,12 @@ delta repair, future per-device placement).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import math
+import threading
 import time
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -89,6 +91,7 @@ class StoreEntry:
     stale: bool = False          # removals applied but matrix not yet rebuilt
     staleness_frac: float = 0.0  # removed-edge fraction since last rebuild
     rebuilds: int = 0
+    evictions: int = 0           # times this index was evicted + rebuilt
     plan: Optional[PartitionPlan] = None   # vertex-shard plan (mesh residency)
     residency: str = "host"      # "host" | "device" (row order of banks)
     mesh: Optional[object] = None          # jax Mesh of a device-placed entry
@@ -116,6 +119,25 @@ class StoreEntry:
         ``"single:host"`` (jitted reductions on the canonical matrix).
         Recorded per batch in :class:`~repro.service.engine.QueryResult`."""
         return "mesh:device" if self.residency == "device" else "single:host"
+
+    def device_bytes(self) -> int:
+        """Device footprint of the resident banks (the eviction currency —
+        the caches are derived and droppable, the banks are the index)."""
+        return int(sum(int(getattr(b, "nbytes", 0) or np.asarray(b).nbytes)
+                       for b in self.banks))
+
+    def clone_for_update(self) -> "StoreEntry":
+        """Shallow clone for double-buffered mutation: shares the immutable
+        payloads (graph, x, device bank arrays) but owns its banks *list*
+        and starts with cold derived caches, so repairs/rebuilds against the
+        clone never touch the serving copy. The clone is version N until the
+        mutation bumps it; :meth:`SketchStore.swap_entry` installs it as
+        N+1 atomically."""
+        c = copy.copy(self)
+        c.banks = list(self.banks)
+        c._matrix_cache = c._edges_cache = None
+        c._planned_cache = c._serving_part_cache = None
+        return c
 
     @property
     def matrix(self) -> jnp.ndarray:
@@ -300,6 +322,27 @@ class StoreEntry:
         self.version += 1
 
 
+@dataclasses.dataclass
+class EvictionRecipe:
+    """Everything needed to rebuild an evicted entry transparently on its
+    next touch: the *current* graph (deltas already applied), the sketch
+    setting, and the exact sample vector — a rebuild from these is
+    bit-identical to the matrix that was dropped (insertion repairs converge
+    to the pristine fixpoint; stale entries are never evicted, see
+    :meth:`SketchStore.evict`). The banks themselves are gone — that is the
+    point: the recipe is O(graph), the banks are O(n_pad * J) device bytes.
+    """
+
+    key: StoreKey
+    graph: Graph
+    cfg: DiFuserConfig
+    x: np.ndarray
+    plan: Optional[PartitionPlan]
+    version: int                 # version at eviction; rebuild resumes past it
+    build_time_s: float          # last measured build cost (eviction scoring)
+    evictions: int               # lifetime eviction count of this index
+
+
 class SketchStore:
     """Build-once, query-many cache of propagated sketch matrices.
 
@@ -318,6 +361,15 @@ class SketchStore:
         self.backend = backend   # str | runtime.Backend | None (spec's choice)
         self.spec = spec         # Optional[runtime.RunSpec] execution knobs
         self._entries: dict[StoreKey, StoreEntry] = {}
+        # evicted indexes: banks dropped, rebuild recipe kept — entry()/
+        # get_or_build transparently rebuild on next touch
+        self._evicted: dict[StoreKey, EvictionRecipe] = {}
+        # structural mutations (evict / evicted-rebuild / swap) serialize on
+        # this; the query fast path stays an unlocked dict read
+        self._lock = threading.RLock()
+        # called as hook(key, old_entry_or_None, new_entry) after every
+        # atomic entry swap — engines drop per-key memos here
+        self._swap_hooks: list[Callable] = []
 
     def _resolve_backend(self, cfg: DiFuserConfig):
         """The (backend, RunSpec) pair builds run through: ``cfg`` supplies
@@ -331,19 +383,41 @@ class SketchStore:
         return resolve_backend(spec), spec
 
     def __len__(self) -> int:
-        return len(self._entries)
+        return len(self._entries) + len(self._evicted)
 
     def __contains__(self, key: StoreKey) -> bool:
-        return key in self._entries
+        return key in self._entries or key in self._evicted
 
     def entry(self, key: StoreKey) -> StoreEntry:
-        return self._entries[key]
+        """The resident entry for ``key``. An evicted key transparently
+        rebuilds from its recipe here — the touch path of the eviction
+        contract — so callers never observe the eviction except as latency.
+        """
+        e = self._entries.get(key)
+        if e is not None:
+            return e
+        if key in self._evicted:
+            return self._rebuild_evicted(key)
+        raise KeyError(key)
 
     def keys(self):
+        return list(self._entries) + list(self._evicted)
+
+    def resident_keys(self):
+        """Keys whose banks are currently on device (excludes evicted)."""
         return list(self._entries)
+
+    def is_evicted(self, key: StoreKey) -> bool:
+        return key in self._evicted
+
+    def resident_bytes(self) -> int:
+        """Total device bytes of all resident banks (the evictor's budget
+        currency)."""
+        return sum(e.device_bytes() for e in list(self._entries.values()))
 
     def invalidate(self, key: StoreKey) -> None:
         self._entries.pop(key, None)
+        self._evicted.pop(key, None)
 
     def get_or_build(self, g: Graph, config: Optional[DiFuserConfig] = None,
                      x: Optional[np.ndarray] = None) -> StoreEntry:
@@ -355,6 +429,8 @@ class SketchStore:
         cfg = config or DiFuserConfig()
         key = StoreKey.for_graph(g, cfg)
         hit = self._entries.get(key)
+        if hit is None and key in self._evicted:
+            hit = self._rebuild_evicted(key)   # transparent rebuild on touch
         if hit is not None:
             # the key doesn't carry x: validate the caller's sample space
             # (explicit x, or the seed-derived default when x is None)
@@ -416,7 +492,7 @@ class SketchStore:
         """Full pristine rebuild from the entry's *current* graph (Alg. 4
         rebuild machinery at the store level: after deltas marked the entry
         stale, or on explicit request). Clears staleness, bumps version."""
-        entry = self._entries[key]
+        entry = self.entry(key)
         banks, iters, dt, edges = self._build_banks(entry.graph, entry.cfg, entry.x)
         entry.install_canonical_banks(banks)   # device entries re-place
         entry.build_iters = iters
@@ -428,6 +504,116 @@ class SketchStore:
         entry.prime_edges_cache(edges)
         return entry
 
+    # ------------------------------------------------------------------
+    # Eviction + double-buffered swap (docs/service.md, "Async serving")
+    # ------------------------------------------------------------------
+
+    def evict(self, key: StoreKey) -> int:
+        """Drop a resident entry's banks, keeping its rebuild recipe; the
+        next touch (``entry``/``get_or_build``) rebuilds transparently.
+        Returns the device bytes freed.
+
+        Only host-resident, non-stale entries are evictable: a stale matrix
+        (removals pending) is history-dependent — a pristine rebuild would
+        *change* query answers, not restore them — and a device-placed entry
+        pins mesh state the recipe cannot re-derive. The evictor skips both.
+        """
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                if key in self._evicted:
+                    return 0
+                raise KeyError(key)
+            if e.stale:
+                raise ValueError("stale entries are not evictable: the "
+                                 "over-approximating matrix cannot be "
+                                 "reconstructed by a pristine rebuild")
+            if e.residency == "device":
+                raise ValueError("device-resident entries are not evictable;"
+                                 " to_host() first")
+            freed = e.device_bytes()
+            self._evicted[key] = EvictionRecipe(
+                key=e.key, graph=e.graph, cfg=e.cfg, x=e.x, plan=e.plan,
+                version=e.version, build_time_s=e.build_time_s,
+                evictions=e.evictions + 1)
+            del self._entries[key]
+        metrics.counter("store.evictions").inc()
+        metrics.gauge("store.resident_bytes").set(float(self.resident_bytes()))
+        return freed
+
+    def _rebuild_evicted(self, key: StoreKey) -> StoreEntry:
+        """Rebuild an evicted entry from its recipe (the touch path). The
+        rebuilt matrix is bit-identical to the dropped one: the recipe holds
+        the post-delta graph and the exact x, and insertion-repaired
+        matrices equal the from-scratch fixpoint by the monotone-lattice
+        argument. The version resumes *past* the evicted one, so memos keyed
+        on the old version correctly miss."""
+        with self._lock:
+            live = self._entries.get(key)
+            if live is not None:     # lost the race: someone rebuilt first
+                return live
+            recipe = self._evicted.pop(key)
+            with trace.span("store.evicted_rebuild", phase="build",
+                            timed=True) as sp:
+                banks, iters, dt, edges = self._build_banks(
+                    recipe.graph, recipe.cfg, recipe.x)
+                for b in banks:
+                    sp.sync(b)
+            entry = StoreEntry(key=recipe.key, graph=recipe.graph,
+                               cfg=recipe.cfg, x=recipe.x, banks=banks,
+                               build_iters=iters, build_time_s=dt,
+                               version=recipe.version + 1,
+                               plan=recipe.plan,
+                               evictions=recipe.evictions)
+            entry.prime_edges_cache(edges)
+            self._entries[key] = entry
+        metrics.counter("store.evicted_rebuilds").inc()
+        metrics.histogram("store.evicted_rebuild_s", unit="s").observe(dt)
+        metrics.gauge("store.resident_bytes").set(float(self.resident_bytes()))
+        return entry
+
+    def add_swap_hook(self, fn: Callable) -> None:
+        """Register ``fn(key, old_entry_or_None, new_entry)`` to run after
+        every :meth:`swap_entry` — how engines sharing this store learn that
+        a key's resident state was atomically replaced (memo drop, metrics).
+        """
+        if fn not in self._swap_hooks:
+            self._swap_hooks.append(fn)
+
+    def shadow(self, key: StoreKey) -> "SketchStore":
+        """The double-buffer: a fresh store (same build strategy) holding a
+        :meth:`StoreEntry.clone_for_update` of ``key``'s entry. Mutations
+        (``apply_delta``, ``rebuild``) run against the shadow while this
+        store keeps serving version N; :meth:`swap_entry` then installs the
+        shadow's entry as N+1."""
+        e = self.entry(key)          # rebuilds an evicted entry first
+        s = SketchStore(num_banks=self.num_banks, backend=self.backend,
+                        spec=self.spec)
+        s._entries[key] = e.clone_for_update()
+        return s
+
+    def swap_entry(self, key: StoreKey, new_entry: StoreEntry) -> Optional[StoreEntry]:
+        """Atomically make ``new_entry`` the resident state of ``key`` and
+        fire the swap hooks. Returns the displaced entry (None for a cold
+        admit). The swap itself is a dict write under the store lock —
+        queries snapshotting the entry before the swap finish against
+        version N; every later lookup sees N+1."""
+        t0 = time.perf_counter()
+        with self._lock:
+            old = self._entries.get(key)
+            self._evicted.pop(key, None)
+            self._entries[key] = new_entry
+        for hook in list(self._swap_hooks):
+            try:
+                hook(key, old, new_entry)
+            except Exception:  # noqa: BLE001 — observers must not break
+                pass           # the serving path
+        metrics.counter("store.swaps").inc()
+        metrics.histogram("store.swap_s", unit="s").observe(
+            time.perf_counter() - t0)
+        metrics.gauge("store.resident_bytes").set(float(self.resident_bytes()))
+        return old
+
     def attach_plan(self, key: StoreKey, plan: PartitionPlan) -> StoreEntry:
         """Remember a vertex-shard plan on a resident entry.
 
@@ -437,7 +623,7 @@ class SketchStore:
         shards they touched (``DeltaReport.plan_shards_touched``), the hook
         distributed delta repair keys on. Plans survive deltas/rebuilds (the
         vertex set is fixed) and are persisted by ``save``/``load``."""
-        entry = self._entries[key]
+        entry = self.entry(key)
         if entry.residency == "device":
             raise ValueError("entry is device-resident under its current "
                              "plan; to_host() before attaching another")
@@ -449,7 +635,7 @@ class SketchStore:
     def place(self, key: StoreKey, mesh, *,
               vertex_axis: str = "data") -> StoreEntry:
         """Convenience: :meth:`StoreEntry.place_on_mesh` by key."""
-        return self._entries[key].place_on_mesh(mesh, vertex_axis=vertex_axis)
+        return self.entry(key).place_on_mesh(mesh, vertex_axis=vertex_axis)
 
     # ------------------------------------------------------------------
     # Persistence
@@ -464,7 +650,7 @@ class SketchStore:
     def save(self, path: str, key: StoreKey) -> None:
         """Serialize one entry (matrix + graph + setting) to npz."""
         path = self._npz_path(path)
-        e = self._entries[key]
+        e = self.entry(key)
         g = e.graph
         plan_fields = {}
         if e.plan is not None:

@@ -1,0 +1,332 @@
+"""Async serving pipeline: scheduler, eviction, async≡sync equivalence,
+double-buffered swap overlap, cross-entry dispatch.
+
+The contract under test everywhere: the async layer reorders work but never
+changes it — every result is byte-identical to the synchronous engine's
+answer for the same query against the same entry version.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.difuser import DiFuserConfig
+from repro.graphs import rmat_graph
+from repro.graphs.structs import GraphDelta
+from repro.service import (AsyncInfluenceEngine, CostAwareEvictor,
+                           CoverageProbe, InfluenceEngine, MarginalGain,
+                           Request, SketchStore, SpreadEstimate, TopKSeeds)
+from repro.service.scheduler import MicroBatchScheduler
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    g1 = rmat_graph(8, edge_factor=8, seed=1, setting="w1")
+    g2 = rmat_graph(8, edge_factor=8, seed=2, setting="w1")
+    cfg = DiFuserConfig(num_registers=64, seed=0)
+    return g1, g2, cfg
+
+
+def _mixed_stream(n, num, seed, k=4):
+    """A shuffled mixed-class query stream over vertex ids < n."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for kind in rng.integers(0, 4, size=num):
+        if kind == 0:
+            out.append(TopKSeeds(k))
+        elif kind == 1:
+            out.append(SpreadEstimate(rng.integers(0, n, int(rng.integers(1, 5)))))
+        elif kind == 2:
+            out.append(MarginalGain(int(rng.integers(0, n)),
+                                    rng.integers(0, n, int(rng.integers(0, 4)))))
+        else:
+            out.append(CoverageProbe(rng.integers(0, n, int(rng.integers(1, 4)))))
+    return out
+
+
+def _same_value(a, b) -> bool:
+    if isinstance(a, dict):
+        return (np.array_equal(a["est"], b["est"])
+                and np.array_equal(a["max_register"], b["max_register"]))
+    if isinstance(a, float):
+        return a == b
+    return (np.array_equal(np.asarray(a.seeds), np.asarray(b.seeds))
+            and np.array_equal(np.asarray(a.est_gains),
+                               np.asarray(b.est_gains)))
+
+
+def _run_both(g1, g2, cfg, stream, which, deadline_ms=25.0):
+    """Serve the same (key, query) stream sync and async; return results."""
+    sync = InfluenceEngine(SketchStore())
+    ks = [sync.register(g1, cfg), sync.register(g2, cfg)]
+    sync_res = sync.run([Request(key=ks[w], query=q)
+                         for w, q in zip(which, stream)])
+    with AsyncInfluenceEngine(store=SketchStore(),
+                              deadline_ms=deadline_ms) as aeng:
+        ka = [aeng.engine.register(g1, cfg), aeng.engine.register(g2, cfg)]
+        futs = [aeng.submit(ka[w], q) for w, q in zip(which, stream)]
+        aeng.drain()
+        async_res = [f.result(5) for f in futs]
+    return sync_res, async_res
+
+
+# ---------------------------------------------------------------------------
+# async ≡ sync equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_async_equals_sync_mixed_stream(graphs):
+    """Acceptance: a shuffled mixed-class stream over two resident graphs is
+    byte-identical between the blocking engine and the async pipeline."""
+    g1, g2, cfg = graphs
+    stream = _mixed_stream(g1.n, 48, seed=11)
+    which = np.random.default_rng(12).integers(0, 2, size=len(stream))
+    sync_res, async_res = _run_both(g1, g2, cfg, stream, which)
+    for s, a in zip(sync_res, async_res):
+        assert _same_value(s.value, a.value)
+
+
+def test_async_equals_sync_property(graphs):
+    """Property form of the above: arbitrary shuffled streams and graph
+    routing, byte-identical per-query results."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    g1, g2, cfg = graphs
+    # warm both graphs' jit caches once so examples run fast
+    _run_both(g1, g2, cfg, _mixed_stream(g1.n, 4, seed=0), [0, 1, 0, 1])
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), num=st.integers(1, 24),
+           route_seed=st.integers(0, 2**16))
+    def prop(seed, num, route_seed):
+        stream = _mixed_stream(g1.n, num, seed=seed)
+        which = np.random.default_rng(route_seed).integers(0, 2, size=num)
+        sync_res, async_res = _run_both(g1, g2, cfg, stream, which,
+                                        deadline_ms=10.0)
+        for s, a in zip(sync_res, async_res):
+            assert _same_value(s.value, a.value)
+
+    prop()
+
+
+def test_cross_entry_dispatch_bit_identical(graphs):
+    """SpreadEstimate buckets against two different graphs coalesce into one
+    concatenated device call — and the values stay bit-identical."""
+    g1, g2, cfg = graphs
+    rng = np.random.default_rng(7)
+    stream = [SpreadEstimate(rng.integers(0, g1.n, 3)) for _ in range(24)]
+    which = [i % 2 for i in range(len(stream))]
+    sync_res, async_res = _run_both(g1, g2, cfg, stream, which,
+                                    deadline_ms=60.0)
+    assert any(r.backend == "cross:host" for r in async_res)
+    for s, a in zip(sync_res, async_res):
+        assert s.value == a.value
+
+
+# ---------------------------------------------------------------------------
+# double-buffered swap: serve N while N+1 builds
+# ---------------------------------------------------------------------------
+
+
+def test_delta_swap_overlaps_serving(graphs):
+    """Queries submitted *while the repair is mid-flight* complete against
+    version N; the swap lands afterwards and bumps the entry. Proven by
+    resolving a query inside the _before_swap hook (mutation thread blocked
+    between shadow-propagate and swap)."""
+    g1, g2, cfg = graphs
+    observed = {}
+
+    class Hooked(AsyncInfluenceEngine):
+        def _before_swap(self, key):
+            entry = self.store.entry(key)
+            fut = self.submit(key, SpreadEstimate((1, 2, 3)))
+            observed["value"] = fut.result(10).value
+            observed["version_during"] = entry.version
+
+    with Hooked(store=SketchStore(), deadline_ms=20.0) as aeng:
+        key = aeng.engine.register(g1, cfg)
+        v0 = aeng.store.entry(key).version
+        pre = aeng.submit(key, SpreadEstimate((1, 2, 3))).result(10).value
+        rng = np.random.default_rng(3)
+        delta = GraphDelta.make(add=(rng.integers(0, g1.n, 16),
+                                     rng.integers(0, g1.n, 16)))
+        rep = aeng.apply_delta_async(key, delta).result(30)
+        assert rep.added == 16
+        post = aeng.submit(key, SpreadEstimate((1, 2, 3))).result(10).value
+        v1 = aeng.store.entry(key).version
+
+    # the mid-repair query served version N and resolved before the swap
+    assert observed["version_during"] == v0
+    assert observed["value"] == pre
+    assert v1 > v0
+    # post-swap queries serve the repaired index (equal to a cold build)
+    sync = InfluenceEngine(SketchStore())
+    entry = sync.store.get_or_build(
+        aeng.store.entry(key).graph, cfg, aeng.store.entry(key).x)
+    assert post == sync(entry.key, SpreadEstimate((1, 2, 3))).value
+
+
+def test_stale_topk_rebuilds_off_serving_path(graphs):
+    """A removal delta leaves the entry stale; async TopKSeeds triggers a
+    background rebuild (hold + requeue) and resolves against the pristine
+    post-rebuild index — same answer the sync lazy rebuild gives."""
+    g1, _, cfg = graphs
+    sync = InfluenceEngine(SketchStore())
+    ks = sync.register(g1, cfg)
+    rem = (np.asarray(sync.store.entry(ks).graph.src[:4]),
+           np.asarray(sync.store.entry(ks).graph.dst[:4]))
+
+    with AsyncInfluenceEngine(store=SketchStore(), deadline_ms=20.0) as aeng:
+        ka = aeng.engine.register(g1, cfg)
+        aeng.apply_delta_async(ka, GraphDelta.make(remove=rem)).result(30)
+        assert aeng.store.entry(ka).stale
+        res = aeng.submit(ka, TopKSeeds(5)).result(30)
+        assert not aeng.store.entry(ka).stale
+        assert aeng.store.entry(ka).rebuilds == 1
+
+    from repro.service import apply_delta
+    apply_delta(sync.store, ks, GraphDelta.make(remove=rem))
+    want = sync(ks, TopKSeeds(5)).value
+    np.testing.assert_array_equal(res.value.seeds, want.seeds)
+
+
+# ---------------------------------------------------------------------------
+# eviction
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_keeps_bytes_under_budget_and_rebuilds(graphs):
+    """Device bytes stay under budget; evicted entries transparently rebuild
+    on next touch with a bit-identical matrix."""
+    g1, g2, cfg = graphs
+    g3 = rmat_graph(8, edge_factor=8, seed=3, setting="w1")
+    store = SketchStore()
+    entries = [store.get_or_build(g, cfg) for g in (g1, g2, g3)]
+    per = entries[0].device_bytes()
+    before = {e.key: np.asarray(e.matrix) for e in entries}
+    budget = 2 * per + per // 2     # room for two of the three
+    ev = CostAwareEvictor(budget)
+    for e in entries:               # equal rebuild cost: recency decides
+        e.build_time_s = 1.0        # (first build pays jit compile otherwise)
+    now = time.monotonic()
+    ev.touch(entries[1].key, now)   # hottest
+    ev.touch(entries[2].key, now - 0.5)
+    ev.touch(entries[0].key, now - 5.0)  # coldest -> the victim
+    evicted = ev.enforce(store)
+    assert evicted == [entries[0].key]
+    assert store.resident_bytes() <= budget
+    assert store.is_evicted(entries[0].key)
+    assert len(store) == 3          # evicted keys still count as known
+    # transparent rebuild on touch, bit-identical matrix, version advanced
+    e0 = store.entry(entries[0].key)
+    assert not store.is_evicted(entries[0].key)
+    assert e0.evictions == 1
+    np.testing.assert_array_equal(np.asarray(e0.matrix),
+                                  before[entries[0].key])
+
+
+def test_async_engine_enforces_resident_budget(graphs):
+    """With max_resident_mb set, registrations beyond the budget evict the
+    coldest entry, and queries against the evicted key still answer
+    correctly (rebuild on touch)."""
+    g1, g2, cfg = graphs
+    g3 = rmat_graph(8, edge_factor=8, seed=3, setting="w1")
+    probe = SketchStore().get_or_build(g1, cfg)
+    budget_mb = (2 * probe.device_bytes() + 100) / 2**20
+    sync = InfluenceEngine(SketchStore())
+    want = {}
+    for g in (g1, g2, g3):
+        k = sync.register(g, cfg)
+        want[k] = sync(k, SpreadEstimate((0, 1))).value
+
+    with AsyncInfluenceEngine(store=SketchStore(), deadline_ms=20.0,
+                              max_resident_mb=budget_mb) as aeng:
+        keys = [aeng.register_async(g, cfg).result(60) for g in (g1, g2, g3)]
+        aeng.drain()
+        assert aeng.store.resident_bytes() <= aeng.evictor.budget_bytes
+        assert any(aeng.store.is_evicted(k) for k in keys)
+        # every key — including the evicted one — still serves correctly
+        for k in keys:
+            got = aeng.submit(k, SpreadEstimate((0, 1))).result(60)
+            assert got.value == want[k]
+
+
+def test_stale_entries_are_not_evictable(graphs):
+    """A stale matrix is history-dependent: evicting it would change
+    answers, so the store refuses and the evictor skips it."""
+    g1, _, cfg = graphs
+    store = SketchStore()
+    engine = InfluenceEngine(store)
+    key = engine.register(g1, cfg)
+    e = store.entry(key)
+    rem = (np.asarray(e.graph.src[:2]), np.asarray(e.graph.dst[:2]))
+    from repro.service import apply_delta
+    apply_delta(store, key, GraphDelta.make(remove=rem))
+    assert store.entry(key).stale
+    with pytest.raises(ValueError):
+        store.evict(key)
+    ev = CostAwareEvictor(0)        # budget 0: evict everything evictable
+    assert ev.enforce(store) == []  # ...which is nothing
+
+
+# ---------------------------------------------------------------------------
+# scheduler units
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_flush_on_full_and_window():
+    s = MicroBatchScheduler(max_batch=4, flush_window_s=10.0)
+    k = "key"
+    reqs = [s.make_request(k, SpreadEstimate((1,)), None, now=100.0)
+            for _ in range(3)]
+    assert [s.offer(r) for r in reqs] == [False, False, False]
+    assert s.take_due(100.1) == []              # window not expired, not full
+    assert s.next_flush_t() == 110.0
+    r4 = s.make_request(k, SpreadEstimate((2,)), None, now=100.2)
+    assert s.offer(r4) is True                  # full -> flush now
+    (bucket,) = s.take_due(100.2)
+    assert [r.seq for r in bucket] == [r.seq for r in reqs + [r4]]
+    assert s.depth() == 0
+    # window flush: a lone request goes out once its deadline passes
+    r5 = s.make_request(k, SpreadEstimate((3,)), None, now=200.0)
+    s.offer(r5)
+    assert s.take_due(205.0) == []
+    assert [[r5.seq]] == [[r.seq for r in b] for b in s.take_due(210.0)]
+
+
+def test_scheduler_holds_and_requeue():
+    s = MicroBatchScheduler(max_batch=8, flush_window_s=0.0)
+    k1, k2 = "k1", "k2"
+    a = s.make_request(k1, TopKSeeds(3), None, now=0.0)
+    b = s.make_request(k2, TopKSeeds(3), None, now=0.0)
+    s.offer(a), s.offer(b)
+    s.hold(k1, "TopKSeeds")
+    due = s.take_due(1.0)
+    assert [r.key for bucket in due for r in bucket] == [k2]
+    assert s.next_flush_t() is None             # held bucket costs no wakeups
+    s.requeue([b])
+    s.hold(k2)                                  # qclass=None parks every class
+    assert s.take_due(2.0) == []
+    s.release(k1, "TopKSeeds"), s.release(k2)
+    got = {r.key for bucket in s.take_due(2.0) for r in bucket}
+    assert got == {k1, k2}
+    # distinct query classes bucket separately
+    s.offer(s.make_request(k1, TopKSeeds(3), None, now=0.0))
+    s.offer(s.make_request(k1, SpreadEstimate((1,)), None, now=0.0))
+    assert len(s.take_due(1.0)) == 2
+
+
+def test_swap_drops_engine_topk_memo(graphs):
+    """The engine's swap hook retires memoized top-k for the swapped key."""
+    g1, _, cfg = graphs
+    store = SketchStore()
+    engine = InfluenceEngine(store)
+    key = engine.register(g1, cfg)
+    engine(key, TopKSeeds(4))
+    assert engine(key, TopKSeeds(4)).cache_hit
+    shadow = store.shadow(key)
+    shadow.rebuild(key)
+    store.swap_entry(key, shadow.entry(key))
+    assert (key, 4) not in engine._topk_memo
+    assert not engine(key, TopKSeeds(4)).cache_hit

@@ -359,7 +359,16 @@ def test_write_report_smoke(tmp_path, shard_profiling):
                                        "store_build_s": 0.2}}}
     service = {"qps": 120.0, "wall_s": 1.6,
                "host": {"p50_ms": 4.0, "p99_ms": 9.0, "qps": 120.0},
-               "device": None}
+               "device": None,
+               "async": {"sustained_qps": 1300.0, "deadline_ms": 50.0,
+                         "completed": 1500, "deadline_misses": 30,
+                         "deadline_miss_rate": 0.02, "e2e_p99_ms": 42.0,
+                         "flushes": 210, "cross_entry_batches": 4,
+                         "admission_stalls": 0,
+                         "resident_bytes": 1 << 20,
+                         "budget_bytes": 2 << 20,
+                         "queue_depth_timeline": [(0.0, 0), (0.1, 7),
+                                                  (0.2, 3), (0.3, 0)]}}
     events = [{"name": "build", "phase": "build", "depth": 0,
                "ts_s": 0.0, "dur_s": 1.25, "attrs": {}}]
     out = tmp_path / "report.html"
@@ -372,6 +381,8 @@ def test_write_report_smoke(tmp_path, shard_profiling):
     assert "<svg" in html and "prefers-color-scheme" in html
     assert "Shard skew" in html and "SLO" in html
     assert "TopKSeeds" in html
+    assert "Admission" in html and "queue depth over time" in html
+    assert "deadline misses" in html and "sustained qps" in html
     assert len(html) > 4000
 
 

@@ -197,3 +197,31 @@ def test_store_hit_no_rebuild(served):
     before = len(store)
     e1 = store.get_or_build(g, cfg)
     assert len(store) == before and e1 is store.entry(key)
+
+
+def test_topk_memo_invalidated_by_delta():
+    """Regression: a delta that changes the top-k must invalidate the memo —
+    post-delta queries can never serve a pre-delta seed set."""
+    g = rmat_graph(8, edge_factor=4, seed=5, setting="w1")
+    cfg = DiFuserConfig(num_registers=128, seed=3)
+    store = SketchStore()
+    engine = InfluenceEngine(store)
+    key = engine.register(g, cfg)
+    before = engine(key, TopKSeeds(3))
+    assert engine(key, TopKSeeds(3)).cache_hit   # memo is live
+    # a star delta from a non-seed hub: high-weight edges to most of the
+    # graph make the hub the dominant seed, so the answer must change
+    hub = next(v for v in range(g.n) if v not in set(map(int, before.value.seeds)))
+    dst = np.asarray([v for v in range(g.n) if v != hub], dtype=np.int64)
+    delta = GraphDelta.make(add=(np.full(dst.shape, hub, dtype=np.int64), dst,
+                                 np.full(dst.shape, 0.9, dtype=np.float32)))
+    apply_delta(store, key, delta)
+    after = engine(key, TopKSeeds(3))
+    assert not after.cache_hit, "post-delta query served the stale memo"
+    assert hub in set(map(int, after.value.seeds))
+    # and the served answer equals a cold run on the post-delta graph
+    entry = store.entry(key)
+    cold = find_seeds(entry.graph, 3, cfg, x=entry.x)
+    np.testing.assert_array_equal(after.value.seeds, cold.seeds)
+    # repeated post-delta queries memo-hit against the *new* version
+    assert engine(key, TopKSeeds(3)).cache_hit
