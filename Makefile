@@ -26,4 +26,4 @@ bench-smoke:
 # left is importable API.
 lint:
 	python -m compileall -q src tests benchmarks examples scripts
-	python -c "import importlib; [importlib.import_module(m) for m in ('repro', 'repro.obs', 'repro.obs.trace', 'repro.obs.metrics', 'repro.obs.shardprof', 'repro.obs.slo', 'repro.obs.flight', 'repro.obs.report', 'repro.runtime', 'repro.runtime.session', 'repro.core.difuser', 'repro.diffusion', 'repro.diffusion.models', 'repro.partition', 'repro.partition.serial', 'repro.service', 'repro.service.engine', 'repro.tune', 'repro.tune.config', 'repro.tune.cache', 'repro.tune.autotuner', 'repro.configs', 'repro.launch.common', 'repro.launch.serve_im', 'repro.__main__', 'benchmarks.model_zoo', 'benchmarks.partition_balance', 'benchmarks.runtime_bench', 'benchmarks.trend')]; print('imports ok')"
+	python -c "import importlib; [importlib.import_module(m) for m in ('repro', 'repro.obs', 'repro.obs.trace', 'repro.obs.metrics', 'repro.obs.shardprof', 'repro.obs.slo', 'repro.obs.flight', 'repro.obs.report', 'repro.runtime', 'repro.runtime.session', 'repro.core.difuser', 'repro.diffusion', 'repro.diffusion.models', 'repro.partition', 'repro.partition.serial', 'repro.service', 'repro.service.engine', 'repro.kernels.fused_sweep', 'repro.tune', 'repro.tune.config', 'repro.tune.cache', 'repro.tune.autotuner', 'repro.configs', 'repro.launch.common', 'repro.launch.serve_im', 'repro.__main__', 'benchmarks.model_zoo', 'benchmarks.partition_balance', 'benchmarks.runtime_bench', 'benchmarks.trend')]; print('imports ok')"

@@ -2,7 +2,9 @@
 kernels (ref implementations under XLA:CPU — on TPU the same harness times
 the Pallas kernels with interpret=False).
 
-The three tunable sweep families go through :func:`repro.tune.autotune`, so
+The tunable sweep families (plus ``fused_sweep``, measured at the
+register-heavy scale-10/R=2048 shape where multi-sweep fusion and lane-fill
+slabbing actually move the needle) go through :func:`repro.tune.autotune`, so
 every row reports the hard-coded default against the measured winner (same
 timing discipline: min-of-N, device-synced spans, roofline-annotated GB/s)
 and the winners land in the persistent ``TUNE_cache.json``. With
@@ -27,11 +29,26 @@ from repro.tune import SWEEP_FAMILIES, autotune, default_cache
 
 
 def main(scale: int = 12, registers: int = 512,
-         out_json: str | None = None) -> dict:
+         out_json: str | None = None, fused_scale: int = 10,
+         fused_registers: int = 2048) -> dict:
     g = rmat_graph(scale, edge_factor=8, seed=71, setting="w1").sorted_by_dst()
     spec = RunSpec(num_registers=registers, seed=3)
     records = autotune(g, spec, backend="single",
                        families=SWEEP_FAMILIES, cache=default_cache())
+
+    # fused_sweep is measured at a fixed register-heavy shape (scale 10,
+    # R=2048) regardless of the sweep-family shape above: the fused win is
+    # register-bandwidth-bound — lane-fill slabbing only has something to
+    # keep resident when the full-width working set doesn't fit — so gating
+    # it at a register-light shape would measure nothing
+    if (fused_scale, fused_registers) == (scale, registers):
+        gf, fspec = g, spec
+    else:
+        gf = rmat_graph(fused_scale, edge_factor=8, seed=71,
+                        setting="w1").sorted_by_dst()
+        fspec = RunSpec(num_registers=fused_registers, seed=3)
+    records.update(autotune(gf, fspec, backend="single",
+                            families=("fused_sweep",), cache=default_cache()))
     for family, rec in records.items():
         emit(f"kernel.{family}.default", rec["default_us"], "hard-coded")
         emit(f"kernel.{family}.tuned", rec["tuned_us"],
@@ -49,6 +66,8 @@ def main(scale: int = 12, registers: int = 512,
          f"{g.n_pad * registers / (us/1e6):.3g} regs/s")
 
     doc = {"scale": scale, "registers": registers, "edges": int(g.m),
+           "fused_shape": {"scale": fused_scale,
+                           "registers": fused_registers, "edges": int(gf.m)},
            "kernels": records,
            "untuned": {"sketch_fill": {"us": round(fill_us, 3)},
                        "cardinality_stats": {"us": round(us, 3)}}}

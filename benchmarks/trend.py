@@ -74,7 +74,9 @@ def _service_metrics(rec: dict) -> Iterator[tuple[str, float, str]]:
 def _kernel_metrics(rec: dict) -> Iterator[tuple[str, float, str]]:
     """(metric name, value, direction) per tuned kernel family: tuned sweep
     time (lower-is-better) and tuned-over-default speedup (higher — a
-    speedup collapsing toward 1x means the tuner stopped finding wins)."""
+    speedup collapsing toward 1x means the tuner stopped finding wins).
+    Families come straight from the record, so ``fused_sweep.tuned_us`` /
+    ``fused_sweep.speedup`` are gated the same way as the older families."""
     for family, r in (rec.get("kernels") or {}).items():
         if r.get("tuned_us"):
             yield f"{family}.tuned_us", float(r["tuned_us"]), LOWER

@@ -100,6 +100,7 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
                          sim_axes: Sequence[str], estimator: str,
                          rebuild_threshold: float, max_prop: int, max_casc: int,
                          seed: int, schedule: str = "ring", local_sweeps: int = 0,
+                         fuse_sweeps: bool = False,
                          predicate=None, warm: bool = False):
     """Returns the shard_map body running the full Alg. 4 loop.
 
@@ -166,8 +167,18 @@ def _make_distributed_fn(part: Partition2D, *, k: int, vertex_axis: str,
             # block-Jacobi: drain intra-shard propagation before paying for
             # a ring exchange (edges FASST-placed mostly intra-shard, so a
             # few local sweeps kill most of the frontier; §Perf difuser)
-            for _ in range(local_sweeps):
-                m_cur = local_sweep(m_cur, bh, bw, br, bt, bl, x_loc, merge)
+            if fuse_sweeps and local_sweeps:
+                # fused prologue: one rolled loop region instead of
+                # local_sweeps unrolled program segments — the register
+                # block stays loop-carried (resident) across every sweep
+                m_cur = jax.lax.fori_loop(
+                    0, local_sweeps,
+                    lambda _i, mm: local_sweep(mm, bh, bw, br, bt, bl,
+                                               x_loc, merge),
+                    m_cur)
+            else:
+                for _ in range(local_sweeps):
+                    m_cur = local_sweep(m_cur, bh, bw, br, bt, bl, x_loc, merge)
             m_new = ring_sweep(m_cur, bh, bw, br, bt, bl, x_loc, merge)
             changed = jax.lax.psum(jnp.any(m_new != m_cur).astype(jnp.int32), all_axes) > 0
             return m_new, changed, it + 1
@@ -290,6 +301,10 @@ class DistributedConfig(DiFuserConfig):
     schedule: str = "ring"          # "ring" | "allgather"
     fasst: bool = True              # False -> naive sample partition
     local_sweeps: int = 0           # extra comm-free sweeps per exchange
+    fuse_sweeps: bool = False       # fused (rolled) local-sweep prologue
+    lane_fill: int = 0              # fused-kernel register slab width
+    #   (consumed by the kernels/fused_sweep launches; the shard_map body
+    #   itself keeps full-width panes — its shards are already lane-sized)
     partition: str = "block"        # vertex-assignment strategy (repro.partition)
     pad_mode: str = "step"          # "step" | "global" bucket padding
 
@@ -350,6 +365,7 @@ def _find_seeds_distributed(g: Graph, k: int, mesh,
         estimator=cfg.estimator, rebuild_threshold=cfg.rebuild_threshold,
         max_prop=cfg.max_propagate_iters, max_casc=cfg.max_cascade_iters,
         seed=cfg.seed, schedule=cfg.schedule, local_sweeps=cfg.local_sweeps,
+        fuse_sweeps=cfg.fuse_sweeps,
         predicate=resolve_model(cfg.model).predicate)
     body = maker(mesh)
 
@@ -409,6 +425,7 @@ def find_seeds_distributed(g: Graph, k: int, mesh,
 def _make_build_matrix_fn(part: Partition2D, *, vertex_axis: str,
                           sim_axes: Sequence[str], max_prop: int, seed: int,
                           schedule: str = "ring", local_sweeps: int = 0,
+                          fuse_sweeps: bool = False,
                           predicate=None, reg_offset: int = 0):
     """Returns the shard_map body running only Alg. 4 lines 3-6 (fill +
     propagate-to-fixpoint) and handing back each shard's register block.
@@ -480,8 +497,14 @@ def _make_build_matrix_fn(part: Partition2D, *, vertex_axis: str,
 
         def loop_body(c):
             m_cur, _, it = c
-            for _ in range(local_sweeps):
-                m_cur = local_sweep(m_cur, ph, pw, pr, pt, pl, x_loc)
+            if fuse_sweeps and local_sweeps:
+                m_cur = jax.lax.fori_loop(
+                    0, local_sweeps,
+                    lambda _i, mm: local_sweep(mm, ph, pw, pr, pt, pl, x_loc),
+                    m_cur)
+            else:
+                for _ in range(local_sweeps):
+                    m_cur = local_sweep(m_cur, ph, pw, pr, pt, pl, x_loc)
             m_new = ring_sweep(m_cur, ph, pw, pr, pt, pl, x_loc)
             changed = jax.lax.psum(jnp.any(m_new != m_cur).astype(jnp.int32),
                                    all_axes) > 0
@@ -537,7 +560,7 @@ def build_matrix_distributed(g: Graph, mesh,
     maker = _make_build_matrix_fn(
         part, vertex_axis=cfg.vertex_axis, sim_axes=tuple(cfg.sim_axes),
         max_prop=cfg.max_propagate_iters, seed=cfg.seed, schedule=cfg.schedule,
-        local_sweeps=cfg.local_sweeps,
+        local_sweeps=cfg.local_sweeps, fuse_sweeps=cfg.fuse_sweeps,
         predicate=resolve_model(cfg.model).predicate, reg_offset=reg_offset)
     body = maker(mesh)
 
@@ -626,6 +649,7 @@ def find_seeds_warm_distributed(g: Graph, k: int, mesh,
         estimator=cfg.estimator, rebuild_threshold=cfg.rebuild_threshold,
         max_prop=cfg.max_propagate_iters, max_casc=cfg.max_cascade_iters,
         seed=cfg.seed, schedule=cfg.schedule, local_sweeps=cfg.local_sweeps,
+        fuse_sweeps=cfg.fuse_sweeps,
         predicate=resolve_model(cfg.model).predicate, warm=True)
     body = maker(mesh)
 

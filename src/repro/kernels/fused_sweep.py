@@ -1,0 +1,122 @@
+"""Pallas kernel: ``num_sweeps`` fused SIMULATE sweeps in one launch.
+
+The single-sweep kernel (kernels/sketch_propagate.py) keeps its register
+panes VMEM-resident across edge blocks, but the ``local_sweeps`` prologues
+of the ring executors re-launch it per sweep — every extra comm-free sweep
+round-trips the whole register matrix through HBM. This kernel runs the
+sweep loop *inside* the launch: per register-lane tile, the current and
+accumulator panes stay in VMEM for all ``num_sweeps`` iterations and HBM
+sees the matrix exactly twice (load + final store).
+
+Schedule: grid = (J / lane_tile,), the edge operands broadcast whole to
+every grid instance (each tile loops all edges ``num_sweeps`` times — the
+fused trade: re-reading the small edge list buys register-pane residency).
+``lane_tile`` is the model-aware FASST lane-fill knob surfaced by
+``repro.tune`` as ``KernelConfig.lane_fill``: per-register-column
+independence of the Jacobi max-merge makes any tile width bit-identical, so
+density is purely a performance choice (``lt``'s remixed vertex hash
+changes which lanes are live per edge, shifting the optimum).
+
+VMEM working set per instance: two ``(n_pad, lane_tile)`` int8 panes (the
+ping-pong pair) plus the edge operands — at n_pad = 64Ki and lane_tile =
+128 that is 2 x 8 MiB panes, the same budget as the single-sweep kernel.
+
+The ping-pong pair is expressed as a second *output* pane rather than
+``scratch_shapes`` so the kernel also runs under old-jax interpret mode;
+the scratch pane is discarded by the wrapper.
+
+Jacobi semantics: every sweep gathers from the previous sweep's pane only,
+so results are bit-identical to ``num_sweeps`` applications of
+kernels/ref.py's single sweep for any edge order and any lane tile.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.sampling import edge_hash, fused_predicate
+from repro.kernels.common import REG_TILE, clamp_block
+from repro.kernels.sketch_propagate import (pad_edge_operands,
+                                            pad_register_axis)
+
+VISITED = -1  # python literal: weak-typed inside kernels (no captured consts)
+
+
+def _fused_sweep_kernel(src_ref, dst_ref, h_ref, lo_ref, thr_ref, x_ref,
+                        m_ref, out_ref, buf_ref, *, num_edges: int,
+                        num_sweeps: int, predicate):
+    src = src_ref[...]
+    dst = dst_ref[...]
+    h = h_ref[...].astype(jnp.uint32)
+    lo = lo_ref[...].astype(jnp.uint32)
+    thr = thr_ref[...].astype(jnp.uint32)
+    x = x_ref[...].astype(jnp.uint32)
+
+    buf_ref[...] = m_ref[...]          # "current" pane (previous sweep)
+
+    for _ in range(num_sweeps):        # static unroll: panes stay in VMEM
+        out_ref[...] = buf_ref[...]
+
+        def body(i, _):
+            u = src[i]
+            v = dst[i]
+            mask = predicate(h[i], lo[i], thr[i], x)  # fused sampling
+            pulled = pl.load(buf_ref, (v, slice(None)))  # Jacobi gather
+            contrib = jnp.where(mask, pulled, jnp.full_like(pulled, VISITED))
+            cur = pl.load(out_ref, (u, slice(None)))
+            # sticky visited: a VISITED register never resurrects
+            new = jnp.where(cur == VISITED, cur, jnp.maximum(cur, contrib))
+            pl.store(out_ref, (u, slice(None)), new)
+            return 0
+
+        jax.lax.fori_loop(0, num_edges, body, 0)
+        buf_ref[...] = out_ref[...]    # ping-pong: next sweep reads this
+
+
+@partial(jax.jit, static_argnames=("seed", "num_sweeps", "lane_tile",
+                                   "interpret", "predicate"))
+def fused_sweep_pallas(m, src, dst, thr, x, h=None, lo=None, *, seed: int = 0,
+                       num_sweeps: int = 1, lane_tile: int = REG_TILE,
+                       interpret: bool = True, predicate=None):
+    if h is None:
+        h = edge_hash(src, dst, seed=seed)
+    if lo is None:
+        lo = jnp.zeros(thr.shape, jnp.uint32)
+    if predicate is None:
+        predicate = fused_predicate
+    if num_sweeps <= 0:
+        return m
+    n_pad, num_regs = m.shape
+    num_edges = int(src.shape[0])
+    lane_tile = clamp_block(num_regs, lane_tile)
+    # edge padding keeps prime/odd edge counts legal on tiled backends
+    # (predicate-dead filler; see common.pad_amount) — the in-kernel loop
+    # still visits every padded slot, which is a no-op by construction
+    src, dst, h, lo, thr = pad_edge_operands(src, dst, h, lo, thr, 8)
+    e_pad = int(src.shape[0])
+    m_in, x = pad_register_axis(m, x, lane_tile)
+    regs_pad = x.shape[0]
+    grid = (regs_pad // lane_tile,)
+    out, _scratch = pl.pallas_call(
+        partial(_fused_sweep_kernel, num_edges=e_pad, num_sweeps=num_sweeps,
+                predicate=predicate),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((e_pad,), lambda r: (0,)),
+            pl.BlockSpec((e_pad,), lambda r: (0,)),
+            pl.BlockSpec((e_pad,), lambda r: (0,)),
+            pl.BlockSpec((e_pad,), lambda r: (0,)),
+            pl.BlockSpec((e_pad,), lambda r: (0,)),
+            pl.BlockSpec((lane_tile,), lambda r: (r,)),
+            pl.BlockSpec((n_pad, lane_tile), lambda r: (0, r)),
+        ],
+        out_specs=(pl.BlockSpec((n_pad, lane_tile), lambda r: (0, r)),
+                   pl.BlockSpec((n_pad, lane_tile), lambda r: (0, r))),
+        out_shape=(jax.ShapeDtypeStruct((n_pad, regs_pad), jnp.int8),
+                   jax.ShapeDtypeStruct((n_pad, regs_pad), jnp.int8)),
+        interpret=interpret,
+    )(src, dst, h, lo, thr, x, m_in)
+    return out[:, :num_regs] if regs_pad != num_regs else out

@@ -23,6 +23,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.common import EDGE_BLOCK, REG_TILE
 from repro.kernels.cascade_step import cascade_sweep_pallas
 from repro.kernels.fused_sample import fused_sample_pallas
+from repro.kernels.fused_sweep import fused_sweep_pallas
 from repro.kernels.sketch_cardinality import cardinality_stats_pallas
 from repro.kernels.sketch_fill import sketch_fill_pallas
 from repro.kernels.sketch_propagate import propagate_sweep_pallas
@@ -59,6 +60,23 @@ def propagate_sweep(m, src, dst, thr, x, *, seed: int = 0, impl: str = "ref",
                                   predicate=predicate, interpret=_INTERPRET,
                                   edge_block=edge_block or EDGE_BLOCK,
                                   reg_tile=reg_tile or REG_TILE)
+
+
+def fused_sweep(m, src, dst, thr, x, *, num_sweeps: int = 1, seed: int = 0,
+                impl: str = "ref", edge_chunk: int = 2048, h=None, lo=None,
+                predicate=None, lane_fill: int = 0, reg_tile: int = 0):
+    """``num_sweeps`` propagate sweeps fused into one launch — bit-identical
+    to ``num_sweeps`` calls of :func:`propagate_sweep` on the same operands.
+    ``lane_fill`` is the register-slab width (0 = full width / library
+    default); see kernels/fused_sweep.py for the VMEM residency argument."""
+    if impl == "ref":
+        return _ref.fused_sweep_ref(
+            m, src, dst, thr, x, h, lo, num_sweeps=num_sweeps, seed=seed,
+            predicate=predicate, edge_chunk=edge_chunk, lane_fill=lane_fill)
+    return fused_sweep_pallas(m, src, dst, thr, x, h, lo, seed=seed,
+                              num_sweeps=num_sweeps, predicate=predicate,
+                              interpret=_INTERPRET,
+                              lane_tile=lane_fill or reg_tile or REG_TILE)
 
 
 def cascade_sweep(m, src, dst, thr, x, *, seed: int = 0, impl: str = "ref",

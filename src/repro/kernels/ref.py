@@ -110,6 +110,54 @@ def propagate_sweep_ref(m: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
     return jnp.where(m == VISITED, m, acc)
 
 
+@partial(jax.jit, static_argnames=("num_sweeps", "edge_chunk", "lane_fill",
+                                   "seed", "predicate"))
+def fused_sweep_ref(m: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+                    thr: jnp.ndarray, x: jnp.ndarray, h=None, lo=None, *,
+                    num_sweeps: int = 1, edge_chunk: int = 2048,
+                    lane_fill: int = 0, seed: int = 0,
+                    predicate=None) -> jnp.ndarray:
+    """``num_sweeps`` SIMULATE sweeps fused into one traced program.
+
+    Each sweep is exactly :func:`propagate_sweep_ref`; fusing them means one
+    dispatch (and, on device, one HBM round-trip of the register matrix)
+    instead of one per sweep. ``lane_fill`` processes the register axis in
+    that many columns at a time (0 = full width): every column of the Jacobi
+    max-merge is independent of every other, so slabbing is bit-identical —
+    it only shrinks the per-chunk mask/gather working set from
+    ``edge_chunk x num_regs`` to ``edge_chunk x lane_fill``, which is what
+    keeps high-register-count sweeps cache-resident.
+    """
+    h, lo, predicate = _edge_args(src, dst, thr, h, lo, predicate, seed)
+    xs, _ = _chunked(src, dst, h, lo, thr, edge_chunk)
+    num_regs = int(m.shape[1])
+    fill = int(lane_fill) if 0 < int(lane_fill) < num_regs else num_regs
+
+    def one_sweep(m_in):
+        def slab(j0, j1):
+            x_s, m_s = x[j0:j1], m_in[:, j0:j1]
+
+            def body(acc, chunk):
+                s, d, hh, ll, t = chunk
+                mask = _edge_mask(hh, ll, t, x_s, predicate)
+                contrib = jnp.where(mask, m_s[d], jnp.int8(VISITED))
+                return acc.at[s].max(contrib), None
+
+            acc, _ = jax.lax.scan(body, m_s, xs)
+            return jnp.where(m_s == VISITED, m_s, acc)
+
+        if fill >= num_regs:
+            return slab(0, num_regs)
+        return jnp.concatenate(
+            [slab(j0, min(j0 + fill, num_regs))
+             for j0 in range(0, num_regs, fill)], axis=1)
+
+    out = m
+    for _ in range(int(num_sweeps)):
+        out = one_sweep(out)
+    return out
+
+
 @partial(jax.jit, static_argnames=("edge_chunk", "seed", "predicate"))
 def cascade_sweep_ref(m: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
                       thr: jnp.ndarray, x: jnp.ndarray, h=None, lo=None, *,

@@ -48,24 +48,36 @@ IM_CELLS = {
 }
 
 
-def _tuned_local_sweeps(name: str, tuning: str) -> int:
-    """Cached ``bucket_propagate`` winner for a cell's edge count (the one
-    tuned knob that survives a shapes-only lowering). ``tuning="auto"``
-    cannot measure here — there is no real graph — so both non-off modes
-    read the cache and fall back to 0 (today's default) on a miss."""
+def _tuned_knobs(name: str, tuning: str) -> dict:
+    """Cached winners for a cell's edge bucket — the tuned knobs that
+    survive a shapes-only lowering: the ``bucket_propagate`` winner's
+    ``local_sweeps`` and the ``fused_sweep`` winner's ``fuse_sweeps``
+    (whether that prologue lowers as one fused/rolled loop region).
+    ``tuning="auto"`` cannot measure here — there is no real graph — so
+    both non-off modes read the cache and fall back to today's defaults
+    (0 / unfused) on a miss."""
+    knobs = {"local_sweeps": 0, "fuse_sweeps": False}
     if tuning == "off":
-        return 0
+        return knobs
     from repro.tune import cache_key, default_cache
 
     _, m, _, _ = IM_CELLS[name]
-    cfg = default_cache().lookup(cache_key(
+    cache = default_cache()
+    cfg = cache.lookup(cache_key(
         "bucket_propagate", backend="mesh", impl="ref", model="wc",
         num_edges=int(m)))
-    return int(cfg.local_sweeps) if cfg is not None else 0
+    if cfg is not None:
+        knobs["local_sweeps"] = int(cfg.local_sweeps)
+    fused = cache.lookup(cache_key(
+        "fused_sweep", backend="mesh", impl="ref", model="wc",
+        num_edges=int(m)))
+    if fused is not None:
+        knobs["fuse_sweeps"] = bool(fused.fuse_sweeps)
+    return knobs
 
 
 def lower_im_cell(name: str, mesh, *, k: int = 4, schedule: str = "ring",
-                  local_sweeps: int = 0):
+                  local_sweeps: int = 0, fuse_sweeps: bool = False):
     """Lower the full distributed DiFuseR loop with ShapeDtypeStruct inputs
     (no host graph build — bucket sizes come from the duplication model)."""
     from jax.sharding import PartitionSpec as P
@@ -98,7 +110,7 @@ def lower_im_cell(name: str, mesh, *, k: int = 4, schedule: str = "ring",
     maker = _make_distributed_fn(
         part, k=k, vertex_axis=vertex_axis, sim_axes=sim_axes, estimator="hll",
         rebuild_threshold=0.01, max_prop=24, max_casc=24, seed=0,
-        schedule=schedule, local_sweeps=local_sweeps)
+        schedule=schedule, local_sweeps=local_sweeps, fuse_sweeps=fuse_sweeps)
     body = maker(mesh)
 
     sim_spec = sim_axes if len(sim_axes) > 1 else sim_axes[0]
@@ -132,7 +144,7 @@ def _cell_metrics(lowered):
 
 
 def run_cell(name, mesh, mesh_name, *, out_dir=None, tag="", schedule="ring",
-             local_sweeps=0):
+             local_sweeps=0, fuse_sweeps=False):
     """Lower + compile one IM cell, recording cost/memory/collective stats."""
     from repro.obs import trace
 
@@ -142,7 +154,8 @@ def run_cell(name, mesh, mesh_name, *, out_dir=None, tag="", schedule="ring",
         with trace.span("dryrun.cell", phase="plan", arch=name,
                         mesh=mesh_name, schedule=schedule):
             lowered, part = lower_im_cell(name, mesh, schedule=schedule,
-                                          local_sweeps=local_sweeps)
+                                          local_sweeps=local_sweeps,
+                                          fuse_sweeps=fuse_sweeps)
             compiled, m = _cell_metrics(lowered)
         mem = compiled.memory_analysis()
         chips = len(mesh.devices.flatten())
@@ -203,8 +216,7 @@ def main() -> None:
             for name in names:
                 rec = run_cell(name, mesh, mesh_name, out_dir=args.out,
                                schedule=args.schedule, tag=args.tag,
-                               local_sweeps=_tuned_local_sweeps(name,
-                                                                args.tuning))
+                               **_tuned_knobs(name, args.tuning))
                 status = "OK " if rec["ok"] else "FAIL"
                 print(f"[{status}] {name:24s} im_step      {mesh_name:12s} "
                       f"{rec.get('compile_s', '-'):>6}s  {rec.get('error', '')}")

@@ -16,7 +16,7 @@ tracing-disabled fast path is untouched — null spans never reach listeners.
 The module-level recorder installs itself at import (``repro.obs`` imports
 this module), so the ring is warm in every process that touches the obs
 package. ``configure(dir=...)`` or ``REPRO_FLIGHT_DIR`` picks the dump
-directory (default: CWD)."""
+directory (default: a gitignored ``flight/`` under the CWD)."""
 from __future__ import annotations
 
 import json
@@ -137,8 +137,11 @@ class FlightRecorder:
             return None
         try:
             if path is None:
+                # default: a gitignored flight/ subdirectory — dumps are
+                # debugging artifacts and must never land in the worktree
+                # root (where they read as committable files)
                 base = (self.out_dir or os.environ.get("REPRO_FLIGHT_DIR")
-                        or os.getcwd())
+                        or os.path.join(os.getcwd(), "flight"))
                 os.makedirs(base, exist_ok=True)
                 slug = "".join(c if c.isalnum() or c in "-_" else "-"
                                for c in reason)[:48] or "dump"

@@ -460,6 +460,10 @@ def _cfg_label(cfg: dict) -> str:
         parts.append(f"ls={cfg['local_sweeps']}")
     if cfg.get("pad_mode", "step") != "step":
         parts.append(f"pad={cfg['pad_mode']}")
+    if cfg.get("fuse_sweeps"):
+        parts.append("fused")
+    if cfg.get("lane_fill"):
+        parts.append(f"lf={cfg['lane_fill']}")
     return " ".join(parts) if parts else "defaults"
 
 

@@ -74,6 +74,15 @@ class _RingState:
         #: Result-invariant — extra monotone sweeps toward the unique
         #: max-merge fixpoint (repro.tune may raise it; 0 = historical).
         self.local_sweeps = 0
+        #: Fused prologue routing (the serial twin of
+        #: ``DistributedConfig.fuse_sweeps``/``lane_fill``): when on, the
+        #: comm-free prologue runs all ``local_sweeps`` iterations through
+        #: one ``ops.fused_sweep`` launch per shard (kernels/fused_sweep —
+        #: register block resident across sweeps) instead of re-running the
+        #: numpy ``sweep_local`` merge per sweep. Bit-identical by the
+        #: kernel contract; repro.tune flips these from measured winners.
+        self.fuse_sweeps = False
+        self.lane_fill = 0
         self.pred = resolve_model(cfg.model).predicate
         self.owned = part.owned_ids                        # (mu_v, n_loc)
         self.valid = self.owned < g.n                      # padding rows
@@ -137,10 +146,46 @@ class _RingState:
         self.m = out
         return changed
 
+    def sweep_local_fused(self, num_sweeps: int) -> bool:
+        """The fused spelling of ``num_sweeps`` x :meth:`sweep_local`: per
+        (vertex, sim) shard, one :func:`ops.fused_sweep` launch runs every
+        prologue sweep over the kk=0 bucket with the shard's register block
+        resident between sweeps. Results are bit-identical to the looped
+        numpy path (Jacobi max-merge; the fused kernel's contract) — only
+        the launch/traffic pattern changes."""
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        p = self.part
+        bufs = (p.p_h, p.p_w, p.p_r, p.p_t, p.p_l)
+        if num_sweeps <= 0 or bufs[0][0].shape[-1] == 0:
+            return False
+        changed = False
+        for v in range(p.mu_v):
+            for s in range(p.mu_s):
+                out = np.asarray(ops.fused_sweep(
+                    jnp.asarray(self.m[v, s]),
+                    jnp.asarray(bufs[1][0][v, s]),      # bw: write rows
+                    jnp.asarray(bufs[2][0][v, s]),      # br: read rows
+                    jnp.asarray(bufs[3][0][v, s]),      # thr (interval width)
+                    jnp.asarray(p.x_shards[s]),
+                    h=jnp.asarray(bufs[0][0][v, s]),
+                    lo=jnp.asarray(bufs[4][0][v, s]),
+                    num_sweeps=int(num_sweeps), impl=self.cfg.impl,
+                    edge_chunk=self.cfg.edge_chunk,
+                    lane_fill=int(self.lane_fill), predicate=self.pred))
+                changed = changed or bool((out != self.m[v, s]).any())
+                self.m[v, s] = out
+        return changed
+
     def sweep_propagate(self) -> bool:
-        for _ in range(self.local_sweeps):   # comm-free prologue (tunable)
-            if not self.sweep_local():
-                break
+        if self.fuse_sweeps and self.local_sweeps:
+            self.sweep_local_fused(self.local_sweeps)
+        else:
+            for _ in range(self.local_sweeps):   # comm-free prologue (tunable)
+                if not self.sweep_local():
+                    break
         p = self.part
         prof = self.profiler
         bufs = (p.p_h, p.p_w, p.p_r, p.p_t, p.p_l)
@@ -279,7 +324,8 @@ def _find_seeds_ring_serial(g: Graph, k: int,
                             strategy: str = "block",
                             plan: Optional[PartitionPlan] = None,
                             x: Optional[np.ndarray] = None,
-                            pad_mode: str = "step", local_sweeps: int = 0):
+                            pad_mode: str = "step", local_sweeps: int = 0,
+                            fuse_sweeps: bool = False, lane_fill: int = 0):
     """Serial-ring Alg. 4 driver (the ``serial`` runtime backend's body).
 
     Returns ``(InfluenceResult, Partition2D)`` like the distributed path;
@@ -298,6 +344,8 @@ def _find_seeds_ring_serial(g: Graph, k: int,
                               plan=plan, pad_mode=pad_mode, sampled=sampled)
     st = _RingState(part, g, cfg)
     st.local_sweeps = int(local_sweeps)
+    st.fuse_sweeps = bool(fuse_sweeps)
+    st.lane_fill = int(lane_fill)
     if shardprof.enabled():
         st.profiler = shardprof.profile_for_partition(
             part, backend="serial", phase="fixpoint")
@@ -376,7 +424,8 @@ def build_matrix_ring_serial(g: Graph, config: Optional[DiFuserConfig] = None,
                              strategy: str = "block",
                              plan: Optional[PartitionPlan] = None,
                              pad_mode: str = "step", reg_offset: int = 0,
-                             local_sweeps: int = 0):
+                             local_sweeps: int = 0, fuse_sweeps: bool = False,
+                             lane_fill: int = 0):
     """Alg. 4 lines 3-6 on the serial ring: fill + propagate-to-fixpoint.
 
     Expects ``g`` dst-sorted and ``x`` canonical (sorted). Returns
@@ -401,6 +450,8 @@ def build_matrix_ring_serial(g: Graph, config: Optional[DiFuserConfig] = None,
                     mu_s=mu_s, reg_offset=reg_offset) as sp:
         st = _RingState(part, g, cfg, reg_offset=reg_offset)
         st.local_sweeps = int(local_sweeps)
+        st.fuse_sweeps = bool(fuse_sweeps)
+        st.lane_fill = int(lane_fill)
         if shardprof.enabled():
             st.profiler = shardprof.profile_for_partition(
                 part, backend="serial", phase="build")

@@ -52,7 +52,8 @@ class SerialRingBackend(Backend):
         res, part = _serial._find_seeds_ring_serial(
             g, k, spec.difuser_config(), mu_v=mu_v, mu_s=mu_s,
             strategy=spec.partition, plan=plan, x=x, pad_mode=spec.pad_mode,
-            local_sweeps=spec.local_sweeps)
+            local_sweeps=spec.local_sweeps, fuse_sweeps=spec.fuse_sweeps,
+            lane_fill=spec.lane_fill)
         return RunReport(result=res, backend=self.name, spec=spec,
                          partition=part, wall_s=time.perf_counter() - t0)
 
@@ -73,7 +74,8 @@ class SerialRingBackend(Backend):
         m, iters, _ = _serial.build_matrix_ring_serial(
             g, cfg, x, mu_v=mu_v, mu_s=mu_s, strategy=spec.partition,
             pad_mode=spec.pad_mode, reg_offset=reg_offset,
-            local_sweeps=spec.local_sweeps)
+            local_sweeps=spec.local_sweeps, fuse_sweeps=spec.fuse_sweeps,
+            lane_fill=spec.lane_fill)
         return m, iters
 
     def fixpoint(self, m, g: Graph, spec: RunSpec, x: np.ndarray, *,

@@ -11,7 +11,8 @@ it understands.
 
 Only the sketch/diffusion fields affect *results* — the execution fields
 (``backend``, ``mu_v``, ``mu_s``, ``partition``, ``pad_mode``, ``schedule``,
-``local_sweeps``) are pure strategy: seed sets are bit-identical across
+``local_sweeps``, ``fuse_sweeps``, ``lane_fill``) are pure strategy: seed
+sets are bit-identical across
 every backend and every partition plan (tests/test_runtime.py holds the
 line). That invariance is what makes ``backend="auto"`` safe.
 """
@@ -32,7 +33,8 @@ _SKETCH_FIELDS = ("num_registers", "seed", "estimator", "rebuild_threshold",
 
 #: DistributedConfig-only field names shared with RunSpec.
 _EXEC_FIELDS = ("vertex_axis", "sim_axes", "schedule", "fasst",
-                "local_sweeps", "partition", "pad_mode")
+                "local_sweeps", "fuse_sweeps", "lane_fill", "partition",
+                "pad_mode")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +71,12 @@ class RunSpec:
     schedule: str = "ring"             # "ring" | "allgather" (mesh backend)
     fasst: bool = True                 # FASST sample partition (vs naive)
     local_sweeps: int = 0              # comm-free sweeps per ring exchange
+    fuse_sweeps: bool = False          # run the local_sweeps prologue fused
+    #   (kernels/fused_sweep: all sweeps in one launch, register block
+    #   resident between them). Performance-only by the kernel contract.
+    lane_fill: int = 0                 # fused-kernel register slab width
+    #   (0 = full width); model-aware — repro.tune seeds denser fills for
+    #   remixed-predicate models (lt)
     vertex_axis: str = "data"          # mesh axis names (mesh backend)
     sim_axes: Tuple[str, ...] = ("model",)
 

@@ -14,6 +14,7 @@ See docs/tuning.md for the search space, cache schema, and how measured
 shard profiles / planner stats seed the candidates.
 """
 from repro.tune.autotuner import (autotune, families_for,
+                                  measure_fused_family,
                                   measure_schedule_family,
                                   measure_sweep_family, resolve_spec)
 from repro.tune.cache import (CACHE_ENV, DEFAULT_CACHE_PATH, TuningCache,
@@ -21,15 +22,15 @@ from repro.tune.cache import (CACHE_ENV, DEFAULT_CACHE_PATH, TuningCache,
                               size_bucket)
 from repro.tune.config import (DEFAULT_CONFIGS, KERNEL_FAMILIES,
                                SWEEP_FAMILIES, KernelConfig, default_config,
-                               schedule_candidates, spec_overrides,
-                               sweep_candidates)
+                               fused_candidates, schedule_candidates,
+                               spec_overrides, sweep_candidates)
 
 __all__ = [
     "KernelConfig", "KERNEL_FAMILIES", "SWEEP_FAMILIES", "DEFAULT_CONFIGS",
-    "sweep_candidates", "schedule_candidates", "spec_overrides",
-    "default_config",
+    "sweep_candidates", "schedule_candidates", "fused_candidates",
+    "spec_overrides", "default_config",
     "TuningCache", "cache_key", "size_bucket", "default_cache",
     "reset_default_cache", "CACHE_ENV", "DEFAULT_CACHE_PATH",
     "autotune", "resolve_spec", "families_for",
-    "measure_sweep_family", "measure_schedule_family",
+    "measure_sweep_family", "measure_schedule_family", "measure_fused_family",
 ]

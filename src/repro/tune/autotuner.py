@@ -33,12 +33,17 @@ import numpy as np
 from repro.obs import metrics, shardprof, trace
 from repro.tune.cache import TuningCache, cache_key, default_cache
 from repro.tune.config import (KernelConfig, default_config,
-                               schedule_candidates, spec_overrides,
-                               sweep_candidates)
+                               fused_candidates, schedule_candidates,
+                               spec_overrides, sweep_candidates)
 from repro.utils import roofline
 
 #: timing repetitions per candidate (min-of-N; first call also warms jit)
 TRIALS = 3
+
+#: canonical prologue depth the fused_sweep family is timed at: the
+#: candidate grid compares "this many back-to-back sweeps" fused vs looped,
+#: matching the local_sweeps values schedule_candidates ever offers (1-2)
+FUSED_PROBE_SWEEPS = 2
 
 
 def _time_grid(fns, labels, *, family: str, nbytes: int,
@@ -185,6 +190,71 @@ def measure_sweep_family(g, spec, family: str, *,
 
 
 # ---------------------------------------------------------------------------
+# Family measurement: fused multi-sweep kernel (fused_sweep)
+# ---------------------------------------------------------------------------
+
+
+def measure_fused_family(g, spec, *, backend: str = "serial",
+                         candidates=None) -> Tuple[KernelConfig, dict]:
+    """Time ``FUSED_PROBE_SWEEPS`` back-to-back propagate sweeps per
+    candidate on the actual graph.
+
+    Candidate 0 is today's behaviour — one jitted ``propagate_sweep`` launch
+    per sweep, the register matrix materialized between launches (the
+    ``sweep_local()`` / mesh-prologue re-launch pattern). Fused candidates
+    run the same sweeps through :func:`ops.fused_sweep` in one launch at a
+    given lane fill; candidates are seeded model-aware from the register
+    width and the last measured profile (:func:`fused_candidates`).
+    """
+    import jax
+
+    from repro.kernels import ops
+
+    cfg, (src, dst, h, lo, thr), xj, m, pred = _sweep_operands(g, spec)
+    num_regs = int(xj.shape[0])
+    if candidates is None:
+        candidates = fused_candidates(None, shardprof.last_profile(),
+                                      model=cfg.model, num_regs=num_regs)
+    base = default_config("fused_sweep")         # fuse_sweeps=False: the loop
+    cands = [base] + [c for c in candidates if c != base]
+    sweeps = FUSED_PROBE_SWEEPS
+    nbytes = shardprof.bucket_bytes(int(src.shape[0]), num_regs) * sweeps
+    kw = dict(seed=cfg.seed, impl=cfg.impl, predicate=pred,
+              edge_chunk=cfg.edge_chunk)
+
+    def make_fn(c: KernelConfig):
+        if not c.fuse_sweeps:
+            step = jax.jit(lambda m_, h_, lo_: ops.propagate_sweep(
+                m_, src, dst, thr, xj, h=h_, lo=lo_, **kw))
+
+            def loop():
+                mm = m
+                for _ in range(sweeps):
+                    mm = step(mm, h, lo)
+                return jax.block_until_ready(mm)
+
+            return loop
+        call = jax.jit(lambda m_, h_, lo_: ops.fused_sweep(
+            m_, src, dst, thr, xj, h=h_, lo=lo_, num_sweeps=sweeps,
+            lane_fill=c.lane_fill, **kw))
+        return lambda: jax.block_until_ready(call(m, h, lo))
+
+    labels = [f"fused.lf{c.lane_fill or 0}" if c.fuse_sweeps else "loop"
+              for c in cands]
+    timings = _time_grid([make_fn(c) for c in cands], labels,
+                         family="fused_sweep", nbytes=nbytes)
+    results = []
+    for c, label, (sec, gbps) in zip(cands, labels, timings):
+        _publish("fused_sweep", backend, label, sec, gbps)
+        results.append((c, label, sec, gbps))
+    record = _measurement_record("fused_sweep", backend, results)
+    winner = min(results, key=lambda r: r[2])[0]
+    metrics.gauge("tune.speedup", family="fused_sweep",
+                  backend=backend).set(record["speedup"])
+    return winner, record
+
+
+# ---------------------------------------------------------------------------
 # Family measurement: ring schedule (bucket_propagate)
 # ---------------------------------------------------------------------------
 
@@ -251,7 +321,10 @@ def families_for(spec, backend: str) -> Tuple[str, ...]:
     if backend == "single":
         return ("sketch_propagate", "cascade_step")
     if backend in ("serial", "mesh") and spec.num_shards > 1:
-        return ("bucket_propagate",)
+        # bucket_propagate picks (local_sweeps, pad_mode); fused_sweep then
+        # decides whether those prologue sweeps run fused and at what lane
+        # fill (disjoint spec fields, so the override merge is order-free)
+        return ("bucket_propagate", "fused_sweep")
     return ()
 
 
@@ -260,6 +333,8 @@ def _measure_family(family: str, g, spec, backend: str):
         return measure_sweep_family(g, spec, family, backend=backend)
     if family == "bucket_propagate":
         return measure_schedule_family(g, spec, backend=backend)
+    if family == "fused_sweep":
+        return measure_fused_family(g, spec, backend=backend)
     raise ValueError(f"unknown kernel family {family!r}")
 
 

@@ -1,7 +1,8 @@
 """Kernel tuning search space: one :class:`KernelConfig` per kernel family.
 
-The four hot-path kernel families (``fused_sample``, ``sketch_propagate``,
-``cascade_step``, ``bucket_propagate``) historically ran with one hard-coded
+The hot-path kernel families (``fused_sample``, ``sketch_propagate``,
+``cascade_step``, ``bucket_propagate``, ``fused_sweep``) historically ran
+with one hard-coded
 tiling (``kernels.common.EDGE_BLOCK/REG_TILE``, ``edge_chunk=2048`` for the
 jnp oracles) and ``local_sweeps=0``, regardless of backend, diffusion model,
 or problem size. A :class:`KernelConfig` names the knobs the autotuner may
@@ -25,7 +26,7 @@ from typing import Optional, Tuple
 
 #: kernel families the tuner knows how to time and thread
 KERNEL_FAMILIES = ("fused_sample", "sketch_propagate", "cascade_step",
-                   "bucket_propagate")
+                   "bucket_propagate", "fused_sweep")
 
 #: families whose knob is the single-device sweep tiling
 SWEEP_FAMILIES = ("fused_sample", "sketch_propagate", "cascade_step")
@@ -43,12 +44,22 @@ class KernelConfig:
     (``bucket_propagate`` family; consumed by the ring fixpoints).
     ``pad_mode`` — bucket padding policy of the 2-D partition
     (``bucket_propagate`` family; "step" | "global").
+    ``fuse_sweeps`` — run the ``local_sweeps`` prologue through the fused
+    multi-sweep kernel (``fused_sweep`` family): all sweeps inside one
+    launch, the register block staying resident between them instead of
+    round-tripping through HBM per re-launch.
+    ``lane_fill`` — fused-kernel register-lane slab width (``fused_sweep``
+    family; 0 = full register width). Per-register-column independence of
+    the Jacobi max-merge makes register-axis slabbing result-invariant;
+    the knob trades lane occupancy against the per-slab working set.
     """
 
     edge_block: int = 0
     reg_tile: int = 0
     local_sweeps: int = 0
     pad_mode: str = "step"
+    fuse_sweeps: bool = False
+    lane_fill: int = 0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -66,6 +77,7 @@ DEFAULT_CONFIGS = {
     "sketch_propagate": KernelConfig(),
     "cascade_step": KernelConfig(),
     "bucket_propagate": KernelConfig(),
+    "fused_sweep": KernelConfig(),
 }
 
 
@@ -94,6 +106,28 @@ def sweep_candidates(num_edges: int, *, impl: str = "ref",
     return tuple(KernelConfig(edge_block=int(c)) for c in sorted(chunks))
 
 
+def _comm_fraction(stats=None, profile=None) -> Optional[float]:
+    """Measured exchange share of sweep traffic: the planner's (predicted or
+    measured) ring bytes per sweep against the per-sweep local bucket bytes
+    of the last published :class:`MeasuredProfile`. ``None`` when either
+    signal is missing — callers fall back to a conservative probe."""
+    if stats is None or not getattr(stats, "ring_bytes_per_sweep", 0):
+        return None
+    ring = float(stats.ring_bytes_per_sweep)
+    local = None
+    if profile is not None:
+        try:
+            import numpy as np
+
+            per_sweep = max(int(getattr(profile, "sweeps", 0)), 1)
+            local = float(np.asarray(profile.step_bytes).sum()) / per_sweep
+        except Exception:
+            local = None
+    if local and local > 0:
+        return ring / (ring + local)
+    return None
+
+
 def schedule_candidates(stats=None, profile=None, *,
                         pad_mode: str = "step",
                         max_local_sweeps: int = 2) -> Tuple[KernelConfig, ...]:
@@ -111,22 +145,7 @@ def schedule_candidates(stats=None, profile=None, *,
       (< 10%), otherwise global padding strictly inflates it.
     """
     sweeps = [0]
-    comm_frac = None
-    if stats is not None and getattr(stats, "ring_bytes_per_sweep", 0):
-        ring = float(stats.ring_bytes_per_sweep)
-        local = None
-        if profile is not None:
-            try:
-                import numpy as np
-
-                per_sweep = max(int(getattr(profile, "sweeps", 0)), 1)
-                local = float(np.asarray(profile.step_bytes).sum()) / per_sweep
-            except Exception:
-                local = None
-        if local and local > 0:
-            comm_frac = ring / (ring + local)
-        else:
-            comm_frac = None
+    comm_frac = _comm_fraction(stats, profile)
     if comm_frac is None:
         sweeps.append(1)                      # no measurement: probe one step
     else:
@@ -143,6 +162,51 @@ def schedule_candidates(stats=None, profile=None, *,
         for ls in sweeps:
             out.append(KernelConfig(local_sweeps=int(ls), pad_mode=pm))
     return tuple(dict.fromkeys(out))
+
+
+def _remixed_lanes(model) -> bool:
+    """True when ``model``'s predicate remixes the per-(vertex, sample)
+    uniform (``lt``'s extra fmix32 avalanche): the remix decorrelates which
+    lanes fire per edge, so lane-fill density is a live knob for it."""
+    try:
+        from repro.core.difuser import resolve_model
+        from repro.core.sampling import remix_interval_predicate
+
+        return resolve_model(model).predicate is remix_interval_predicate
+    except Exception:
+        return False
+
+
+def fused_candidates(stats=None, profile=None, *, model: str = "wc",
+                     num_regs: int = 0) -> Tuple[KernelConfig, ...]:
+    """``(fuse_sweeps, lane_fill)`` candidates for the ``fused_sweep``
+    family, seeded like :func:`schedule_candidates` from measured signals:
+
+    * the unfused sweep loop (``fuse_sweeps=False``) is always the
+      measurement baseline — callers prepend the family default;
+    * lane fills come from the register width: the full-width sweep's
+      per-chunk working set is ``edge_chunk x num_regs`` intermediates, so
+      high register counts are exactly where narrower slabs (256/512) stay
+      cache-resident and pay off;
+    * model-aware FASST lane fill: ``lt``'s remixed vertex hash changes
+      which lanes are live per edge, so for remixed-predicate models the
+      denser 128-lane fill is also worth timing;
+    * when the measured comm fraction says exchanges are nearly free
+      (< 5%), the ``local_sweeps`` prologue the fusion amortizes rarely
+      runs — only the conservative full-width fused candidate is probed.
+    """
+    fills = [0]
+    if num_regs > 512:
+        fills += [256, 512]
+    elif num_regs > 256:
+        fills.append(256)
+    if _remixed_lanes(model) and num_regs > 128:
+        fills.append(128)
+    comm_frac = _comm_fraction(stats, profile)
+    if comm_frac is not None and comm_frac < 0.05:
+        fills = fills[:1]
+    return tuple(KernelConfig(fuse_sweeps=True, lane_fill=int(f))
+                 for f in fills)
 
 
 def spec_overrides(family: str, cfg: KernelConfig, spec) -> dict:
@@ -168,6 +232,9 @@ def spec_overrides(family: str, cfg: KernelConfig, spec) -> dict:
     if family == "bucket_propagate":
         return {"local_sweeps": int(cfg.local_sweeps),
                 "pad_mode": cfg.pad_mode}
+    if family == "fused_sweep":
+        return {"fuse_sweeps": bool(cfg.fuse_sweeps),
+                "lane_fill": int(cfg.lane_fill)}
     return {}                          # fused_sample: no spec-level knob (ref)
 
 

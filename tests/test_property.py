@@ -236,8 +236,9 @@ def test_repair_plan_shards_equals_rebuild_all_backends(mi, si, adds, seed):
 
 
 # ---------------------------------------------------------------------------
-# Kernel-config bit-identity (ISSUE 8): the knobs the autotuner moves —
-# scan chunks, cascade chunks, ring local_sweeps, bucket pad_mode — are
+# Kernel-config bit-identity (ISSUE 8 + 10): the knobs the autotuner moves
+# — scan chunks, cascade chunks, ring local_sweeps, bucket pad_mode, and
+# the fused-sweep pair (fuse_sweeps, lane_fill) — are
 # performance-only. Seed sets, gains, and the canonical sketch matrix are
 # byte-identical across every sampled KernelConfig x diffusion model x
 # backend. The mesh twin executes under the AxisType guard (the
@@ -255,6 +256,13 @@ _TUNE_OVERRIDES = [
     {"edge_chunk": 1 << 20},                   # >= m: one unscanned sweep
     {"local_sweeps": 1},
     {"local_sweeps": 2, "pad_mode": "global"},
+    # fused_sweep family (ISSUE 10): the local_sweeps prologue through the
+    # fused multi-sweep kernel, at full width and at lane fills that slab
+    # the 32-register axis evenly (8) and raggedly (24, a non-divisor)
+    {"local_sweeps": 2, "fuse_sweeps": True},
+    {"local_sweeps": 2, "fuse_sweeps": True, "lane_fill": 8},
+    {"local_sweeps": 1, "fuse_sweeps": True, "lane_fill": 24,
+     "pad_mode": "global"},
 ]
 
 _tune_baselines: dict = {}

@@ -123,6 +123,11 @@ def test_spec_overrides_mapping():
     assert spec_overrides("cascade_step", cfg, spec) == {"cascade_chunk": 256}
     assert spec_overrides("bucket_propagate", cfg, spec) == {
         "local_sweeps": 1, "pad_mode": "global"}
+    fused = KernelConfig(fuse_sweeps=True, lane_fill=256)
+    assert spec_overrides("fused_sweep", fused, spec) == {
+        "fuse_sweeps": True, "lane_fill": 256}
+    assert spec_overrides("fused_sweep", KernelConfig(), spec) == {
+        "fuse_sweeps": False, "lane_fill": 0}
     assert spec_overrides("fused_sample", cfg, spec) == {}
     pal = spec.with_(impl="pallas")
     assert spec_overrides("sketch_propagate", cfg, pal) == {
@@ -139,8 +144,41 @@ def test_families_for():
     assert families_for(spec, "single") == ("sketch_propagate", "cascade_step")
     assert families_for(spec, "serial") == ()            # 1x1 grid: no ring
     sharded = spec.with_(mu_v=2, mu_s=2)
-    assert families_for(sharded, "serial") == ("bucket_propagate",)
-    assert families_for(sharded, "mesh") == ("bucket_propagate",)
+    assert families_for(sharded, "serial") == ("bucket_propagate",
+                                               "fused_sweep")
+    assert families_for(sharded, "mesh") == ("bucket_propagate",
+                                             "fused_sweep")
+
+
+def test_fused_candidates_seeded_from_measurement():
+    from repro.tune import fused_candidates
+
+    # no measurements: fills scale with the register count alone
+    def fills(cands):
+        return [c.lane_fill for c in cands]
+
+    small = fused_candidates(None, None, model="wc", num_regs=128)
+    assert fills(small) == [0] and all(c.fuse_sweeps for c in small)
+    assert fills(fused_candidates(None, None, model="wc",
+                                  num_regs=512)) == [0, 256]
+    assert fills(fused_candidates(None, None, model="wc",
+                                  num_regs=2048)) == [0, 256, 512]
+    # lt's remixed hash spreads lanes -> a denser 128 slab is worth probing
+    assert 128 in fills(fused_candidates(None, None, model="lt",
+                                         num_regs=2048))
+    assert 128 not in fills(fused_candidates(None, None, model="ic:0.2",
+                                             num_regs=2048))
+    # comm-dominated runs keep the slab probes; comm-free runs (<5% ring
+    # traffic) collapse to the single full-width fused candidate
+    prof = types.SimpleNamespace(sweeps=1, step_bytes=np.array([700.0]))
+    cold = types.SimpleNamespace(ring_bytes_per_sweep=15.0,
+                                 pad_waste_frac=0.5)
+    assert fills(fused_candidates(cold, prof, model="wc",
+                                  num_regs=2048)) == [0]
+    hot = types.SimpleNamespace(ring_bytes_per_sweep=300.0,
+                                pad_waste_frac=0.5)
+    assert fills(fused_candidates(hot, prof, model="wc",
+                                  num_regs=2048)) == [0, 256, 512]
 
 
 # ---------------------------------------------------------------------------
@@ -339,3 +377,55 @@ def test_ref_sweep_chunk_invariant(small_graph):
             for c in (7, 128, 2048, int(src.shape[0]))]
     for o in outs[1:]:
         np.testing.assert_array_equal(outs[0], o)
+
+
+def test_fused_sweep_matches_sweep_loop(small_graph):
+    """The fused multi-sweep kernel is bit-identical to S separate
+    propagate_sweep launches, for every lane_fill (including a non-divisor
+    slab width) on the ref impl and every lane tile on the Pallas impl."""
+    from repro.core.sampling import make_x_vector, weight_to_threshold
+    from repro.kernels import ops
+
+    g = small_graph.sorted_by_dst()
+    src, dst = jnp.asarray(g.src), jnp.asarray(g.dst)
+    thr = jnp.asarray(weight_to_threshold(g.weight))
+    x = jnp.asarray(make_x_vector(64, seed=1))
+    m0 = ops.sketch_fill(jnp.zeros((g.n_pad, 64), jnp.int8), impl="ref")
+    oracle = m0
+    for _ in range(3):
+        oracle = ops.propagate_sweep(oracle, src, dst, thr, x, impl="ref")
+    oracle = np.asarray(oracle)
+    for lf in (0, 16, 24):                      # 24 does not divide 64
+        out = ops.fused_sweep(m0, src, dst, thr, x, num_sweeps=3,
+                              impl="ref", lane_fill=lf)
+        np.testing.assert_array_equal(oracle, np.asarray(out))
+    for tile in (16, 64):
+        out = ops.fused_sweep(m0, src, dst, thr, x, num_sweeps=3,
+                              impl="pallas", lane_fill=tile)
+        np.testing.assert_array_equal(oracle, np.asarray(out))
+
+
+@pytest.mark.parametrize("m_prime", [251, 509])
+def test_fused_sweep_prime_edge_count(m_prime):
+    """Fused Pallas sweeps on a prime edge count: the pad+mask path (padded
+    tail is predicate-dead) must hold across every fused iteration, not just
+    the first — a sticky bit leaking from the pad would compound per sweep."""
+    from repro.core.sampling import make_x_vector, weight_to_threshold
+    from repro.kernels import ops
+
+    g = rmat_graph(7, edge_factor=8, seed=2, setting="u01").sorted_by_dst()
+    assert g.m >= m_prime
+    src = jnp.asarray(g.src[:m_prime])
+    dst = jnp.asarray(g.dst[:m_prime])
+    thr = jnp.asarray(weight_to_threshold(g.weight[:m_prime]))
+    x = jnp.asarray(make_x_vector(128, seed=3))
+    m0 = ops.sketch_fill(jnp.zeros((g.n_pad, 128), jnp.int8), impl="ref")
+    oracle = m0
+    for _ in range(2):
+        oracle = ops.propagate_sweep(oracle, src, dst, thr, x, impl="ref")
+    pal = ops.fused_sweep(m0, src, dst, thr, x, num_sweeps=2, impl="pallas",
+                          lane_fill=64)
+    np.testing.assert_array_equal(np.asarray(oracle), np.asarray(pal))
+    ref = ops.fused_sweep(m0, src, dst, thr, x, num_sweeps=2, impl="ref",
+                          lane_fill=48)
+    np.testing.assert_array_equal(np.asarray(oracle), np.asarray(ref))
